@@ -1,0 +1,109 @@
+"""Tables 4/5 + Lemma 4.1 + Fig. 13/14/15: ablations & sensitivity.
+
+* PilotDB-O (Table 4): oracle that skips stage 1 — the final query runs with
+  a pre-known plan (we reuse the plan TAQA found, re-executed alone).  The
+  gap PilotDB vs PilotDB-O is the pilot/planning overhead; 2nd-stage-only
+  latency isolates plan quality.
+* PilotDB-R (Table 5): covered in bench_quickr (row-level final), summarized
+  here from the same machinery.
+* Lemma 4.1: statistical-efficiency ratio on shuffled vs clustered layouts.
+* Fig. 13: latency decomposition.  Fig. 14/15: θ_p and (δ1, δ2) sensitivity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import (catalog, csv_row, geomean, make_db,
+                               query_suite, save_results)
+from repro.core import ErrorSpec, bsap
+from repro.engine import logical as L
+from repro.engine.executor import Executor
+
+
+def run() -> dict:
+    db = make_db()
+    spec = ErrorSpec(error=0.05, confidence=0.95)
+    t_all = time.perf_counter()
+
+    # ---- Table 4: PilotDB vs PilotDB-O --------------------------------------
+    overall_slow, stage2_slow, decomp = [], [], []
+    for bq in query_suite():
+        ans = db.query(bq.query, spec, seed=13)
+        if ans.report.fallback is not None or ans.report.plan is None:
+            continue
+        r = ans.report
+        total = r.pilot_time_s + r.plan_time_s + r.final_time_s
+        # oracle: re-execute only the final (planned) query
+        samples = {t: L.SampleClause("block", rate, 991)
+                   for t, rate in r.plan.rates.items() if rate < 1.0}
+        plan_engine, _ = db._engine_plan(bq.query)
+        t0 = time.perf_counter()
+        db.ex.execute(L.rewrite_scans(plan_engine, samples))
+        t_oracle = time.perf_counter() - t0
+        overall_slow.append(total / max(t_oracle, 1e-9))
+        stage2_slow.append(r.final_time_s / max(t_oracle, 1e-9))
+        decomp.append({"query": bq.name,
+                       "pilot_frac": r.pilot_time_s / total,
+                       "plan_frac": r.plan_time_s / total,
+                       "final_frac": r.final_time_s / total})
+
+    # ---- Lemma 4.1 -----------------------------------------------------------
+    li = catalog(clustered=False)["lineitem"]
+    li_c = catalog(clustered=True)["lineitem"]
+    col = np.asarray(li.columns["l_shipdate"])[: li.num_rows].astype(float)
+    col_c = np.asarray(li_c.columns["l_shipdate"])[: li_c.num_rows].astype(float)
+    eff_shuffled = bsap.efficiency_ratio(col, li.block_rows)
+    eff_clustered = bsap.efficiency_ratio(col_c, li_c.block_rows)
+
+    # ---- Fig. 14: theta_p sensitivity (Q6 family) ----------------------------
+    q6 = query_suite()[0]
+    theta_sweep = {}
+    for tp in (0.001, 0.005, 0.02, 0.05):
+        s2 = dataclasses.replace(spec, theta_pilot=tp)
+        a = db.query(q6.query, s2, seed=17)
+        frac = (a.report.pilot_scanned_bytes + a.report.final_scanned_bytes) \
+            / max(a.report.exact_scanned_bytes, 1)
+        theta_sweep[str(tp)] = {"bytes_speedup": 1.0 / max(frac, 1e-9),
+                                "fallback": a.report.fallback}
+
+    # ---- Fig. 15: (delta1, delta2) allocation --------------------------------
+    delta_sweep = {}
+    p_c = spec.confidence
+    budget_total = (1 - p_c) * 2 / 3  # keep p' = p + d1 + d2 < 1 as default
+    for frac1 in (0.1, 0.5, 0.9):
+        d1 = budget_total * frac1
+        d2 = budget_total - d1
+        from repro.core.allocation import allocate
+
+        try:
+            b = allocate(p_c, 1, spec.error, delta_split=(d1, d2))
+            uv_scale = bsap.z_for(b.p_prime)
+            delta_sweep[f"{frac1:.1f}"] = {"z": uv_scale, "d1": d1, "d2": d2}
+        except ValueError as e:
+            delta_sweep[f"{frac1:.1f}"] = {"error": str(e)}
+    wall = time.perf_counter() - t_all
+
+    payload = {
+        "table4_overall_slowdown_gm": geomean(overall_slow),
+        "table4_stage2_slowdown_gm": geomean(stage2_slow),
+        "fig13_latency_decomposition": decomp,
+        "lemma41_efficiency_shuffled": eff_shuffled,
+        "lemma41_efficiency_clustered": eff_clustered,
+        "fig14_theta_sweep": theta_sweep,
+        "fig15_delta_sweep": delta_sweep,
+    }
+    save_results("bench_ablation", payload)
+    print(csv_row("ablation_tab4_5_fig13_15", wall * 1e6,
+                  f"overall_vs_oracle={payload['table4_overall_slowdown_gm']:.2f}x;"
+                  f"stage2_vs_oracle={payload['table4_stage2_slowdown_gm']:.2f}x;"
+                  f"eff_ratio_shuffled={eff_shuffled:.2f};"
+                  f"clustered={eff_clustered:.1f}"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

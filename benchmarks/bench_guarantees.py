@@ -1,0 +1,62 @@
+"""Fig. 6/7: a-priori error guarantees across the query suite.
+
+For each query × target error, run PilotDB several times and record the
+achieved relative errors.  The paper's claim: achieved <= target in every
+run, conservatively (~half the target on average).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (csv_row, geomean, make_db, query_suite,
+                               rel_errors, save_results)
+from repro.core import ErrorSpec
+
+
+def run(trials: int = 5, targets=(0.02, 0.05, 0.10)) -> dict:
+    db = make_db()
+    out = {}
+    t0 = time.perf_counter()
+    for bq in query_suite():
+        exact = db.exact(bq.query)
+        per_target = {}
+        for e in targets:
+            spec = ErrorSpec(error=e, confidence=0.95)
+            achieved, fallbacks = [], 0
+            for s in range(trials):
+                ans = db.query(bq.query, spec, seed=1000 * s + hash(bq.name) % 997)
+                if ans.report.fallback is not None:
+                    fallbacks += 1
+                    continue
+                errs = rel_errors(ans, exact)
+                if len(errs):
+                    achieved.append(float(errs.max()))
+            per_target[str(e)] = {
+                "max": max(achieved) if achieved else None,
+                "mean": float(np.mean(achieved)) if achieved else None,
+                "violations": sum(a > e for a in achieved),
+                "sampled_runs": len(achieved),
+                "fallbacks": fallbacks,
+            }
+        out[bq.name] = per_target
+    wall = time.perf_counter() - t0
+
+    total_v = sum(t["violations"] for q in out.values() for t in q.values())
+    total_runs = sum(t["sampled_runs"] for q in out.values() for t in q.values())
+    ratios = [t["max"] / float(e) for q in out.values()
+              for e, t in q.items() if t["max"] is not None]
+    payload = {"per_query": out, "total_violations": total_v,
+               "total_sampled_runs": total_runs,
+               "mean_max_to_target": float(np.mean(ratios)) if ratios else None}
+    save_results("bench_guarantees", payload)
+    print(csv_row("guarantees_fig6_7", wall * 1e6 / max(total_runs, 1),
+                  f"violations={total_v}/{total_runs};"
+                  f"max_over_target_mean={payload['mean_max_to_target']:.2f}"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Fig. 11/12 + Table 5: BSAP vs row-level sampling (Quickr-style, PilotDB-R).
+
+Quickr-style row-uniform plans need one full pass (row Bernoulli cannot skip
+blocks); replacing its sampler with BSAP's block sampling (same two-stage
+planner) yields the Fig. 12 acceleration.  Identical queries, identical
+error targets (10%, the Quickr paper's setting).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (csv_row, geomean, make_db, make_row_db,
+                               query_suite, rel_errors, save_results)
+from repro.core import ErrorSpec
+
+
+def run(trials: int = 2) -> dict:
+    db = make_db()
+    rdb = make_row_db()
+    spec = ErrorSpec(error=0.10, confidence=0.95)
+    t_all = time.perf_counter()
+    per_query = {}
+    for bq in query_suite():
+        if bq.name.startswith("join_grouped"):
+            continue  # row path identical shape; keep the bench tight
+        exact = db.exact(bq.query)
+        b_wall, r_wall, b_bytes, r_bytes = [], [], [], []
+        errs_ok = True
+        for s in range(trials):
+            t0 = time.perf_counter()
+            a_blk = db.query(bq.query, spec, seed=77 * s + 1)
+            b_wall.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            a_row = rdb.query(bq.query, spec, seed=77 * s + 1)
+            r_wall.append(time.perf_counter() - t0)
+            if a_blk.report.fallback is None:
+                b_bytes.append(a_blk.report.pilot_scanned_bytes
+                               + a_blk.report.final_scanned_bytes)
+            if a_row.report.fallback is None:
+                r_bytes.append(a_row.report.pilot_scanned_bytes
+                               + a_row.report.final_scanned_bytes)
+            for a in (a_blk, a_row):
+                e = rel_errors(a, exact)
+                if len(e) and e.max() > spec.error and a.report.fallback is None:
+                    errs_ok = False
+        per_query[bq.name] = {
+            "bsap_vs_row_wall": float(np.mean(r_wall) / np.mean(b_wall)),
+            "bsap_vs_row_bytes": (float(np.mean(r_bytes) / np.mean(b_bytes))
+                                  if b_bytes and r_bytes else None),
+            "both_within_target": errs_ok,
+        }
+    wall = time.perf_counter() - t_all
+    speedups = [q["bsap_vs_row_bytes"] for q in per_query.values()
+                if q["bsap_vs_row_bytes"]]
+    payload = {"per_query": per_query,
+               "gm_bytes_speedup": geomean(speedups),
+               "max_bytes_speedup": max(speedups) if speedups else None}
+    save_results("bench_quickr", payload)
+    print(csv_row("quickr_bsap_fig11_12", wall * 1e6,
+                  f"gm={payload['gm_bytes_speedup']:.1f}x;"
+                  f"max={payload['max_bytes_speedup']:.0f}x"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Fig. 8/9/10: PilotDB speedups over exact execution.
+
+Per query: wall-clock speedup (exact / PilotDB-total incl. pilot+planning)
+and the scale-free scan-bytes fraction.  Also sweeps target errors (Fig. 9)
+on the Q6 family and reports the skewed-data queries separately (Fig. 10).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (csv_row, geomean, make_db, query_suite,
+                               rel_errors, save_results)
+from repro.core import ErrorSpec
+
+
+def _run_once(db, bq, spec, seed):
+    t0 = time.perf_counter()
+    exact = db.exact(bq.query)
+    t_exact = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ans = db.query(bq.query, spec, seed=seed)
+    t_aqp = time.perf_counter() - t0
+    scan_frac = (ans.report.pilot_scanned_bytes + ans.report.final_scanned_bytes) \
+        / max(ans.report.exact_scanned_bytes, 1)
+    err = rel_errors(ans, exact)
+    return {
+        "speedup": t_exact / max(t_aqp, 1e-9),
+        "scan_frac": scan_frac,
+        "bytes_speedup": 1.0 / max(scan_frac, 1e-9),
+        "fallback": ans.report.fallback,
+        "max_err": float(err.max()) if len(err) else None,
+    }
+
+
+def run(trials: int = 3) -> dict:
+    db = make_db()
+    spec = ErrorSpec(error=0.05, confidence=0.95)
+    t_all = time.perf_counter()
+
+    per_query = {}
+    for bq in query_suite():
+        for ws in (3, 4):  # warm the shape-bucket caches (adjacent buckets)
+            _run_once(db, bq, spec, seed=ws)
+        runs = [_run_once(db, bq, spec, seed=100 * s + 7) for s in range(trials)]
+        ok = [r for r in runs if r["fallback"] is None]
+        per_query[bq.name] = {
+            "wall_speedup_gm": geomean([r["speedup"] for r in ok]) if ok else None,
+            "bytes_speedup_gm": geomean([r["bytes_speedup"] for r in ok]) if ok else None,
+            "scan_frac": float(np.mean([r["scan_frac"] for r in ok])) if ok else None,
+            "fallbacks": len(runs) - len(ok),
+            "max_err": max((r["max_err"] or 0) for r in runs),
+        }
+
+    # Fig. 9: error-target sweep on the Q6 family
+    q6 = query_suite()[0]
+    err_sweep = {}
+    for e in (0.01, 0.02, 0.05, 0.10):
+        r = _run_once(db, q6, ErrorSpec(error=e, confidence=0.95), seed=5)
+        err_sweep[str(e)] = {"bytes_speedup": r["bytes_speedup"],
+                             "wall_speedup": r["speedup"],
+                             "fallback": r["fallback"]}
+    wall = time.perf_counter() - t_all
+
+    accel = [q for q in per_query.values() if q["wall_speedup_gm"]]
+    payload = {
+        "per_query": per_query,
+        "error_sweep_q6": err_sweep,
+        "gm_wall_speedup": geomean([q["wall_speedup_gm"] for q in accel]),
+        "gm_bytes_speedup": geomean([q["bytes_speedup_gm"] for q in accel]),
+        "max_bytes_speedup": max(q["bytes_speedup_gm"] for q in accel),
+    }
+    save_results("bench_speedup", payload)
+    print(csv_row("speedup_fig8_9_10", wall * 1e6,
+                  f"gm_wall={payload['gm_wall_speedup']:.1f}x;"
+                  f"gm_bytes={payload['gm_bytes_speedup']:.1f}x;"
+                  f"max_bytes={payload['max_bytes_speedup']:.0f}x"))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

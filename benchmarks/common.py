@@ -1,0 +1,127 @@
+"""Shared benchmark fixtures: catalogs, the query suite, timing helpers.
+
+The query suite mirrors the paper's workload mix (Table 3): filtered simple
+aggregates (TPC-H Q6 family), grouped multi-aggregates (Q1 family), ratio
+composites (Q14 family), PK-FK joins, and DSB-like skewed data — at
+CPU-container scale (§DESIGN.md "benchmark scale": speedups are additionally
+reported as scan fractions, which are scale-free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import CompositeAgg, ErrorSpec, PilotDB, Query, RowSamplingAQP
+from repro.engine import logical as L
+from repro.engine.datagen import make_lineitem, make_orders, make_skewed
+from repro.engine.executor import Executor
+from repro.engine.expr import And, Col
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+SCALE_ROWS = int(os.environ.get("BENCH_ROWS", 2_000_000))
+BLOCK_ROWS = 32
+
+
+@functools.lru_cache(maxsize=4)
+def catalog(clustered: bool = False):
+    n_orders = SCALE_ROWS // 4
+    return {
+        "lineitem": make_lineitem(SCALE_ROWS, BLOCK_ROWS, num_orders=n_orders,
+                                  clustered=clustered, seed=0),
+        "orders": make_orders(n_orders, BLOCK_ROWS, seed=1),
+        "skewed": make_skewed(SCALE_ROWS // 2, BLOCK_ROWS, num_groups=4, seed=7),
+    }
+
+
+@dataclasses.dataclass
+class BenchQuery:
+    name: str
+    query: Query
+    has_join: bool = False
+    groups: int = 1
+
+
+def query_suite() -> List[BenchQuery]:
+    q6_pred = And(Col("l_shipdate").between(100, 1500),
+                  And(Col("l_discount").between(0.02, 0.08),
+                      Col("l_quantity") < 24))
+    rev = Col("l_extendedprice") * Col("l_discount")
+    return [
+        BenchQuery("q6_filtered_sum", Query(
+            child=L.Filter(L.Scan("lineitem"), q6_pred),
+            aggs=(CompositeAgg("revenue", "sum", rev),))),
+        BenchQuery("q1_grouped_multi", Query(
+            child=L.Filter(L.Scan("lineitem"), Col("l_shipdate") < 2400),
+            aggs=(CompositeAgg("sum_qty", "sum", Col("l_quantity")),
+                  CompositeAgg("sum_price", "sum", Col("l_extendedprice")),
+                  CompositeAgg("avg_price", "avg", Col("l_extendedprice")),
+                  CompositeAgg("cnt", "count")),
+            group_by="l_returnflag", max_groups=3), groups=3),
+        BenchQuery("q14_ratio", Query(
+            child=L.Filter(L.Scan("lineitem"), Col("l_shipdate").between(400, 2200)),
+            aggs=(CompositeAgg("promo_share", "ratio",
+                               rev * Col("l_linestatus"), expr2=rev),))),
+        BenchQuery("join_sum", Query(
+            child=L.Filter(L.Join(L.Scan("lineitem"), L.Scan("orders"),
+                                  "l_orderkey", "o_orderkey"),
+                           Col("o_orderdate") < 1200),
+            aggs=(CompositeAgg("rev", "sum", Col("l_extendedprice")),)),
+            has_join=True),
+        BenchQuery("join_grouped", Query(
+            child=L.Join(L.Scan("lineitem"), L.Scan("orders"),
+                         "l_orderkey", "o_orderkey"),
+            aggs=(CompositeAgg("qty", "sum", Col("l_quantity")),),
+            group_by="o_orderpriority", max_groups=5),
+            has_join=True, groups=5),
+        BenchQuery("skew_agg", Query(
+            child=L.Filter(L.Scan("skewed"), Col("s_filter") < 0.6),
+            aggs=(CompositeAgg("m", "sum", Col("s_measure")),))),
+        BenchQuery("skew_grouped", Query(
+            child=L.Scan("skewed"),
+            aggs=(CompositeAgg("m", "sum", Col("s_measure")),
+                  CompositeAgg("avg_m", "avg", Col("s_measure"))),
+            group_by="s_group", max_groups=4), groups=4),
+    ]
+
+
+def make_db(clustered: bool = False) -> PilotDB:
+    return PilotDB(Executor(catalog(clustered)), large_table_rows=100_000)
+
+
+def make_row_db(clustered: bool = False) -> RowSamplingAQP:
+    return RowSamplingAQP(Executor(catalog(clustered)), large_table_rows=100_000)
+
+
+def rel_errors(ans, exact) -> np.ndarray:
+    errs = []
+    for i in range(len(ans.names)):
+        for g in range(ans.values.shape[1]):
+            t = exact.values[i, g]
+            if exact.group_present[g] and np.isfinite(t) and abs(t) > 1e-9:
+                errs.append(abs(ans.values[i, g] - t) / abs(t))
+    return np.asarray(errs)
+
+
+def save_results(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], dtype=float)
+    return float(np.exp(np.log(xs).mean())) if len(xs) else float("nan")
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,46 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed JSON lands in
+benchmarks/results/.  BENCH_ROWS env var scales the data (default 2M rows).
+
+  PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single bench: guarantees|naive_clt|scan|"
+                         "speedup|quickr|ablation|kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation, bench_guarantees, bench_kernels,
+                            bench_naive_clt, bench_quickr, bench_scan,
+                            bench_speedup)
+
+    benches = {
+        "scan": bench_scan.run,              # Fig. 4
+        "guarantees": bench_guarantees.run,  # Fig. 6/7
+        "speedup": bench_speedup.run,        # Fig. 8/9/10
+        "quickr": bench_quickr.run,          # Fig. 11/12 + Table 5
+        "ablation": bench_ablation.run,      # Tables 4/5, Lemma 4.1, Fig. 13-15
+        "naive_clt": bench_naive_clt.run,    # Fig. 16/17 (Appendix A.1)
+        "kernels": bench_kernels.run,        # kernel-layer system model
+    }
+    todo = [args.only] if args.only else list(benches)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in todo:
+        try:
+            benches[name]()
+        except Exception as e:  # keep the harness going; failures are visible
+            print(f"{name},nan,FAILED:{type(e).__name__}:{e}")
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

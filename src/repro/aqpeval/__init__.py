@@ -1,0 +1,2 @@
+from repro.aqpeval.evaluator import GuaranteedEvaluator
+__all__ = ["GuaranteedEvaluator"]

@@ -1,0 +1,17 @@
+# PilotDB's primary contribution: TAQA (two-stage online AQP, §3) + BSAP
+# (block-sampling statistics with a priori guarantees, §4), implemented over
+# the repro.engine columnar JAX substrate.
+from repro.core.spec import CompositeAgg, ErrorSpec, SamplingPlan
+from repro.core.taqa import ApproxAnswer, PilotDB, Query, TaqaReport
+from repro.core.quickr import RowSamplingAQP
+
+__all__ = [
+    "CompositeAgg",
+    "ErrorSpec",
+    "SamplingPlan",
+    "ApproxAnswer",
+    "PilotDB",
+    "Query",
+    "TaqaReport",
+    "RowSamplingAQP",
+]

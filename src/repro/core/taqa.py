@@ -1,0 +1,307 @@
+"""TAQA — Two-stage Approximate Query Algorithm (§3) — the PilotDB driver.
+
+Stage 1 (sample planning): rewrite Q_in into Q_pilot (block sampling at θ_p on
+the most expensive-to-scan table, aggregates grouped by physical block), run
+it, and turn the pilot block statistics into per-channel probabilistic bounds
+(L_μ, U_V[Θ]) via BSAP.  Stage 2: solve the sampling-plan optimization, rewrite
+Q_in into Q_final with the winning plan, execute, and Horvitz–Thompson-combine
+the channels into user-facing estimates.  Any failure (too-few pilot blocks,
+non-positive L_μ, no feasible plan, plan costlier than exact) falls back to
+exact execution — PilotDB never returns an unguaranteed estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import bsap, propagation
+from repro.core.allocation import ChannelBudget, allocate
+from repro.core.planner import Constraint, pick_plan, solve_candidates
+from repro.core.spec import CompositeAgg, ErrorSpec, SamplingPlan
+from repro.engine import cost as cost_mod
+from repro.engine import logical as L
+from repro.engine.executor import Executor, PilotStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """User query: relational child plan + composite aggregates (§2.3)."""
+
+    child: L.Plan
+    aggs: Tuple[CompositeAgg, ...]
+    group_by: Optional[str] = None
+    max_groups: int = 1
+
+
+@dataclasses.dataclass
+class TaqaReport:
+    pilot_table: Optional[str] = None
+    theta_pilot: float = 0.0
+    n_pilot_blocks: int = 0
+    plan: Optional[SamplingPlan] = None
+    fallback: Optional[str] = None        # reason, if exact execution was used
+    num_channels: int = 0
+    exact_cost: float = 0.0
+    pilot_time_s: float = 0.0
+    plan_time_s: float = 0.0
+    final_time_s: float = 0.0
+    pilot_scanned_bytes: int = 0
+    final_scanned_bytes: int = 0
+    exact_scanned_bytes: int = 0
+    candidates: int = 0
+    group_coverage_guaranteed: bool = True
+
+
+@dataclasses.dataclass
+class ApproxAnswer:
+    names: List[str]
+    values: np.ndarray          # (num_composites, max_groups)
+    group_present: np.ndarray   # (max_groups,)
+    report: TaqaReport
+
+    def scalar(self, name: str, group: int = 0) -> float:
+        return float(self.values[self.names.index(name), group])
+
+
+def _decompose(aggs: Tuple[CompositeAgg, ...]) -> Tuple[List[L.AggSpec], List[Tuple[int, ...]]]:
+    """Composite aggregates -> simple engine channels (§3.3 pilot step 3)."""
+    specs: List[L.AggSpec] = []
+    comp_channels: List[Tuple[int, ...]] = []
+    for comp in aggs:
+        idxs = []
+        if comp.kind == "sum":
+            specs.append(L.AggSpec("sum", comp.expr, f"ch{len(specs)}"))
+            idxs.append(len(specs) - 1)
+        elif comp.kind == "count":
+            specs.append(L.AggSpec("count", None, f"ch{len(specs)}"))
+            idxs.append(len(specs) - 1)
+        elif comp.kind == "avg":
+            specs.append(L.AggSpec("sum", comp.expr, f"ch{len(specs)}"))
+            idxs.append(len(specs) - 1)
+            specs.append(L.AggSpec("count", None, f"ch{len(specs)}"))
+            idxs.append(len(specs) - 1)
+        elif comp.kind in ("ratio", "product", "add"):
+            specs.append(L.AggSpec("sum", comp.expr, f"ch{len(specs)}"))
+            idxs.append(len(specs) - 1)
+            specs.append(L.AggSpec("sum", comp.expr2, f"ch{len(specs)}"))
+            idxs.append(len(specs) - 1)
+        else:
+            raise ValueError(comp.kind)
+        comp_channels.append(tuple(idxs))
+    return specs, comp_channels
+
+
+class PilotDB:
+    """The middleware.  `query()` is the user entry point (Fig. 2 workflow)."""
+
+    def __init__(self, executor: Executor, large_table_rows: int = 50_000):
+        self.ex = executor
+        self.large_table_rows = large_table_rows
+
+    # -- helpers -------------------------------------------------------------
+    def _engine_plan(self, q: Query) -> Tuple[L.Aggregate, List[Tuple[int, ...]]]:
+        specs, comp_channels = _decompose(q.aggs)
+        plan = L.Aggregate(child=q.child, aggs=tuple(specs),
+                           group_by=q.group_by, max_groups=q.max_groups)
+        return plan, comp_channels
+
+    def _large_tables(self, plan: L.Aggregate) -> List[str]:
+        seen: Dict[str, None] = {}
+        for s in plan.scans():
+            if self.ex.table_rows(s.table) >= self.large_table_rows:
+                seen.setdefault(s.table, None)
+        return sorted(seen, key=lambda t: -self.ex.table_bytes(t))
+
+    def _exact(self, q: Query, plan: L.Aggregate, comp_channels, report: TaqaReport,
+               reason: str) -> ApproxAnswer:
+        report.fallback = reason
+        t0 = time.perf_counter()
+        res = self.ex.execute(L.strip_samples(plan))
+        report.final_time_s = time.perf_counter() - t0
+        report.final_scanned_bytes = res.scanned_bytes
+        values = _combine(q, comp_channels, res.values)
+        return ApproxAnswer([c.name for c in q.aggs], values, res.group_present, report)
+
+    # -- the two-stage algorithm ----------------------------------------------
+    def query(self, q: Query, spec: ErrorSpec, seed: int = 0) -> ApproxAnswer:
+        plan, comp_channels = self._engine_plan(q)
+        report = TaqaReport()
+        report.exact_cost = cost_mod.exact_cost(plan, self.ex.catalog)
+        # bytes accounting: full row bytes of every scanned table, matching
+        # the samplers' scanned_bytes semantics (row-store physical reads)
+        report.exact_scanned_bytes = sum(
+            self.ex.table_bytes(s.table) for s in plan.scans())
+
+        large = self._large_tables(plan)
+        if not large:
+            return self._exact(q, plan, comp_channels, report, "no large table to sample")
+        pilot_table = large[0]
+        report.pilot_table = pilot_table
+
+        # --- Stage 1: pilot ---------------------------------------------------
+        n_blocks = self.ex.table_blocks(pilot_table)
+        block_rows = self.ex.block_rows(pilot_table)
+        # 1.5x margin over the minimum pilot size: Bernoulli undershoot
+        # would otherwise force a re-pilot at 4x the rate (latency spike)
+        theta_p = max(spec.theta_pilot,
+                      min(1.0, 1.5 * spec.min_pilot_blocks / n_blocks))
+        if q.group_by is not None:
+            theta_cov = bsap.group_coverage_rate(
+                n_blocks, block_rows, spec.group_min_size, spec.group_miss_prob)
+            if theta_cov > spec.max_pilot_rate:
+                if spec.strict_group_coverage:
+                    return self._exact(
+                        q, plan, comp_channels, report,
+                        f"group coverage for g={spec.group_min_size} needs "
+                        f"theta_p={theta_cov:.3f} > pilot cap (strict mode)")
+                report.group_coverage_guaranteed = False
+                theta_p = max(theta_p, spec.max_pilot_rate)
+            else:
+                theta_p = max(theta_p, theta_cov)
+        theta_p = min(theta_p, 1.0)
+
+        pair_tables: Tuple[str, ...] = ()
+        if q.group_by is None and len(large) > 1:
+            pair_tables = (large[1],)
+
+        pilot: Optional[PilotStats] = None
+        t0 = time.perf_counter()
+        for attempt in range(3):
+            pilot = self.ex.execute_pilot(plan, pilot_table, theta_p, seed + 101 * attempt,
+                                          pair_tables=pair_tables)
+            if pilot.n_sampled_blocks >= min(spec.min_pilot_blocks, n_blocks):
+                break
+            theta_p = min(theta_p * 4.0, 1.0)
+        report.pilot_time_s = time.perf_counter() - t0
+        report.theta_pilot = theta_p
+        report.n_pilot_blocks = pilot.n_sampled_blocks
+        report.pilot_scanned_bytes = pilot.scanned_bytes
+        if pilot.n_sampled_blocks < 2:
+            return self._exact(q, plan, comp_channels, report, "pilot sample too small")
+
+        # --- budgets & constraints -------------------------------------------
+        t0 = time.perf_counter()
+        present = np.nonzero(pilot.group_present)[0]
+        if len(present) == 0:
+            return self._exact(q, plan, comp_channels, report, "no groups in pilot")
+
+        channel_budgets: List[Tuple[int, ChannelBudget]] = []
+        n_constraints = 0
+        for comp, idxs in zip(q.aggs, comp_channels):
+            n_constraints += len(idxs) * len(present)
+        report.num_channels = n_constraints
+
+        constraints: List[Constraint] = []
+        infeasible_reason = None
+        for comp, idxs in zip(q.aggs, comp_channels):
+            e_part = propagation.split_budget(comp.kind, spec.error)
+            for ch in idxs:
+                budget = allocate(spec.confidence, n_constraints, e_part)
+                for g in present:
+                    y = pilot.block_sums[:, g, ch]
+                    # L_μ of the population total: N · (block-mean lower bound)
+                    L_mu = pilot.n_total_blocks * bsap.block_mean_lower(y, budget.delta1)
+                    if not np.isfinite(L_mu) or L_mu <= 0.0:
+                        infeasible_reason = (
+                            f"non-positive aggregate lower bound (agg={comp.name}, group={g})")
+                        break
+                    z = bsap.z_for(budget.p_prime)
+                    var_fn = self._make_var_fn(pilot, pilot_table, pair_tables,
+                                               ch, g, theta_p, budget.delta2)
+                    constraints.append(Constraint(
+                        label=f"{comp.name}[g{g}]ch{ch}", z=z, L_mu=L_mu,
+                        error=budget.error, var_fn=var_fn))
+                if infeasible_reason:
+                    break
+            if infeasible_reason:
+                break
+        if infeasible_reason:
+            report.plan_time_s = time.perf_counter() - t0
+            return self._exact(q, plan, comp_channels, report, infeasible_reason)
+
+        # --- Stage 2: plan optimization ----------------------------------------
+        sampleable = [pilot_table] + [t for t in pair_tables]
+        candidates = solve_candidates(constraints, sampleable,
+                                      max_rate=spec.max_final_rate)
+        report.candidates = len(candidates)
+        chosen = pick_plan(
+            candidates,
+            cost_fn=lambda rates: cost_mod.plan_cost(plan, self.ex.catalog, rates),
+            exact_cost=report.exact_cost,
+        )
+        report.plan_time_s = time.perf_counter() - t0
+        if chosen is None:
+            return self._exact(q, plan, comp_channels, report,
+                               "no feasible plan cheaper than exact")
+        report.plan = chosen
+
+        # --- final query --------------------------------------------------------
+        t0 = time.perf_counter()
+        samples = {t: L.SampleClause("block", r, seed + 977)
+                   for t, r in chosen.rates.items() if r < 1.0}
+        final_plan = L.rewrite_scans(plan, samples)
+        res = self.ex.execute(final_plan)
+        report.final_time_s = time.perf_counter() - t0
+        report.final_scanned_bytes = res.scanned_bytes
+
+        values = _combine(q, comp_channels, res.values)
+        return ApproxAnswer([c.name for c in q.aggs], values, res.group_present, report)
+
+    # -- variance-bound factory ------------------------------------------------
+    def _make_var_fn(self, pilot: PilotStats, pilot_table: str,
+                     pair_tables: Tuple[str, ...], ch: int, g: int,
+                     theta_p: float, delta2: float):
+        y = pilot.block_sums[:, g, ch]
+        if pair_tables and pair_tables[0] in pilot.pair_sums:
+            other = pair_tables[0]
+            uv2 = bsap.join_var_ub(pilot.pair_sums[other][:, :, ch],
+                                   pilot.n_total_blocks, delta2)
+            uv1 = bsap.single_table_var_ub(y, theta_p, delta2,
+                                           n_blocks=pilot.n_total_blocks)
+
+            def var_fn(rates: Dict[str, float]) -> float:
+                t1 = rates.get(pilot_table, 1.0)
+                t2 = rates.get(other, 1.0)
+                if t2 >= 1.0:
+                    return uv1(t1) if t1 < 1.0 else 0.0
+                return uv2(t1, t2)
+
+            return var_fn
+
+        uv1 = bsap.single_table_var_ub(y, theta_p, delta2,
+                                       n_blocks=pilot.n_total_blocks)
+
+        def var_fn(rates: Dict[str, float]) -> float:
+            t1 = rates.get(pilot_table, 1.0)
+            return uv1(t1) if t1 < 1.0 else 0.0
+
+        return var_fn
+
+    # -- ground truth -----------------------------------------------------------
+    def exact(self, q: Query) -> ApproxAnswer:
+        plan, comp_channels = self._engine_plan(q)
+        report = TaqaReport()
+        return self._exact(q, plan, comp_channels, report, "requested exact")
+
+
+def _combine(q: Query, comp_channels, channel_values: np.ndarray) -> np.ndarray:
+    """Combine simple-channel estimates into composite values per group."""
+    n_groups = channel_values.shape[1]
+    out = np.zeros((len(q.aggs), n_groups))
+    for k, (comp, idxs) in enumerate(zip(q.aggs, comp_channels)):
+        if comp.num_channels == 1:
+            out[k] = channel_values[idxs[0]]
+        else:
+            v1, v2 = channel_values[idxs[0]], channel_values[idxs[1]]
+            with np.errstate(invalid="ignore", divide="ignore"):
+                if comp.kind in ("avg", "ratio"):
+                    out[k] = np.where(v2 != 0, v1 / np.where(v2 == 0, 1, v2), np.nan)
+                elif comp.kind == "product":
+                    out[k] = v1 * v2
+                elif comp.kind == "add":
+                    out[k] = comp.weights[0] * v1 + comp.weights[1] * v2
+    return out

@@ -1,0 +1,19 @@
+from repro.engine.table import BlockTable
+from repro.engine.expr import Col, Const, BinOp, Cmp, Between, And, Or, Not, eval_expr
+from repro.engine import logical
+from repro.engine.executor import Executor
+
+__all__ = [
+    "BlockTable",
+    "Col",
+    "Const",
+    "BinOp",
+    "Cmp",
+    "Between",
+    "And",
+    "Or",
+    "Not",
+    "eval_expr",
+    "logical",
+    "Executor",
+]

@@ -1,0 +1,175 @@
+"""A tiny scalar-expression IR evaluated column-at-a-time with jnp.
+
+Covers the expression surface of the paper's benchmarks (TPC-H Q1/Q6-style
+arithmetic, range predicates, conjunctions): columns, constants, +,-,*,/,
+comparisons, BETWEEN, AND/OR/NOT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax.numpy as jnp
+
+Number = Union[int, float]
+
+
+class Expr:
+    def __add__(self, other):
+        return BinOp("+", self, _wrap(other))
+
+    def __sub__(self, other):
+        return BinOp("-", self, _wrap(other))
+
+    def __mul__(self, other):
+        return BinOp("*", self, _wrap(other))
+
+    def __truediv__(self, other):
+        return BinOp("/", self, _wrap(other))
+
+    def __lt__(self, other):
+        return Cmp("<", self, _wrap(other))
+
+    def __le__(self, other):
+        return Cmp("<=", self, _wrap(other))
+
+    def __gt__(self, other):
+        return Cmp(">", self, _wrap(other))
+
+    def __ge__(self, other):
+        return Cmp(">=", self, _wrap(other))
+
+    def eq(self, other):
+        return Cmp("==", self, _wrap(other))
+
+    def ne(self, other):
+        return Cmp("!=", self, _wrap(other))
+
+    def between(self, lo, hi):
+        return Between(self, float(lo), float(hi))
+
+    def columns(self) -> Tuple[str, ...]:
+        raise NotImplementedError
+
+
+def _wrap(v) -> "Expr":
+    if isinstance(v, Expr):
+        return v
+    return Const(float(v))
+
+
+@dataclasses.dataclass(frozen=True)
+class Col(Expr):
+    name: str
+
+    def columns(self):
+        return (self.name,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Const(Expr):
+    value: float
+
+    def columns(self):
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BinOp(Expr):
+    op: str
+    left: Expr
+    right: Expr
+
+    def columns(self):
+        return tuple(dict.fromkeys(self.left.columns() + self.right.columns()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp(Expr):
+    op: str
+    left: Expr
+    right: Expr
+
+    def columns(self):
+        return tuple(dict.fromkeys(self.left.columns() + self.right.columns()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Between(Expr):
+    arg: Expr
+    lo: float
+    hi: float
+
+    def columns(self):
+        return self.arg.columns()
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Expr):
+    left: Expr
+    right: Expr
+
+    def columns(self):
+        return tuple(dict.fromkeys(self.left.columns() + self.right.columns()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Expr):
+    left: Expr
+    right: Expr
+
+    def columns(self):
+        return tuple(dict.fromkeys(self.left.columns() + self.right.columns()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Expr):
+    arg: Expr
+
+    def columns(self):
+        return self.arg.columns()
+
+
+def eval_expr(expr: Expr, columns) -> jnp.ndarray:
+    """Evaluate ``expr`` against a mapping name -> 1-D array."""
+    if isinstance(expr, Col):
+        return columns[expr.name]
+    if isinstance(expr, Const):
+        return jnp.asarray(expr.value)
+    if isinstance(expr, BinOp):
+        l, r = eval_expr(expr.left, columns), eval_expr(expr.right, columns)
+        if expr.op == "+":
+            return l + r
+        if expr.op == "-":
+            return l - r
+        if expr.op == "*":
+            return l * r
+        if expr.op == "/":
+            return l / r
+        raise ValueError(expr.op)
+    if isinstance(expr, Cmp):
+        l, r = eval_expr(expr.left, columns), eval_expr(expr.right, columns)
+        if expr.op == "<":
+            return l < r
+        if expr.op == "<=":
+            return l <= r
+        if expr.op == ">":
+            return l > r
+        if expr.op == ">=":
+            return l >= r
+        if expr.op == "==":
+            return l == r
+        if expr.op == "!=":
+            return l != r
+        raise ValueError(expr.op)
+    if isinstance(expr, Between):
+        v = eval_expr(expr.arg, columns)
+        return (v >= expr.lo) & (v <= expr.hi)
+    if isinstance(expr, And):
+        return eval_expr(expr.left, columns) & eval_expr(expr.right, columns)
+    if isinstance(expr, Or):
+        return eval_expr(expr.left, columns) | eval_expr(expr.right, columns)
+    if isinstance(expr, Not):
+        return ~eval_expr(expr.arg, columns)
+    raise TypeError(f"not an Expr: {expr!r}")

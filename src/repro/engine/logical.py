@@ -1,0 +1,143 @@
+"""Logical query plans.
+
+PilotDB rewrites SQL; we rewrite these plans.  The supported surface mirrors
+§2.3 of the paper: arbitrary compositions of Scan / Filter / equi-Join /
+bag-Union under a terminal Aggregate with optional GROUP BY, with linear
+aggregates (SUM / COUNT / AVG; AVG is planned as SUM/COUNT via the Table-2
+propagation rules).  Non-linear aggregates (MIN/MAX/COUNT DISTINCT) are
+rejected exactly as PilotDB rejects them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.engine.expr import Expr
+
+LINEAR_AGG_OPS = ("sum", "count", "avg")
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleClause:
+    """TABLESAMPLE SYSTEM (block) / BERNOULLI (row) analogue."""
+
+    method: str  # "block" | "row"
+    rate: float  # theta in (0, 1]
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.method not in ("block", "row"):
+            raise ValueError(self.method)
+        if not 0.0 < self.rate <= 1.0:
+            raise ValueError(f"rate must be in (0,1], got {self.rate}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    op: str  # sum | count | avg
+    expr: Optional[Expr]  # None for COUNT(*)
+    name: str
+
+    def __post_init__(self):
+        if self.op not in LINEAR_AGG_OPS:
+            raise ValueError(
+                f"unsupported aggregate {self.op!r}: PilotDB supports linear aggregates only")
+
+
+class Plan:
+    def children(self) -> Tuple["Plan", ...]:
+        return ()
+
+    def scans(self) -> List["Scan"]:
+        out = []
+        if isinstance(self, Scan):
+            out.append(self)
+        for c in self.children():
+            out.extend(c.scans())
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan(Plan):
+    table: str
+    sample: Optional[SampleClause] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter(Plan):
+    child: Plan
+    pred: Expr
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Join(Plan):
+    """Equi-join; the right side's key must be unique among valid rows.
+
+    The physical join preserves the left child's block structure, which is the
+    concrete form of Prop. 4.5 (block sampling on the left input commutes with
+    the join).
+    """
+
+    left: Plan
+    right: Plan
+    left_key: str
+    right_key: str
+
+    def children(self):
+        return (self.left, self.right)
+
+
+@dataclasses.dataclass(frozen=True)
+class Union(Plan):
+    """Bag union (UNION ALL) of same-schema children (Prop. 4.6)."""
+
+    inputs: Tuple[Plan, ...]
+
+    def children(self):
+        return tuple(self.inputs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate(Plan):
+    child: Plan
+    aggs: Tuple[AggSpec, ...]
+    group_by: Optional[str] = None  # integer-coded group column
+    max_groups: int = 1
+
+    def children(self):
+        return (self.child,)
+
+
+def rewrite_scans(plan: Plan, samples: dict) -> Plan:
+    """Return a copy of ``plan`` with Scan(table) nodes given sample clauses.
+
+    ``samples`` maps table name -> SampleClause (or None to clear).  This is
+    the plan-level analogue of §3.3's "add sampling clauses" rewriting step.
+    """
+    if isinstance(plan, Scan):
+        if plan.table in samples:
+            return dataclasses.replace(plan, sample=samples[plan.table])
+        return plan
+    if isinstance(plan, Filter):
+        return dataclasses.replace(plan, child=rewrite_scans(plan.child, samples))
+    if isinstance(plan, Join):
+        return dataclasses.replace(
+            plan,
+            left=rewrite_scans(plan.left, samples),
+            right=rewrite_scans(plan.right, samples),
+        )
+    if isinstance(plan, Union):
+        return dataclasses.replace(
+            plan, inputs=tuple(rewrite_scans(p, samples) for p in plan.inputs))
+    if isinstance(plan, Aggregate):
+        return dataclasses.replace(plan, child=rewrite_scans(plan.child, samples))
+    raise TypeError(plan)
+
+
+def strip_samples(plan: Plan) -> Plan:
+    scans = plan.scans()
+    return rewrite_scans(plan, {s.table: None for s in scans})

@@ -1,0 +1,163 @@
+"""Physical relational operators on BlockTables (pure jnp, static shapes)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.expr import Expr, eval_expr
+from repro.engine.table import BlockTable
+
+_BIG = np.int32(2**31 - 1)  # keys must be < 2^31-1 (x64 is off)
+
+
+def filter_table(table: BlockTable, pred: Expr) -> BlockTable:
+    mask = eval_expr(pred, table.columns)
+    return table.with_valid(table.valid & mask)
+
+
+def join_unique(left: BlockTable, right: BlockTable, left_key: str,
+                right_key: str, rblock_col: Optional[str] = None) -> BlockTable:
+    """Equi-join where ``right_key`` is unique among valid right rows.
+
+    Preserves the left table's physical layout and block lineage (Prop. 4.5).
+    Right columns are appended; optionally the right row's *origin block id*
+    is exported as ``rblock_col`` — the pair lineage Lemma 4.8 needs.
+    """
+    lkey = left.columns[left_key].astype(jnp.int32)
+    rkey = jnp.where(right.valid, right.columns[right_key].astype(jnp.int32), _BIG)
+    order = jnp.argsort(rkey)
+    sorted_keys = rkey[order]
+    pos = jnp.searchsorted(sorted_keys, lkey)
+    pos_c = jnp.clip(pos, 0, sorted_keys.shape[0] - 1)
+    found = sorted_keys[pos_c] == lkey
+    match = order[pos_c]
+    valid = left.valid & found
+
+    new_cols = dict(left.columns)
+    for cname, col in right.columns.items():
+        if cname == right_key:
+            continue
+        if cname in new_cols:
+            raise ValueError(f"column name collision in join: {cname}")
+        new_cols[cname] = col[match]
+    if rblock_col is not None:
+        new_cols[rblock_col] = right.block_id[match].astype(jnp.int32)
+    return dataclasses.replace(left, columns=new_cols, valid=valid)
+
+
+def union_all(tables: list[BlockTable]) -> BlockTable:
+    """Bag union; block ids are offset so origins stay distinct (Prop. 4.6)."""
+    if not tables:
+        raise ValueError("empty union")
+    br = tables[0].block_rows
+    names = set(tables[0].columns)
+    offset = 0
+    cols = {c: [] for c in names}
+    valids, bids = [], []
+    rows = 0
+    for t in tables:
+        if set(t.columns) != names or t.block_rows != br:
+            raise ValueError("union inputs must share schema and block size")
+        for c in names:
+            cols[c].append(t.columns[c])
+        valids.append(t.valid)
+        bids.append(t.block_id + offset)
+        offset += t.num_origin_blocks
+        rows += t.num_rows
+    return BlockTable(
+        name="union",
+        columns={c: jnp.concatenate(v) for c, v in cols.items()},
+        block_rows=br,
+        num_rows=rows,
+        valid=jnp.concatenate(valids),
+        block_id=jnp.concatenate(bids),
+        num_origin_blocks=offset,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+def _agg_values(table: BlockTable, expr: Optional[Expr]) -> jnp.ndarray:
+    if expr is None:
+        vals = jnp.ones(table.padded_rows, dtype=jnp.float32)
+    else:
+        vals = eval_expr(expr, table.columns).astype(jnp.float32)
+    return jnp.where(table.valid, vals, 0.0)
+
+
+def group_ids(table: BlockTable, group_by: Optional[str], max_groups: int) -> jnp.ndarray:
+    if group_by is None:
+        return jnp.zeros(table.padded_rows, dtype=jnp.int32)
+    gid = table.columns[group_by].astype(jnp.int32)
+    return jnp.clip(gid, 0, max_groups - 1)
+
+
+def grouped_sums(table: BlockTable, exprs, group_by: Optional[str],
+                 max_groups: int) -> jnp.ndarray:
+    """Returns (num_aggs, max_groups) sums of each expr per group."""
+    gid = group_ids(table, group_by, max_groups)
+    outs = []
+    for expr in exprs:
+        vals = _agg_values(table, expr)
+        outs.append(jnp.zeros(max_groups, jnp.float32).at[gid].add(vals))
+    return jnp.stack(outs)
+
+
+def grouped_counts(table: BlockTable, group_by: Optional[str], max_groups: int) -> jnp.ndarray:
+    gid = group_ids(table, group_by, max_groups)
+    return jnp.zeros(max_groups, jnp.float32).at[gid].add(
+        table.valid.astype(jnp.float32))
+
+
+def block_group_sums(table: BlockTable, exprs, group_by: Optional[str],
+                     max_groups: int, block_ids: np.ndarray) -> np.ndarray:
+    """Per-(origin-block, group) sums: shape (len(block_ids), max_groups, num_aggs).
+
+    This is the pilot query's "GROUP BY physical block" (§3.3 step 2) — the
+    statistics BSAP consumes.  ``block_ids`` lists the sampled origin blocks;
+    blocks without surviving rows contribute zeros (they are real population
+    units with zero contribution).
+    """
+    gid = group_ids(table, group_by, max_groups)
+    n_origin = int(table.num_origin_blocks)
+    seg = table.block_id.astype(jnp.int32) * max_groups + gid
+    out = []
+    for expr in exprs:
+        vals = _agg_values(table, expr)
+        dense = jnp.zeros(n_origin * max_groups, jnp.float32).at[seg].add(vals)
+        out.append(np.asarray(dense).reshape(n_origin, max_groups))
+    stacked = np.stack(out, axis=-1)  # (n_origin, groups, aggs)
+    return stacked[np.asarray(block_ids, dtype=np.int64)]
+
+
+def block_pair_sums(table: BlockTable, exprs, lblock_ids: np.ndarray,
+                    rblock_col: str, n_right_blocks: int) -> np.ndarray:
+    """Per-(left origin block, right origin block) sums for Lemma 4.8.
+
+    Returns shape (len(lblock_ids), n_right_blocks, num_aggs).  Left origin
+    blocks are compacted to their position among ``lblock_ids`` before the
+    scatter so the dense buffer is n_p × N2, not N1 × N2.
+    """
+    lblock_ids = np.asarray(lblock_ids, dtype=np.int64)
+    n_p = len(lblock_ids)
+    n_origin = int(table.num_origin_blocks)
+    # origin block id -> compact pilot index (rows from unsampled blocks
+    # cannot occur here, but map them to a scratch slot for safety)
+    lut = np.full(n_origin, n_p, dtype=np.int32)
+    lut[lblock_ids] = np.arange(n_p, dtype=np.int32)
+    compact = jnp.asarray(lut)[table.block_id]
+    rb = table.columns[rblock_col].astype(jnp.int32)
+    rb = jnp.where(table.valid, rb, 0)
+    seg = compact * n_right_blocks + rb
+    out = []
+    for expr in exprs:
+        vals = _agg_values(table, expr)
+        dense = jnp.zeros((n_p + 1) * n_right_blocks, jnp.float32).at[seg].add(vals)
+        out.append(np.asarray(dense).reshape(n_p + 1, n_right_blocks)[:n_p])
+    return np.stack(out, axis=-1)

@@ -1,0 +1,87 @@
+"""Bernoulli samplers.
+
+Sampling *decisions* are host-side (numpy RNG) — exactly as a DBMS's
+TABLESAMPLE decides pages before scanning them — and data movement is
+device-side:
+
+* block sampling gathers only the selected slabs (cost ∝ θ · bytes),
+* row sampling masks in place (cost ∝ full bytes; the whole column streams).
+
+Both are Bernoulli (each unit kept i.i.d. with prob θ, no replacement), the
+paper's §3.1 choice, so sample sizes are Binomial — TAQA's bounds account for
+that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.table import BlockTable
+
+
+@dataclasses.dataclass
+class SampleInfo:
+    method: str
+    rate: float
+    seed: int
+    n_sampled_blocks: Optional[int] = None
+    n_total_blocks: Optional[int] = None
+    sampled_block_ids: Optional[np.ndarray] = None
+    scanned_bytes: int = 0
+    n_sampled_rows: Optional[int] = None  # row-Bernoulli kept rows
+    n_total_rows: Optional[int] = None
+
+
+def _bucket(k: int) -> int:
+    """Round the sampled-block count up to the next power of two.  Sampled
+    tables then recur in log-many shapes, so XLA's per-shape executable
+    cache is hit across queries — without bucketing, every distinct sample
+    size recompiles the whole eager op pipeline (~1.4 s, measured: 76
+    compiles per query), drowning the scan savings on warm paths.  The <=2x
+    physical overshoot gathers padding rows that are invalid and excluded
+    from the scanned-bytes accounting."""
+    if k <= 64:
+        return 64
+    return 1 << (k - 1).bit_length()
+
+
+def block_sample(table: BlockTable, rate: float, seed: int) -> tuple[BlockTable, SampleInfo]:
+    """TABLESAMPLE SYSTEM analogue: Bernoulli over blocks, gather hit slabs.
+
+    The gathered table is padded to a bucketed block count with all-invalid
+    copies of block 0 (they contribute nothing to any statistic and are not
+    listed in sampled_block_ids); scanned_bytes counts REAL blocks only —
+    padding rows would not move in a real storage engine."""
+    rng = np.random.default_rng(seed)
+    keep = rng.random(table.num_blocks) < rate
+    ids = np.nonzero(keep)[0].astype(np.int32)
+    n_real = int(len(ids))
+    target = min(_bucket(max(n_real, 1)), table.num_blocks)
+    pad = max(target - n_real, 0)
+    phys = np.concatenate([ids, np.zeros(pad, np.int32)]) if pad else ids
+    sampled = table.gather_blocks(phys)
+    if pad or n_real == 0:
+        mask = np.ones(len(phys) * table.block_rows, dtype=bool)
+        mask[n_real * table.block_rows:] = False
+        sampled = sampled.with_valid(sampled.valid & jnp.asarray(mask))
+    info = SampleInfo(
+        "block", rate, seed, n_real, table.num_blocks, ids,
+        scanned_bytes=n_real * table.block_rows * table.row_bytes())
+    return sampled, info
+
+
+def row_sample(table: BlockTable, rate: float, seed: int) -> tuple[BlockTable, SampleInfo]:
+    """TABLESAMPLE BERNOULLI analogue: per-row mask; full scan is paid."""
+    rng = np.random.default_rng(seed)
+    keep = jnp.asarray(rng.random(table.padded_rows) < rate)
+    new_valid = table.valid & keep
+    out = table.with_valid(new_valid)
+    info = SampleInfo("row", rate, seed, None, table.num_blocks, None,
+                      scanned_bytes=table.total_bytes())
+    info.n_sampled_rows = int(np.asarray(new_valid.sum()))
+    info.n_total_rows = table.num_rows
+    return out, info

@@ -1,0 +1,62 @@
+"""Sampled-block aggregation kernel — the TPU realization of BSAP's scan.
+
+The grid ranges over *sampled* blocks only.  The sampled block ids arrive via
+scalar prefetch and drive the BlockSpec index_map, so each grid step DMAs
+exactly one (1, block_rows) slab of the column from HBM into VMEM —
+non-sampled slabs never move.  This is `TABLESAMPLE SYSTEM` as a memory
+system primitive: the cost is θ·bytes, not bytes.
+
+Output per sampled block: (count, sum, sum-of-squares, min, max, 0, 0, 0) —
+exactly the per-block statistics the pilot query groups by `ctid` (§3.3) and
+that BSAP's bounds consume (count/sum/sumsq) plus min/max for future outlier
+indexes.  Lane-padded to 8 for clean TPU stores.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+STATS = 8  # count, sum, sumsq, min, max, pad, pad, pad
+
+
+def _kernel(ids_ref, vals_ref, valid_ref, out_ref):
+    v = vals_ref[0, :].astype(jnp.float32)
+    m = valid_ref[0, :].astype(jnp.float32)
+    cnt = jnp.sum(m)
+    s = jnp.sum(v * m)
+    ss = jnp.sum(v * v * m)
+    big = jnp.float32(3.4e38)
+    mn = jnp.min(jnp.where(m > 0, v, big))
+    mx = jnp.max(jnp.where(m > 0, v, -big))
+    zero = jnp.float32(0.0)
+    out_ref[0, :] = jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def block_agg_kernel(values: jax.Array, valid: jax.Array, ids: jax.Array,
+                     *, block_rows: int, interpret: bool = False) -> jax.Array:
+    """values/valid: (num_blocks, block_rows); ids: (n_sampled,) int32.
+
+    Returns (n_sampled, 8) per-block stats.
+    """
+    n_sampled = ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_sampled,),
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda i, ids: (ids[i], 0)),
+            pl.BlockSpec((1, block_rows), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, STATS), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_sampled, STATS), jnp.float32),
+        interpret=interpret,
+    )(ids, values, valid)

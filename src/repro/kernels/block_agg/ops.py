@@ -1,0 +1,48 @@
+"""Public wrapper: 1-D columns in, per-sampled-block stats out.
+
+On CPU containers the Pallas TPU lowering is unavailable, so the wrapper
+selects interpret mode automatically (`interpret=None` -> True off-TPU);
+production TPU binaries pass interpret=False and get the compiled kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_agg.kernel import block_agg_kernel
+from repro.kernels.block_agg.ref import block_agg_ref
+
+LANE = 128  # TPU lane width: pad block_rows up to a multiple
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def block_agg(column: jax.Array, valid: jax.Array, block_rows: int,
+              ids: np.ndarray, *, interpret: Optional[bool] = None,
+              use_ref: bool = False) -> jax.Array:
+    """Per-sampled-block (count, sum, sumsq, min, max) for a 1-D column.
+
+    column/valid: (num_blocks * block_rows,); ids: sampled block indices.
+    """
+    n_blocks = column.shape[0] // block_rows
+    v2 = column.reshape(n_blocks, block_rows).astype(jnp.float32)
+    m2 = valid.reshape(n_blocks, block_rows).astype(jnp.float32)
+    pad = (-block_rows) % LANE
+    if pad:
+        v2 = jnp.pad(v2, ((0, 0), (0, pad)))
+        m2 = jnp.pad(m2, ((0, 0), (0, pad)))
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    if use_ref:
+        out = block_agg_ref(v2, m2, ids, block_rows=block_rows + pad)
+    else:
+        out = block_agg_kernel(v2, m2, ids, block_rows=block_rows + pad,
+                               interpret=_auto_interpret(interpret))
+    return out[:, :5]

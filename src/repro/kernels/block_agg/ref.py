@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the block_agg kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_agg_ref(values, valid, ids, *, block_rows: int):
+    """values/valid: (num_blocks, block_rows); ids: (n,) -> (n, 8) stats."""
+    v = values[ids].astype(jnp.float32)
+    m = valid[ids].astype(jnp.float32)
+    cnt = (m).sum(axis=1)
+    s = (v * m).sum(axis=1)
+    ss = (v * v * m).sum(axis=1)
+    big = jnp.float32(3.4e38)
+    mn = jnp.where(m > 0, v, big).min(axis=1)
+    mx = jnp.where(m > 0, v, -big).max(axis=1)
+    z = jnp.zeros_like(cnt)
+    return jnp.stack([cnt, s, ss, mn, mx, z, z, z], axis=1)

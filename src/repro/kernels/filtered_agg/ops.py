@@ -1,0 +1,45 @@
+"""Public wrapper for the fused Q6-style scan."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.filtered_agg.kernel import filtered_agg_kernel
+from repro.kernels.filtered_agg.ref import filtered_agg_ref
+
+LANE = 128
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def filtered_agg(x, y, f1, f2, f3, valid, block_rows: int, ids: np.ndarray,
+                 bounds, *, interpret: Optional[bool] = None,
+                 use_ref: bool = False) -> jax.Array:
+    """Fused Q6 scan over sampled blocks of 1-D columns.
+
+    bounds = (lo1, hi1, lo2, hi2, c3); returns (n_sampled, 3) cnt/sum/sumsq.
+    Rows failing the predicate are excluded; padding rows are invalid.
+    """
+    n_blocks = x.shape[0] // block_rows
+    pad = (-block_rows) % LANE
+
+    def prep(col):
+        c = jnp.asarray(col).reshape(n_blocks, block_rows).astype(jnp.float32)
+        return jnp.pad(c, ((0, 0), (0, pad))) if pad else c
+
+    cols = [prep(c) for c in (x, y, f1, f2, f3, valid)]
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    if use_ref:
+        return filtered_agg_ref(*cols[:5], cols[5], ids, bounds=tuple(bounds))
+    out = filtered_agg_kernel(*cols, ids, block_rows=block_rows + pad,
+                              bounds=tuple(float(b) for b in bounds),
+                              interpret=_auto_interpret(interpret))
+    return out[:, :3]

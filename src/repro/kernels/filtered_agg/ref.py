@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for filtered_agg."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def filtered_agg_ref(x, y, f1, f2, f3, valid, ids, *, bounds):
+    """All columns (num_blocks, block_rows); returns (n, 3): cnt, sum, sumsq."""
+    lo1, hi1, lo2, hi2, c3 = [jnp.float32(b) for b in bounds]
+    xs, ys = x[ids], y[ids]
+    keep = ((f1[ids] >= lo1) & (f1[ids] <= hi1)
+            & (f2[ids] >= lo2) & (f2[ids] <= hi2)
+            & (f3[ids] < c3)).astype(jnp.float32) * valid[ids].astype(jnp.float32)
+    prod = xs.astype(jnp.float32) * ys.astype(jnp.float32)
+    cnt = keep.sum(axis=1)
+    s = (prod * keep).sum(axis=1)
+    ss = (prod * prod * keep).sum(axis=1)
+    return jnp.stack([cnt, s, ss], axis=1)

@@ -1,0 +1,104 @@
+"""Blockwise online-softmax attention (FlashAttention, TPU-native tiling).
+
+Grid = (num_q_blocks, num_kv_blocks); the kv dimension is the inner sequential
+axis so the running max / denominator / accumulator live in VMEM scratch and
+are carried across kv steps.  Causal q-blocks skip kv blocks entirely above
+the diagonal — on TPU this prunes both the DMA and the MXU work (the same
+block-skipping idea PilotDB applies to table scans, applied to the score
+matrix).  Block shapes default to (128, 128): MXU-aligned and small enough
+that q/k/v tiles + scratch fit VMEM for head_dim <= 256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, bq: int, bk: int, nk: int,
+                 kv_len: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:] = jnp.zeros_like(acc_scr)
+
+    if causal:
+        run = j * bk < (i + 1) * bq  # block intersects the causal triangle
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = cols < kv_len
+        if causal:
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (cols <= rows)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:]
+        l_prev = l_scr[:]
+        m_cur = jnp.max(s, axis=1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)[:, None]
+        acc_scr[:] = acc_scr[:] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[:] = m_new
+        l_scr[:] = l_new
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        l = l_scr[:]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_scr[:] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "bq", "bk", "kv_len", "interpret"))
+def flash_attention_kernel(q, k, v, *, scale: float, causal: bool, kv_len: int,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q: (Sq, d); k, v: (Skv, d) — both padded to block multiples."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    nq, nk = sq // bq, skv // bk
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nk=nk,
+        kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q[None], k[None], v[None])[0]

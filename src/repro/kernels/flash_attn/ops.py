@@ -1,0 +1,52 @@
+"""Batched/GQA wrapper around the flash attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_kernel
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None, use_ref: bool = False):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+
+    Pads sequences to block multiples (padded keys are masked via kv_len;
+    padded query rows are sliced off) and vmaps the single-head kernel.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    if use_ref:
+        fn = lambda qi, ki, vi: attention_ref(qi, ki, vi, scale=scale,
+                                              causal=causal, kv_len=skv)
+        return jax.vmap(jax.vmap(fn))(q, k, v)
+
+    bq_ = min(bq, max(sq, 8))
+    bk_ = min(bk, max(skv, 8))
+    pad_q = (-sq) % bq_
+    pad_k = (-skv) % bk_
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    fn = lambda qi, ki, vi: flash_attention_kernel(
+        qi, ki, vi, scale=scale, causal=causal, kv_len=skv, bq=bq_, bk=bk_,
+        interpret=_auto_interpret(interpret))
+    out = jax.vmap(jax.vmap(fn))(qp, kp, vp)
+    return out[:, :, :sq, :]

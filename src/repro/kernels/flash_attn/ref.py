@@ -1,0 +1,21 @@
+"""Dense-softmax oracle for flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool, kv_len=None):
+    """q: (Sq, d); k/v: (Skv, d).  Full-materialization softmax attention."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    s = (qf @ kf.T) * scale
+    skv = k.shape[0]
+    mask = jnp.ones((q.shape[0], skv), dtype=bool)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(skv)[None, :] < kv_len)
+    if causal:
+        mask = mask & (jnp.arange(skv)[None, :] <= jnp.arange(q.shape[0])[:, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    return (p @ vf).astype(q.dtype)

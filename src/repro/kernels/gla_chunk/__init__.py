@@ -1,0 +1,4 @@
+from repro.kernels.gla_chunk.ops import gla_chunked
+from repro.kernels.gla_chunk.ref import gla_recurrent_ref
+
+__all__ = ["gla_chunked", "gla_recurrent_ref"]

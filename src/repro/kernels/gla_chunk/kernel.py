@@ -1,0 +1,134 @@
+"""Chunked gated-linear-attention kernel (the TPU-native RWKV6/SSM hot path).
+
+The sequential recurrence S_t = diag(e^{g_t}) S_{t-1} + k_t v_t^T is a poor
+fit for the MXU (rank-1 updates, O(T) serial steps).  The chunked/parallel
+form turns it into dense matmuls — the standard GLA/SSD reformulation, which
+*is* the hardware adaptation for TPU:
+
+with b_i = exp(cumsum g) inside a chunk of length C, S0 the carried state:
+    q~_i = q_i * b_i,   k~_j = k_j / b_j
+    o    = q~ @ S0  +  ((q~ @ k~^T) * causal_mask) @ v          (two MXU GEMMs)
+    S'   = diag(b_C) S0  +  (k~ * b_C)^T @ v                    (one MXU GEMM)
+
+Grid = (num_chunks,), sequential; the state is VMEM scratch carried across
+grid steps.  Numerics: b ratios stay bounded because |g|·C is clamped by the
+wrapper (decay close to 1 within a chunk — true for trained RWKV/SSM decays).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+SUB = 16  # intra-chunk sub-block size (two-level scheme, see below)
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, ostate_ref, s_scr, *,
+                chunk: int, nchunks: int):
+    """Numerical-safety note: the textbook factorization q~=q·e^L, k~=k·e^-L
+    overflows for strong decays (e^-L grows like e^{|g|·C}).  We therefore
+    keep every exponent <= 0:
+
+    * inter-chunk and state-carry terms use e^{L} and e^{L_C - L}, both <= 1;
+    * intra-chunk attention is computed per sub-block pair (SUB x SUB),
+      re-based at the column sub-block's end so both factors' exponents are
+      <= 0; diagonal sub-blocks mask j > i *before* exponentiation.
+    Underflow to 0 is the mathematically correct limit (fully forgotten)."""
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[:] = jnp.zeros_like(s_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (C, dk)
+    k = k_ref[0].astype(jnp.float32)          # (C, dk)
+    v = v_ref[0].astype(jnp.float32)          # (C, dv)
+    g = g_ref[0].astype(jnp.float32)          # (C, dk) log-decay (<= 0)
+    L = jnp.cumsum(g, axis=0)                 # (C, dk), decreasing
+    L_last = L[-1:, :]                        # (1, dk)
+
+    s0 = s_scr[:]                             # (dk, dv)
+    q_in = q * jnp.exp(L)                     # e^{L} <= 1
+    inter = jax.lax.dot_general(q_in, s0, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # intra-chunk: two-level sub-block scheme
+    ns = chunk // SUB
+    out_rows = []
+    for r in range(ns):
+        qr = q[r * SUB:(r + 1) * SUB]
+        Lr = L[r * SUB:(r + 1) * SUB]
+        acc = jnp.zeros((SUB, v.shape[1]), jnp.float32)
+        for cb in range(r + 1):
+            vc = v[cb * SUB:(cb + 1) * SUB]
+            if cb < r:
+                base = L[(cb + 1) * SUB - 1:(cb + 1) * SUB]   # (1, dk)
+                qq = qr * jnp.exp(Lr - base)                  # rows later: <= 0
+                kk = k[cb * SUB:(cb + 1) * SUB] * jnp.exp(
+                    base - L[cb * SUB:(cb + 1) * SUB])        # cols earlier: <= 0
+                attn = jax.lax.dot_general(qq, kk, (((1,), (1,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+            else:
+                Lc = L[cb * SUB:(cb + 1) * SUB]
+                dif = Lr[:, None, :] - Lc[None, :, :]         # (s, s, dk)
+                rows_i = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 0)
+                cols_j = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 1)
+                mask = (cols_j <= rows_i)[:, :, None]
+                dif = jnp.where(mask, dif, -jnp.inf)          # mask BEFORE exp
+                kc = k[cb * SUB:(cb + 1) * SUB]
+                attn = jnp.sum(qr[:, None, :] * kc[None, :, :] * jnp.exp(dif),
+                               axis=-1)
+            acc = acc + jax.lax.dot_general(attn, vc, (((1,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32)
+        out_rows.append(acc)
+    intra = jnp.concatenate(out_rows, axis=0)
+    o_ref[0] = (inter + intra).astype(o_ref.dtype)
+
+    k_carry = k * jnp.exp(L_last - L)         # e^{L_C - L_j} <= 1
+    s_new = s0 * jnp.exp(L_last).T + jax.lax.dot_general(
+        k_carry, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_scr[:] = s_new
+
+    @pl.when(c == nchunks - 1)
+    def _emit_state():
+        ostate_ref[:] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla_chunked_kernel(q, k, v, g, *, chunk: int = 64, interpret: bool = False):
+    """q,k,g: (T, dk); v: (T, dv); T % chunk == 0.
+
+    Returns (o: (T, dv), final_state: (dk, dv) float32).
+    """
+    T, dk = q.shape
+    dv = v.shape[1]
+    nchunks = T // chunk
+    kernel = functools.partial(_gla_kernel, chunk=chunk, nchunks=nchunks)
+    o, state = pl.pallas_call(
+        kernel,
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda c: (0, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda c: (0, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda c: (0, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda c: (0, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda c: (0, c, 0)),
+            pl.BlockSpec((dk, dv), lambda c: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, T, dv), q.dtype),
+            jax.ShapeDtypeStruct((dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(q[None], k[None], v[None], g[None])
+    return o[0], state

@@ -1,0 +1,45 @@
+"""Batched wrapper for chunked gated linear attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gla_chunk.kernel import gla_chunked_kernel
+from repro.kernels.gla_chunk.ref import gla_recurrent_ref
+
+G_CLAMP = -8.0  # per-step log-decay floor: keeps within-chunk ratios bounded
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def gla_chunked(q, k, v, g, *, chunk: int = 64,
+                interpret: Optional[bool] = None, use_ref: bool = False):
+    """q,k,g: (B, H, T, dk); v: (B, H, T, dv).  Returns (o, final_state).
+
+    g is the per-step log-decay (<= 0).  T is padded to a chunk multiple with
+    zero-decay/zero-kv steps (padding emits garbage o rows that are sliced
+    off and does not perturb the state because k rows are zero).
+    """
+    B, H, T, dk = q.shape
+    g = jnp.clip(g, G_CLAMP, 0.0)
+    if use_ref:
+        fn = lambda qi, ki, vi, gi: gla_recurrent_ref(qi, ki, vi, gi)
+        o, s = jax.vmap(jax.vmap(fn))(q, k, v, g)
+        return o, s
+
+    pad = (-T) % chunk
+    if pad:
+        zq = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(x, zq) for x in (q, k, v))
+        g = jnp.pad(g, zq)  # zero log-decay: state preserved through padding
+    fn = lambda qi, ki, vi, gi: gla_chunked_kernel(
+        qi, ki, vi, gi, chunk=chunk, interpret=_auto_interpret(interpret))
+    o, s = jax.vmap(jax.vmap(fn))(q, k, v, g)
+    return o[:, :, :T, :], s

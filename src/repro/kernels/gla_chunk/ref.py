@@ -1,0 +1,33 @@
+"""Sequential-recurrence oracle for gated linear attention (RWKV6/GLA/SSD).
+
+State S in R^{dk x dv}; per-step, per-key-channel decay lambda_t = exp(g_t):
+
+    S_t = diag(lambda_t) S_{t-1} + k_t v_t^T
+    o_t = S_t^T q_t
+
+This one recurrence family covers RWKV-6 "Finch" (data-dependent per-channel
+decay), GLA, and Mamba-2/SSD (scalar decay broadcast over channels).  The
+chunked kernel must match it exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_recurrent_ref(q, k, v, g, *, initial_state=None):
+    """q,k,g: (T, dk); v: (T, dv).  Returns (o (T, dv), final_state)."""
+    T, dk = q.shape
+    dv = v.shape[1]
+    qf, kf, vf, gf = (x.astype(jnp.float32) for x in (q, k, v, g))
+    s0 = (jnp.zeros((dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        qt, kt, vt, gt = inp
+        S = S * jnp.exp(gt)[:, None] + kt[:, None] * vt[None, :]
+        return S, S.T @ qt
+
+    S, o = jax.lax.scan(step, s0, (qf, kf, vf, gf))
+    return o.astype(q.dtype), S

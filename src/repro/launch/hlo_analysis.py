@@ -1,0 +1,322 @@
+"""Optimized-HLO text analysis: loop-aware FLOPs + collective wire bytes.
+
+`compiled.cost_analysis()` counts while-loop bodies ONCE (verified
+empirically), but scan-over-layers puts ~all compute inside a while loop —
+so we recursively walk the HLO call graph, multiplying each while body by
+its static trip count (recovered from the loop condition's comparison
+constant).  The same walk tallies per-device collective wire bytes, which
+cost_analysis does not expose at all.
+
+Structural profiler semantics:
+  * dot FLOPs exact (result shape × contraction size from the operand's
+    definition);  elementwise ops ignored (dots dominate LM steps; the
+    deviation is reported via the MODEL_FLOPS ratio in the roofline);
+  * collective wire bytes per device use ring formulas:
+      all-gather       out_bytes · (n-1)/n
+      reduce-scatter   in_bytes  · (n-1)/n
+      all-reduce       2 · in_bytes · (n-1)/n
+      all-to-all       in_bytes  · (n-1)/n
+      collective-permute  in_bytes
+    with n = participants per replica group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{$")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(r"while\(")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _split_type(rhs: str) -> Tuple[str, str]:
+    """Split an op definition into (result type string, remainder).
+
+    Handles tuple types: '(s32[], f32[2,2]{1,0}) while(...)' and plain
+    types: 'f32[64,64]{1,0} dot(...)'."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].strip()
+    parts = rhs.split(" ", 1)
+    return parts[0], (parts[1] if len(parts) > 1 else "")
+
+
+def _bytes_of_shape(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shapes_bytes(typestr: str) -> int:
+    """Total bytes of all array shapes in a (possibly tuple) type string."""
+    return sum(_bytes_of_shape(dt, dm) for dt, dm in _SHAPE_RE.findall(typestr))
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    mem_bytes: float = 0.0   # HBM traffic model: op operands+results at
+    #                          fusion boundaries (fusion internals stay in
+    #                          VMEM/VREGs on TPU)
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float, str]] = dataclasses.field(default_factory=list)
+
+
+# ops that do not move HBM bytes themselves
+_NO_MEM_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-get-and-update-state",
+    # layout/dtype ops: fused into neighbours on TPU (CPU-backend HLO keeps
+    # them standalone, which would inflate the traffic model ~5-20x)
+    "copy", "convert", "transpose", "reshape", "broadcast", "bitcast-convert",
+    # control flow: bodies are accounted via the call graph; the op's own
+    # result is the aliased loop-carried buffer
+    "while", "conditional",
+}
+
+
+def analyze_hlo(hlo: str, num_partitions: int = 1) -> Dict[str, object]:
+    # ---- split into computations, keep raw op lines ----
+    comps: Dict[str, List[str]] = {}
+    entry_name: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        hm = _HEADER_RE.match(line)
+        if hm:
+            cur = hm.group(2)
+            comps[cur] = []
+            if hm.group(1):
+                entry_name = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    mp = re.search(r"num_partitions=(\d+)", hlo)
+    if mp:
+        num_partitions = int(mp.group(1))
+
+    # ---- per-computation pass ----
+    stats: Dict[str, CompStats] = {}
+    trip_cache: Dict[str, float] = {}
+
+    def type_of(defline: str) -> str:
+        return _split_type(defline)[0]
+
+    for name, lines in comps.items():
+        st = CompStats()
+        symtab: Dict[str, str] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            var, rhs = dm.group(1), dm.group(2)
+            symtab[var] = rhs
+
+        def shape_bytes_of_var(var: str) -> int:
+            rhs = symtab.get(var.lstrip("%"))
+            if rhs is None:
+                return 0
+            return _first_shapes_bytes(type_of(rhs))
+
+        def dims_of_var(var: str) -> List[int]:
+            rhs = symtab.get(var.lstrip("%"))
+            if rhs is None:
+                return []
+            m = _SHAPE_RE.search(type_of(rhs))
+            if not m:
+                return []
+            return [int(d) for d in m.group(2).split(",") if d]
+
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            typestr, rest = _split_type(rhs)
+            op_kind = rest.split("(", 1)[0].strip().split()[-1] if "(" in rest else ""
+
+            # dots
+            if op_kind == "dot":
+                shapes = _SHAPE_RE.findall(typestr)
+                out_elems = 1
+                if shapes:
+                    dims = shapes[0][1]
+                    for d in dims.split(","):
+                        if d:
+                            out_elems *= int(d)
+                ops = _OPERANDS_RE.search(rest[rest.index("dot("):])
+                cdm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                if ops and cdm:
+                    lhs_var = ops.group(1).split(",")[0].strip()
+                    ldims = dims_of_var(lhs_var)
+                    contraction = 1
+                    for ci in cdm.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            contraction *= ldims[int(ci)]
+                    st.flops += 2.0 * out_elems * contraction
+
+            # collectives (sync and async -start; skip -done)
+            base = op_kind.replace("-start", "")
+            if base in _COLLECTIVES and not op_kind.endswith("-done"):
+                ops = _OPERANDS_RE.search(rest[rest.index(op_kind + "("):])
+                in_bytes = 0
+                if ops:
+                    for v in ops.group(1).split(","):
+                        v = v.strip().lstrip("%")
+                        if v in symtab:
+                            in_bytes += shape_bytes_of_var(v)
+                out_bytes = _first_shapes_bytes(typestr)
+                n = max(_group_size(rhs, num_partitions), 1)
+                ring = (n - 1) / n
+                wire = {
+                    "all-gather": out_bytes * ring,
+                    "reduce-scatter": in_bytes * ring,
+                    "all-reduce": 2.0 * in_bytes * ring,
+                    "all-to-all": in_bytes * ring,
+                    "collective-permute": float(in_bytes),
+                }[base]
+                st.coll_bytes += wire
+                st.coll_counts[base] = st.coll_counts.get(base, 0) + 1
+
+            # HBM traffic at fusion boundaries.  Scan accumulators
+            # (dynamic-update-slice, and fusions rooted in one) write only
+            # the UPDATE slice in place on TPU — counting their full-buffer
+            # result per loop iteration would overcount by the trip count,
+            # so the aliased buffer operand and result are excluded.
+            if op_kind and op_kind not in _NO_MEM_OPS:
+                result_bytes = _first_shapes_bytes(typestr)
+                operand_bytes = []
+                ops_m = _OPERANDS_RE.search(rest[rest.index("("):]) if "(" in rest else None
+                if ops_m:
+                    for v in ops_m.group(1).split(","):
+                        v = v.strip().lstrip("%")
+                        if v in symtab:
+                            operand_bytes.append(shape_bytes_of_var(v))
+                is_dus = op_kind == "dynamic-update-slice"
+                if op_kind == "fusion":
+                    cm = _CALLS_RE.search(rhs)
+                    if cm:
+                        for cl in comps.get(cm.group(1), []):
+                            if cl.startswith("ROOT") and "dynamic-update-slice" in cl:
+                                is_dus = True
+                if is_dus:
+                    # drop the aliased buffer (same size as the result)
+                    rest_ops = sorted(operand_bytes)
+                    if rest_ops and rest_ops[-1] >= result_bytes:
+                        rest_ops = rest_ops[:-1]
+                    st.mem_bytes += sum(rest_ops)
+                else:
+                    st.mem_bytes += result_bytes + sum(operand_bytes)
+
+            # call edges
+            if op_kind == "while":
+                cm, bm = _COND_RE.search(rhs), _BODY_RE.search(rhs)
+                if bm:
+                    trips = 1.0
+                    if cm:
+                        trips = _trip_count(comps.get(cm.group(1), []), trip_cache,
+                                            cm.group(1))
+                    st.calls.append((bm.group(1), trips, "loop"))
+            elif op_kind == "conditional":
+                for m in re.finditer(r"\w+_computation=%?([\w\.\-]+)", rhs):
+                    st.calls.append((m.group(1), 1.0, "loop"))
+            else:
+                # fusion/reduce/etc.: callee FLOPs count, callee bytes do NOT
+                # (the call site's operands/results are the HBM traffic)
+                for m in _CALLS_RE.finditer(rhs):
+                    st.calls.append((m.group(1), 1.0, "fusion"))
+        stats[name] = st
+
+    # ---- recursive rollup ----
+    if entry_name is None:
+        called = {c for st in stats.values() for c, _ in st.calls}
+        candidates = [n for n in stats if n not in called]
+        entry_name = candidates[0] if candidates else next(iter(stats))
+
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def dfs(name: str):
+        if name in memo:
+            return memo[name]
+        st = stats.get(name)
+        if st is None:
+            return 0.0, 0.0, 0.0, {}
+        memo[name] = (0.0, 0.0, 0.0, {})
+        fl, mb, cb = st.flops, st.mem_bytes, st.coll_bytes
+        counts = {k: float(v) for k, v in st.coll_counts.items()}
+        for callee, mult, kind in st.calls:
+            cfl, cmb, ccb, ccnt = dfs(callee)
+            fl += mult * cfl
+            cb += mult * ccb
+            if kind == "loop":
+                mb += mult * cmb
+            # fusion callees: bytes stay at the call site
+            for k, v in ccnt.items():
+                counts[k] = counts.get(k, 0.0) + mult * v
+        memo[name] = (fl, mb, cb, counts)
+        return memo[name]
+
+    flops, mem_bytes, coll_bytes, counts = dfs(entry_name)
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": mem_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_counts": counts,
+        "entry": entry_name,
+        "num_computations": len(comps),
+        "num_partitions": num_partitions,
+    }
+
+
+def _trip_count(cond_lines: List[str], cache: Dict[str, float], key: str) -> float:
+    if key in cache:
+        return cache[key]
+    const = None
+    for line in cond_lines:
+        m = re.search(r"constant\((\d+)\)", line)
+        if m:
+            const = int(m.group(1))
+    cache[key] = float(const) if const is not None else 1.0
+    return cache[key]

@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS for 512 placeholder devices before any
+jax import and only then calls these.
+"""
+
+from __future__ import annotations
+
+import jax
+
+TP = 16          # model-parallel degree (divides every arch's sharded dims)
+POD_DATA = 16    # data-parallel degree within a pod (16x16 = 256 chips/pod)
+PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (PODS, POD_DATA, TP) if multi_pod else (POD_DATA, TP)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,57 @@
+"""Serving driver: batched requests through the slot engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+      --requests 8 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(model, params, batch_slots=args.slots,
+                         cache_len=args.cache_len, seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    ids = []
+    for _ in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, rng.integers(2, 8)).tolist()
+        ids.append(engine.submit(prompt, max_new_tokens=args.max_new))
+    out = engine.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(v) for v in out.values())
+    print(f"served {len(out)}/{args.requests} requests, {tokens} tokens in "
+          f"{dt:.2f}s ({tokens / dt:.1f} tok/s, {engine.steps} engine steps, "
+          f"{args.slots} slots)")
+    for rid in ids[:3]:
+        print(f"  req {rid}: {out[rid]}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Assigned input shapes × per-arch input specs (ShapeDtypeStruct stand-ins).
+
+40 cells total: 10 architectures × 4 shapes.  `decode_*`/`long_*` lower
+`serve_step` (one token against a seq_len cache); `train_4k` lowers
+`train_step`; `prefill_32k` lowers the prefill graph.  `long_500k` requires
+sub-quadratic attention — pure full-attention archs skip it (recorded, per
+the assignment; see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full attention: O(S^2) attention and a 500k KV "
+                       "cache are not servable; skipped per assignment "
+                       "(runs for ssm/hybrid)")
+    return True, ""
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input ShapeDtypeStructs for train/prefill kinds (weak-type
+    correct, shardable, zero allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        text = s - cfg.num_patches
+        batch["tokens"] = _sd((b, text), jnp.int32)
+        batch["patch_embeds"] = _sd((b, cfg.num_patches, cfg.d_model), jnp.float32)
+        if shape.kind == "train":
+            batch["labels"] = _sd((b, s), jnp.int32)
+        return batch
+    batch["tokens"] = _sd((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = _sd((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if shape.kind == "train":
+        batch["labels"] = _sd((b, s), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(token, cache) ShapeDtypeStructs for decode kinds."""
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    token = _sd((shape.global_batch,), jnp.int32)
+    cache = model.cache_spec(shape.global_batch, shape.seq_len)
+    return token, cache
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """All model inputs for the cell, as ShapeDtypeStructs."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        token, cache = decode_specs(cfg, shape)
+        return {"token": token, "cache": cache}
+    return {"batch": batch_specs(cfg, shape)}

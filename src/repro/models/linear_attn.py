@@ -1,0 +1,159 @@
+"""Gated linear attention (RWKV6 "Finch" family) — pure-JAX chunked form.
+
+Mirrors kernels/gla_chunk exactly (same recurrence, same chunked math) so the
+Pallas kernel can be swapped in on TPU; this XLA path is what pjit lowers on
+any backend.  The recurrence family
+
+    S_t = diag(exp(g_t)) S_{t-1} + k_t v_t^T ,   o_t = S_t^T q_t
+
+covers RWKV-6 (data-dependent per-channel decay g_t = f(x_t)) and SSD/Mamba-2
+style SSMs (scalar per-head decay broadcast over channels).  Training/prefill
+use the chunked parallel form (MXU GEMMs); decode carries the (dk, dv) state —
+this is what makes `long_500k` servable with O(1) memory.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+G_CLAMP = -8.0
+
+
+def gla_chunked_xla(q, k, v, g, *, chunk: int = 32, impl: str = "dif",
+                    initial_state: Optional[jax.Array] = None):
+    """q,k,g: (B, H, T, dk); v: (B, H, T, dv).  Returns (o, final_state).
+
+    Chunked scan: intra-chunk uses exponent-safe relative decays (all
+    exponents <= 0), inter-chunk carries the state.
+
+    impl="dif": reference formulation — materializes the (C, C, dk) relative
+    decay tensor per chunk.  Simple, but its HBM traffic scales with C²·dk.
+    impl="subblock": the gla_chunk Pallas kernel's two-level scheme in XLA —
+    off-diagonal sub-block pairs use re-based GEMMs (MXU work, no 5-D
+    tensor), only SUB-wide diagonal blocks materialize relative decays.
+    Traffic drops ~C/SUB× on the elementwise term; chunks can then be
+    larger (fewer, bigger GEMMs per scan step).
+    """
+    if impl == "subblock":
+        return _gla_subblock_xla(q, k, v, g, chunk=max(chunk, 64),
+                                 initial_state=initial_state)
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    g = jnp.clip(g.astype(jnp.float32), G_CLAMP, 0.0)
+    pad = (-t) % chunk
+    if pad:
+        zq = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(x, zq) for x in (q, k, v))
+        g = jnp.pad(g, zq)
+    tt = t + pad
+    nc = tt // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, h, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc, gc = (to_chunks(x) for x in (q, k, v, g))
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    rows = jnp.arange(chunk)[:, None]
+    cols = jnp.arange(chunk)[None, :]
+    tri = cols <= rows
+
+    def step(S, xs):
+        qi, ki, vi, gi = xs  # (b, h, C, d*)
+        L = jnp.cumsum(gi, axis=2)                       # (b,h,C,dk) decreasing
+        L_last = L[:, :, -1:, :]
+        q_in = qi.astype(jnp.float32) * jnp.exp(L)
+        inter = jnp.einsum("bhck,bhkv->bhcv", q_in, S)
+        # intra-chunk, exponent-safe: mask BEFORE exp
+        dif = L[:, :, :, None, :] - L[:, :, None, :, :]  # (b,h,C,C,dk)
+        dif = jnp.where(tri[None, None, :, :, None], dif, -jnp.inf)
+        attn = jnp.einsum("bhik,bhjk,bhijk->bhij",
+                          qi.astype(jnp.float32), ki.astype(jnp.float32),
+                          jnp.exp(dif))
+        intra = jnp.einsum("bhij,bhjv->bhiv", attn, vi.astype(jnp.float32))
+        k_carry = ki.astype(jnp.float32) * jnp.exp(L_last - L)
+        S_new = S * jnp.exp(L_last).transpose(0, 1, 3, 2) + jnp.einsum(
+            "bhck,bhcv->bhkv", k_carry, vi.astype(jnp.float32))
+        return S_new, (inter + intra).astype(q.dtype)
+
+    S, o = jax.lax.scan(step, s0, (qc, kc, vc, gc))
+    o = o.transpose(1, 2, 0, 3, 4).reshape(b, h, tt, dv)
+    return o[:, :, :t, :], S
+
+
+SUB = 16
+
+
+def _gla_subblock_xla(q, k, v, g, *, chunk: int = 64,
+                      initial_state: Optional[jax.Array] = None):
+    """Two-level chunked GLA (mirrors kernels/gla_chunk exactly)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    g = jnp.clip(g.astype(jnp.float32), G_CLAMP, 0.0)
+    pad = (-t) % chunk
+    if pad:
+        zq = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(x, zq) for x in (q, k, v))
+        g = jnp.pad(g, zq)
+    tt = t + pad
+    nc = tt // chunk
+    ns = chunk // SUB
+
+    def to_chunks(x):
+        return x.reshape(b, h, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc, gc = (to_chunks(x) for x in (q, k, v, g))
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    tri = jnp.arange(SUB)[:, None] >= jnp.arange(SUB)[None, :]
+
+    def step(S, xs):
+        qi, ki, vi, gi = (x.astype(jnp.float32) for x in xs)
+        L = jnp.cumsum(gi, axis=2)                        # (b,h,C,dk)
+        L_last = L[:, :, -1:, :]
+        inter = jnp.einsum("bhck,bhkv->bhcv", qi * jnp.exp(L), S)
+
+        out_rows = []
+        for r in range(ns):
+            sl_r = slice(r * SUB, (r + 1) * SUB)
+            qr, Lr = qi[:, :, sl_r], L[:, :, sl_r]
+            acc = jnp.zeros((qi.shape[0], qi.shape[1], SUB, dv), jnp.float32)
+            for c in range(r + 1):
+                sl_c = slice(c * SUB, (c + 1) * SUB)
+                vcb = vi[:, :, sl_c]
+                if c < r:
+                    base = L[:, :, (c + 1) * SUB - 1:(c + 1) * SUB]
+                    qq = qr * jnp.exp(Lr - base)           # exponents <= 0
+                    kk = ki[:, :, sl_c] * jnp.exp(base - L[:, :, sl_c])
+                    attn = jnp.einsum("bhik,bhjk->bhij", qq, kk)
+                else:
+                    Lc = L[:, :, sl_c]
+                    dif = Lr[:, :, :, None, :] - Lc[:, :, None, :, :]
+                    dif = jnp.where(tri[None, None, :, :, None], dif, -jnp.inf)
+                    attn = jnp.einsum("bhik,bhjk,bhijk->bhij", qr,
+                                      ki[:, :, sl_c], jnp.exp(dif))
+                acc = acc + jnp.einsum("bhij,bhjv->bhiv", attn, vcb)
+            out_rows.append(acc)
+        intra = jnp.concatenate(out_rows, axis=2)
+        k_carry = ki * jnp.exp(L_last - L)
+        S_new = S * jnp.exp(L_last).transpose(0, 1, 3, 2) + jnp.einsum(
+            "bhck,bhcv->bhkv", k_carry, vi)
+        return S_new, (inter + intra).astype(q.dtype)
+
+    S, o = jax.lax.scan(step, s0, (qc, kc, vc, gc))
+    o = o.transpose(1, 2, 0, 3, 4).reshape(b, h, tt, dv)
+    return o[:, :, :t, :], S
+
+
+def gla_decode_step(q, k, v, g, state) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step.  q,k,g: (B, H, dk); v: (B, H, dv);
+    state: (B, H, dk, dv).  Returns (o (B,H,dv), new_state)."""
+    g = jnp.clip(g.astype(jnp.float32), G_CLAMP, 0.0)
+    state = state * jnp.exp(g)[..., None] + k.astype(jnp.float32)[..., None] \
+        * v.astype(jnp.float32)[..., None, :]
+    o = jnp.einsum("bhkv,bhk->bhv", state, q.astype(jnp.float32))
+    return o.astype(q.dtype), state

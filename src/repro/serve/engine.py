@@ -1,0 +1,117 @@
+"""Batched serving engine: slot-based continuous batching over decode_step.
+
+A fixed pool of B slots share one jit'd decode_step (the batch dimension is
+static, so there is exactly one compiled graph).  Requests join free slots;
+finished/empty slots decode padding tokens whose outputs are ignored.
+Per-slot state (remaining budget, emitted tokens) lives on the host — the
+device sees only (tokens, cache).  This is the vLLM-style architecture with
+the paper-aligned twist that the KV cache is *block*-structured
+(cache_len-slabs), the same storage geometry BSAP samples.
+
+Greedy sampling by default; temperature sampling via host RNG on the
+returned logits (decode logits are tiny: B × vocab).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_slots: int = 4,
+                 cache_len: int = 256, greedy: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.b = batch_slots
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self.rng = np.random.default_rng(seed)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self._next_id = 0
+        self._decode = jax.jit(model.decode_step)
+        self.cache = model.init_cache(batch_slots, cache_len)
+        self.steps = 0
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        req = Request(self._next_id, list(prompt), max_new_tokens)
+        self._next_id += 1
+        self.queue.append(req)
+        return req.req_id
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Decode until all submitted requests finish.  Returns outputs."""
+        finished: Dict[int, List[int]] = {}
+        pending_prefill: Dict[int, List[int]] = {}  # slot -> prompt remainder
+        last_token = np.zeros(self.b, np.int32)
+
+        for _ in range(max_steps):
+            # admit queued requests into free slots (prompt fed token-by-token
+            # through the same decode graph — single compiled path)
+            for i in range(self.b):
+                if self.slots[i] is None and self.queue:
+                    req = self.queue.pop(0)
+                    self.slots[i] = req
+                    pending_prefill[i] = list(req.prompt)
+                    last_token[i] = pending_prefill[i].pop(0) if req.prompt else 0
+                    self._reset_slot(i)
+            if all(s is None for s in self.slots):
+                break
+
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(last_token))
+            self.steps += 1
+            lg = np.asarray(logits, np.float32)
+
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    last_token[i] = 0
+                    continue
+                if pending_prefill.get(i):
+                    last_token[i] = pending_prefill[i].pop(0)  # still prefill
+                    continue
+                tok = int(lg[i, : self.model.cfg.vocab_size].argmax()) \
+                    if self.greedy else self._sample(lg[i])
+                req.out_tokens.append(tok)
+                last_token[i] = tok
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    finished[req.req_id] = req.out_tokens
+                    self.slots[i] = None
+                    pending_prefill.pop(i, None)
+        return finished
+
+    def _reset_slot(self, i: int):
+        """Fresh sequence state for a newly-admitted request: position 0 and
+        cleared SSM state.  Stale KV entries need no clearing — the per-slot
+        position mask hides everything past pos, and slots are overwritten
+        as the new sequence advances."""
+        self.cache = dict(self.cache)
+        self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        if "ssm" in self.cache:
+            self.cache["ssm"] = self.cache["ssm"].at[:, i].set(0.0)
+
+    def _sample(self, logits: np.ndarray, temp: float = 1.0) -> int:
+        v = self.model.cfg.vocab_size
+        p = logits[:v] / temp
+        p = np.exp(p - p.max())
+        p /= p.sum()
+        return int(self.rng.choice(v, p=p))

@@ -1,0 +1,55 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam/EF-SGD family).
+
+At 1000+-node scale the DP gradient reduction is the dominant collective;
+int8 quantization cuts its bytes 4× versus f32 (2× versus bf16).  Plain
+quantization biases the update; *error feedback* (carrying the quantization
+residual into the next step) restores convergence (Stich et al., Seide et
+al.).  The quantizer is per-tensor symmetric int8 with a max-abs scale —
+cheap enough to fuse before the reduce-scatter.
+
+On this container the collective itself is XLA's job; this module provides
+the (de)quantization + residual algebra, unit-tested for the contraction
+property and for end-to-end convergence in tests/test_train.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / INT8_MAX
+    scale = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g: jax.Array, residual: jax.Array):
+    """Error-feedback step: compress (g + residual), carry the error."""
+    target = g.astype(jnp.float32) + residual
+    q, scale = quantize(target)
+    g_hat = dequantize(q, scale)
+    new_residual = target - g_hat
+    return g_hat.astype(g.dtype), new_residual, jnp.sum(new_residual ** 2)
+
+
+def compress_tree(grads: Any, residuals: Any):
+    """Returns (compressed_grads, new_residuals, total_sq_error)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [compress_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    g_hat = treedef.unflatten([o[0] for o in outs])
+    res = treedef.unflatten([o[1] for o in outs])
+    err = jnp.sum(jnp.stack([o[2] for o in outs]))
+    return g_hat, res, err

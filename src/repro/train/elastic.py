@@ -1,0 +1,108 @@
+"""Elastic scaling + straggler mitigation (node-failure posture).
+
+`plan_mesh` chooses the largest healthy mesh given surviving devices: TP
+degree is preserved (it is baked into layer shardings and kernel tile
+shapes), the data/pod extent shrinks to what remains, and stragglers/failed
+hosts are excluded.  After a failure:
+
+    1. detect (heartbeat timeout / jax runtime error),
+    2. plan_mesh(surviving_devices)  →  new Mesh,
+    3. checkpoint.restore(..., shardings_for(new_mesh))  →  resharded state,
+    4. adjust global batch (keep per-device batch; fewer data shards),
+    5. resume from the last step recorded in the manifest.
+
+`StragglerWatchdog` is the step-time monitor: an EWMA of step latency with a
+multiplicative threshold; slow steps are recorded and surfaced so the
+launcher can trigger the re-mesh path (on TPU pods the usual cause is a
+failing host NIC or thermal throttling).  Both pieces are pure logic —
+unit-tested here, wired to real failure detection in launch/train.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    devices_used: int
+    data_parallel: int
+    global_batch: int
+
+
+def plan_mesh(num_devices: int, *, tp: int = 16,
+              per_replica_batch: int = 8,
+              prefer_pods: bool = False,
+              pod_size: int = 256) -> MeshPlan:
+    """Largest (data, model=tp) mesh that fits the surviving devices."""
+    if num_devices < tp:
+        raise ValueError(
+            f"cannot keep TP={tp} with only {num_devices} devices; "
+            "reshard checkpoints to a smaller TP first")
+    data = num_devices // tp
+    if prefer_pods and num_devices >= pod_size:
+        pods = num_devices // pod_size
+        data_in_pod = pod_size // tp
+        return MeshPlan(shape=(pods, data_in_pod, tp),
+                        axis_names=("pod", "data", "model"),
+                        devices_used=pods * pod_size,
+                        data_parallel=pods * data_in_pod,
+                        global_batch=pods * data_in_pod * per_replica_batch)
+    return MeshPlan(shape=(data, tp), axis_names=("data", "model"),
+                    devices_used=data * tp, data_parallel=data,
+                    global_batch=data * per_replica_batch)
+
+
+def make_mesh(plan: MeshPlan, devices: Optional[Sequence] = None):
+    devices = list(devices if devices is not None else jax.devices())
+    use = devices[: plan.devices_used]
+    arr = np.array(use).reshape(plan.shape)
+    return jax.sharding.Mesh(arr, plan.axis_names)
+
+
+class StragglerWatchdog:
+    """EWMA step-time monitor; flags steps slower than `threshold`× the EWMA."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup: int = 3):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.steps = 0
+        self.slow_steps: List[Tuple[int, float]] = []
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Returns True if this step was a straggler."""
+        dt = time.perf_counter() - self._t0
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        self.steps += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = self.steps > self.warmup and dt > self.threshold * self.ewma
+        if slow:
+            # do not fold outliers into the baseline
+            self.slow_steps.append((self.steps, dt))
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+    @property
+    def should_remesh(self) -> bool:
+        """Persistent stragglers (>=3 of the last 10 steps) ⇒ act."""
+        recent = [s for s, _ in self.slow_steps if s > self.steps - 10]
+        return len(recent) >= 3

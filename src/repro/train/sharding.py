@@ -1,0 +1,149 @@
+"""Sharding policy: FSDP over the data axes × TP over the model axis.
+
+Rules (path-name driven, uniform across all 10 architectures):
+
+* 2-D projections: input-feature dim → FSDP axes, output-feature dim → TP
+  (`wq/wk/wv/w1/w3/router`, and the SSM projections); reversed for the
+  output projections (`wo/w2/s_wo`).  With scan-over-layers the leading L
+  axis is unsharded.
+* MoE experts: expert dim → TP (expert parallelism); D dim → FSDP.
+* Embedding/head: vocab → TP (padded to 128 so it always divides), d_model
+  unsharded (tables are small relative to the FSDP savings and lookups stay
+  local); the head's contraction runs TP-sharded into a vocab-sharded logits
+  tensor.
+* Norm scales and biases: replicated.
+* Optimizer state mirrors parameter sharding leaf-for-leaf.
+
+Activations: batch → data axes.  Decode KV caches: batch → data, seq → TP
+(sequence parallelism; the baseline lets XLA resolve attention over the
+sharded seq axis — see EXPERIMENTS.md §Perf for the shard_map upgrade).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_MIN_SIZE = 2**16  # leave tiny tensors replicated
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if not axes:
+        return False
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= mesh.shape[a]
+    return dim % total == 0 and dim >= total
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                scan_layers: bool = True) -> P:
+    fsdp = data_axes(mesh)
+    tp = tp_axis(mesh)
+    name = path.split("/")[-1]
+
+    if name in ("embed",):
+        # shard d_model, NOT vocab: token gathers stay shard-local (a
+        # vocab-sharded table turns every lookup into a permute chain)
+        return P(None, tp) if _divisible(shape[1], mesh, tp) else P(None, None)
+    if name in ("head",):
+        return P(None, tp) if _divisible(shape[1], mesh, tp) else P(None, None)
+    if name in ("final_norm", "enc_norm") or name.startswith("ln") or name == "s_gbias":
+        return P(*([None] * len(shape)))
+
+    # stacked layer arrays: strip the leading L axis from the rule
+    lead: Tuple[Any, ...] = (None,) if scan_layers else ()
+    core = shape[1:] if scan_layers else shape
+
+    def spec(*parts):
+        out = lead + tuple(parts)
+        return P(*out)
+
+    if name in ("e_w1", "e_w3"):           # (E, D, F): EP x FSDP
+        ep = tp if _divisible(core[0], mesh, tp) else None
+        fs = fsdp if _divisible(core[1], mesh, fsdp) else None
+        return spec(ep, fs, None)
+    if name == "e_w2":                      # (E, F, D)
+        ep = tp if _divisible(core[0], mesh, tp) else None
+        fs = fsdp if _divisible(core[2], mesh, fsdp) else None
+        return spec(ep, None, fs)
+    if len(core) == 2:
+        d_in, d_out = core
+        if name in ("wo", "w2", "s_wo", "xwo"):
+            a = tp if _divisible(d_in, mesh, tp) else None
+            b = fsdp if _divisible(d_out, mesh, fsdp) else None
+            return spec(a, b)
+        # default: in → FSDP, out → TP
+        a = fsdp if _divisible(d_in, mesh, fsdp) else None
+        b = tp if _divisible(d_out, mesh, tp) else None
+        return spec(a, b)
+    return P(*([None] * len(shape)))
+
+
+def params_pspecs(abstract_params, mesh: Mesh, scan_layers: bool = True):
+    """PartitionSpec tree matching the abstract parameter tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        specs.append(param_pspec(name, leaf.shape, mesh, scan_layers))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def params_shardings(abstract_params, mesh: Mesh, scan_layers: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(abstract_params, mesh, scan_layers))
+
+
+# -- activations / batches ----------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch_size: int) -> P:
+    dp = data_axes(mesh)
+    if _divisible(batch_size, mesh, dp):
+        return P(dp)
+    # small batches (e.g. long_500k's batch=1): replicate over data
+    return P(None)
+
+
+def batch_pspecs(batch_abstract, mesh: Mesh):
+    def leaf_spec(leaf):
+        bp = batch_pspec(mesh, leaf.shape[0])
+        return P(*(bp + tuple([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(leaf_spec, batch_abstract)
+
+
+def cache_pspecs(cache_abstract, mesh: Mesh):
+    """Decode-cache sharding: (L, B, kvH, S, hd) — batch→data, seq→TP."""
+    dp = data_axes(mesh)
+    tp = tp_axis(mesh)
+
+    def leaf_spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v"):
+            L, b, kvh, s, hd = leaf.shape
+            bspec = dp if _divisible(b, mesh, dp) else None
+            sspec = tp if _divisible(s, mesh, tp) else None
+            return P(None, bspec, None, sspec, None)
+        if name == "ssm":
+            L, b, nh, dk, dv = leaf.shape
+            bspec = dp if _divisible(b, mesh, dp) else None
+            hspec = tp if _divisible(nh, mesh, tp) else None
+            return P(None, bspec, hspec, None, None)
+        return P(*([None] * len(leaf.shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat])

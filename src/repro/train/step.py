@@ -1,0 +1,106 @@
+"""Loss + train_step factory: remat'd forward, microbatch accumulation,
+optional error-feedback gradient compression before the optimizer."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.train import compression
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    residual: Any  # error-feedback buffer (None leaves when compression off)
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Sharded-vocab-safe CE over the padded vocab.
+
+    The vocab axis is TP-sharded at scale, so this avoids any op that would
+    force an all-gather of the (B, S, V) logits: padding is masked with an
+    iota compare (local), the label logit is extracted with a masked local
+    reduction (psum of (B, S) — tiny), and logsumexp reduces over the
+    sharded axis (all-reduce of (B, S)).  take_along_axis / concatenate
+    formulations materialize or gather the full-vocab tensor (≈24 GB/device
+    at train_4k scale) — measured, not hypothetical."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          len(logits.shape) - 1)
+    if vpad > vocab_size:
+        logits = jnp.where(vocab_iota < vocab_size, logits, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    return (lse - label_logit).mean()
+
+
+def init_train_state(model: Model, rng, *, compress: bool = False) -> TrainState:
+    params = model.init(rng)
+    residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if compress else None
+    return TrainState(params=params, opt=init_opt_state(params), residual=residual)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, aux_weight: float = 0.01,
+                    compress: bool = False):
+    """Builds train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the batch on axis 0 and accumulates gradients
+    with a lax.scan — activation memory drops by the microbatch factor while
+    keeping one optimizer step per global batch.
+    """
+    vocab = model.cfg.vocab_size
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        return cross_entropy(logits, batch["labels"], vocab) + aux_weight * aux
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        def split(x):
+            # strided split: microbatch m takes elements m::microbatches, so
+            # each microbatch stays evenly spread across the sharded batch
+            # axis (a batch-major reshape would put microbatch 0 entirely on
+            # the first half of the data shards — XLA then replicates)
+            b = x.shape[0]
+            return x.reshape(b // microbatches, microbatches,
+                             *x.shape[1:]).swapaxes(0, 1)
+
+        mb = jax.tree.map(split, batch)
+
+        def acc_step(carry, mbatch):
+            loss_acc, g_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            return (loss_acc + loss, g_acc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(acc_step, (jnp.float32(0.0), zero), mb)
+        scale = 1.0 / microbatches
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, g_sum)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = compute_grads(state.params, batch)
+        residual = state.residual
+        comp_err = jnp.float32(0.0)
+        if compress:
+            grads, residual, comp_err = compression.compress_tree(grads, residual)
+        params, opt, metrics = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss, compression_err=comp_err)
+        return TrainState(params, opt, residual), metrics
+
+    return train_step

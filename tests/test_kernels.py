@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_agg import block_agg
+from repro.kernels.filtered_agg import filtered_agg
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.gla_chunk import gla_chunked
+
+
+# -- block_agg ----------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", [64, 128, 200])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_block_agg_matches_ref(block_rows, dtype):
+    rng = np.random.default_rng(0)
+    n_blocks = 40
+    if dtype == np.int32:
+        col = rng.integers(0, 100, n_blocks * block_rows).astype(dtype)
+    else:
+        col = rng.normal(10, 3, n_blocks * block_rows).astype(dtype)
+    valid = (rng.random(n_blocks * block_rows) < 0.7).astype(np.float32)
+    ids = rng.choice(n_blocks, size=7, replace=False).astype(np.int32)
+    a = np.asarray(block_agg(jnp.asarray(col), jnp.asarray(valid), block_rows, ids))
+    b = np.asarray(block_agg(jnp.asarray(col), jnp.asarray(valid), block_rows, ids,
+                             use_ref=True))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_block_agg_agrees_with_host_numpy():
+    rng = np.random.default_rng(1)
+    block_rows, n_blocks = 64, 20
+    col = rng.normal(0, 1, n_blocks * block_rows).astype(np.float32)
+    valid = np.ones(n_blocks * block_rows, np.float32)
+    ids = np.array([2, 9], np.int32)
+    out = np.asarray(block_agg(jnp.asarray(col), jnp.asarray(valid), block_rows, ids))
+    for j, b in enumerate(ids):
+        seg = col[b * block_rows:(b + 1) * block_rows]
+        assert out[j, 0] == pytest.approx(block_rows)
+        assert out[j, 1] == pytest.approx(seg.sum(), rel=1e-4)
+        assert out[j, 2] == pytest.approx((seg ** 2).sum(), rel=1e-4)
+        assert out[j, 3] == pytest.approx(seg.min(), rel=1e-5)
+        assert out[j, 4] == pytest.approx(seg.max(), rel=1e-5)
+
+
+def test_block_agg_single_block_and_all_blocks():
+    rng = np.random.default_rng(2)
+    col = jnp.asarray(rng.normal(size=6 * 128).astype(np.float32))
+    valid = jnp.ones(6 * 128, jnp.float32)
+    for ids in (np.array([0]), np.arange(6)):
+        a = np.asarray(block_agg(col, valid, 128, ids))
+        b = np.asarray(block_agg(col, valid, 128, ids, use_ref=True))
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+# -- filtered_agg --------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", [64, 128])
+def test_filtered_agg_matches_ref(block_rows):
+    rng = np.random.default_rng(3)
+    n_blocks = 30
+    mk = lambda: jnp.asarray(rng.normal(1, 1, n_blocks * block_rows).astype(np.float32))
+    x, y, f1, f2, f3 = mk(), mk(), mk(), mk(), mk()
+    valid = jnp.asarray((rng.random(n_blocks * block_rows) < 0.85).astype(np.float32))
+    ids = rng.choice(n_blocks, size=9, replace=False).astype(np.int32)
+    bounds = (-0.5, 1.2, 0.0, 2.5, 1.0)
+    a = np.asarray(filtered_agg(x, y, f1, f2, f3, valid, block_rows, ids, bounds))
+    b = np.asarray(filtered_agg(x, y, f1, f2, f3, valid, block_rows, ids, bounds,
+                                use_ref=True))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_filtered_agg_empty_predicate():
+    rng = np.random.default_rng(4)
+    n, br = 10, 64
+    mk = lambda: jnp.asarray(rng.normal(size=n * br).astype(np.float32))
+    x, y, f1, f2, f3 = mk(), mk(), mk(), mk(), mk()
+    valid = jnp.ones(n * br, jnp.float32)
+    out = np.asarray(filtered_agg(x, y, f1, f2, f3, valid, br, np.arange(3),
+                                  (5.0, 6.0, 5.0, 6.0, -100.0)))
+    np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+
+# -- flash attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("seq,d", [(64, 32), (96, 64), (128, 128)])
+def test_flash_attention_matches_ref(causal, seq, d):
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, seq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, seq, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, seq, d)).astype(np.float32))
+    a = np.asarray(flash_attention(q, k, v, causal=causal, bq=32, bk=32))
+    b = np.asarray(flash_attention(q, k, v, causal=causal, use_ref=True))
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_gqa_and_ragged_seq():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(0, 1, (2, 8, 50, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 70, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 70, 32)).astype(np.float32))
+    a = np.asarray(flash_attention(q, k, v, causal=False, bq=32, bk=32))
+    b = np.asarray(flash_attention(q, k, v, causal=False, use_ref=True))
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 64))).astype(jnp.bfloat16)
+    a = np.asarray(flash_attention(q, k, v, causal=True, bq=32, bk=32),
+                   dtype=np.float32)
+    b = np.asarray(flash_attention(q, k, v, causal=True, use_ref=True),
+                   dtype=np.float32)
+    np.testing.assert_allclose(a, b, rtol=3e-2, atol=3e-2)
+
+
+# -- gla_chunk -------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,chunk", [(64, 32), (96, 32), (80, 32), (128, 64)])
+@pytest.mark.parametrize("dk,dv", [(16, 32), (64, 64)])
+def test_gla_chunked_matches_recurrence(T, chunk, dk, dv):
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, T, dk)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, T, dk)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, T, dv)).astype(np.float32))
+    g = jnp.asarray(-rng.uniform(0.001, 0.2, (1, 2, T, dk)).astype(np.float32))
+    o1, s1 = gla_chunked(q, k, v, g, chunk=chunk)
+    o2, s2 = gla_chunked(q, k, v, g, use_ref=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=3e-3, atol=3e-3)
+
+
+def test_gla_strong_decay_forgets_prefix():
+    """With very strong decay, outputs reduce to (almost) diag-only attention."""
+    rng = np.random.default_rng(9)
+    T, dk, dv = 64, 8, 8
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, T, dk)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, T, dk)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (1, 1, T, dv)).astype(np.float32))
+    g = jnp.full((1, 1, T, dk), -8.0, jnp.float32)
+    o, _ = gla_chunked(q, k, v, g, chunk=32)
+    exp = np.einsum("bhtd,bhtd->bht", np.asarray(q), np.asarray(k))[..., None] * np.asarray(v)
+    np.testing.assert_allclose(np.asarray(o), exp, rtol=2e-2, atol=2e-2)
+
+
+def test_gla_zero_decay_is_cumulative_linear_attention():
+    rng = np.random.default_rng(10)
+    T, d = 32, 8
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, T, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, T, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (1, 1, T, d)).astype(np.float32))
+    g = jnp.zeros((1, 1, T, d), jnp.float32)
+    o, s = gla_chunked(q, k, v, g, chunk=16)
+    qn, kn, vn = (np.asarray(a)[0, 0] for a in (q, k, v))
+    attn = np.tril(qn @ kn.T)
+    np.testing.assert_allclose(np.asarray(o)[0, 0], attn @ vn, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s)[0, 0], kn.T @ vn, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,150 @@
+"""Launch substrate: HLO analyzer, shape specs, sharding rules, mesh plans.
+
+The 512-device dry-run itself runs as its own process (it must set XLA_FLAGS
+before jax init); here we unit-test its building blocks on 1 device plus a
+synthetic HLO covering the loop/collective/DUS accounting rules.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.specs import SHAPES, batch_specs, cell_supported, input_specs
+from repro.train.sharding import param_pspec
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+SYNTH_HLO = """
+HloModule jit_f, num_partitions=4
+
+%body (param: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %param = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%param), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%param), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,64]{1,0} all-gather(%dot.1), channel_id=1, replica_groups=[1,4]<=[4], dimensions={1}
+  %one = s32[] constant(1)
+  %next = s32[] add(%i, %one)
+  ROOT %tuple = (s32[], f32[8,16]{1,0}) tuple(%next, %dot.1)
+}
+
+%cond (param.1: (s32[], f32[8,16])) -> pred[] {
+  %param.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i.1 = s32[] get-tuple-element(%param.1), index=0
+  %trip = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i.1, %trip), direction=LT
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %arg)
+  %loop = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body
+  %buf = f32[40,16]{1,0} constant({...})
+  %upd = f32[1,16]{1,0} constant({...})
+  %idx = s32[] constant(0)
+  %dus = f32[40,16]{1,0} dynamic-update-slice(%buf, %upd, %idx, %idx)
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_synthetic_hlo_loop_and_collective_accounting():
+    res = analyze_hlo(SYNTH_HLO)
+    # dot: 2*8*16*16 flops, x5 loop trips
+    assert res["flops_per_device"] == pytest.approx(5 * 2 * 8 * 16 * 16)
+    # all-gather: out 8*64*4 bytes * (4-1)/4, x5 trips
+    assert res["collective_bytes_per_device"] == pytest.approx(
+        5 * 8 * 64 * 4 * 0.75)
+    assert res["collective_counts"]["all-gather"] == 5
+    assert res["entry"].startswith("main")
+    # DUS counts only the update slice (1*16*4 bytes), not the 40x16 buffer.
+    # Per loop iter: dot (512*2 + 1024) + all-gather in+out (512 + 2048)
+    # + scalars = ~4620 bytes; x5 + the DUS update ~= 23.2 kB — crucially
+    # NOT the 40x16 buffer per iteration (that's the ~20x inflation the
+    # in-place rule prevents).
+    assert 20_000 < res["hbm_bytes_per_device"] < 26_000
+
+
+def test_analyzer_on_real_compiled_module():
+    @jax.jit
+    def f(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jnp.zeros((3, 32, 32))
+    x = jnp.zeros((8, 32))
+    compiled = f.lower(w, x).compile()
+    res = analyze_hlo(compiled.as_text())
+    assert res["flops_per_device"] == pytest.approx(3 * 2 * 8 * 32 * 32, rel=0.01)
+    assert res["collective_bytes_per_device"] == 0.0  # single device
+
+
+# -- shape specs ---------------------------------------------------------------
+
+def test_shapes_cover_assignment():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_applicability_matches_design():
+    runnable = {a for a in ARCHITECTURES
+                if cell_supported(ARCHITECTURES[a], SHAPES["long_500k"])[0]}
+    assert runnable == {"rwkv6-7b", "hymba-1.5b"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHITECTURES))
+def test_input_specs_are_abstract_and_complete(arch):
+    cfg = ARCHITECTURES[arch]
+    for shape_name, shape in SHAPES.items():
+        if not cell_supported(cfg, shape)[0]:
+            continue
+        specs = input_specs(cfg, shape_name)
+        leaves = jax.tree.leaves(specs)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        if shape.kind == "train":
+            b = specs["batch"]
+            assert b["tokens"].shape[0] == shape.global_batch
+            assert "labels" in b
+            if cfg.family == "vlm":
+                assert b["tokens"].shape[1] + cfg.num_patches == shape.seq_len
+        else:
+            if shape.kind == "decode":
+                assert specs["token"].shape == (shape.global_batch,)
+                assert specs["cache"]["pos"].shape == (shape.global_batch,)
+
+
+def test_decode_cache_is_bounded_for_subquadratic():
+    hymba = ARCHITECTURES["hymba-1.5b"]
+    specs = input_specs(hymba, "long_500k")
+    k = specs["cache"]["k"]
+    assert k.shape[3] == hymba.sliding_window  # ring buffer, not 524288
+
+
+# -- sharding rules ---------------------------------------------------------------
+
+def test_param_pspec_rules_single_device_mesh():
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # nothing divides a 1x1 mesh... everything still legal (replicated)
+    assert param_pspec("layers/wq", (24, 2048, 2048), mesh) == P(None, ("data",), "model")
+
+
+def test_param_pspec_divisibility_guard():
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # odd dims fall back to replication rather than invalid shardings
+    spec = param_pspec("layers/wk", (24, 2047, 129), mesh)
+    assert spec == P(None, ("data",), "model")  # 1x1 divides everything
+
+
+def test_vocab_padding_divisible_by_tp():
+    from repro.models.model import padded_vocab
+
+    for cfg in ARCHITECTURES.values():
+        assert padded_vocab(cfg) % 16 == 0  # TP=16 always divides

@@ -1,0 +1,174 @@
+"""End-to-end TAQA/PilotDB behaviour (Theorem 3.1 guarantee + fallbacks)."""
+
+import numpy as np
+import pytest
+
+from repro.core import CompositeAgg, ErrorSpec, PilotDB, Query, RowSamplingAQP
+from repro.engine import logical as L
+from repro.engine.datagen import make_skewed, tpch_catalog
+from repro.engine.executor import Executor
+from repro.engine.expr import And, Col
+
+
+@pytest.fixture(scope="module")
+def db():
+    cat = tpch_catalog(scale_rows=600_000, block_rows=32, seed=0)
+    cat["skewed"] = make_skewed(400_000, 32, num_groups=4, seed=2)
+    return PilotDB(Executor(cat), large_table_rows=50_000)
+
+
+Q6_PRED = And(Col("l_shipdate").between(100, 1500),
+              And(Col("l_discount").between(0.02, 0.08), Col("l_quantity") < 24))
+
+
+def q6():
+    return Query(child=L.Filter(L.Scan("lineitem"), Q6_PRED),
+                 aggs=(CompositeAgg("revenue", "sum",
+                                    Col("l_extendedprice") * Col("l_discount")),))
+
+
+def rel_err(ans, exact, name, g=0):
+    t = exact.values[exact.names.index(name), g]
+    a = ans.values[ans.names.index(name), g]
+    return abs(a - t) / abs(t)
+
+
+def test_guarantee_simple_sum(db):
+    spec = ErrorSpec(error=0.08, confidence=0.95)
+    exact = db.exact(q6())
+    errs = []
+    for seed in range(8):
+        ans = db.query(q6(), spec, seed=seed)
+        assert ans.report.fallback is None, ans.report.fallback
+        errs.append(rel_err(ans, exact, "revenue"))
+    assert max(errs) <= spec.error  # all 8 runs within target
+
+
+def test_sampled_plan_scans_less(db):
+    spec = ErrorSpec(error=0.08, confidence=0.95)
+    ans = db.query(q6(), spec, seed=1)
+    total = ans.report.pilot_scanned_bytes + ans.report.final_scanned_bytes
+    assert total < 0.5 * ans.report.exact_scanned_bytes
+
+
+def test_guarantee_grouped_multi_agg(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9)
+    q = Query(child=L.Scan("lineitem"),
+              aggs=(CompositeAgg("qty", "sum", Col("l_quantity")),
+                    CompositeAgg("cnt", "count"),
+                    CompositeAgg("avgp", "avg", Col("l_extendedprice"))),
+              group_by="l_returnflag", max_groups=3)
+    exact = db.exact(q)
+    for seed in (0, 1):
+        ans = db.query(q, spec, seed=seed)
+        assert ans.report.fallback is None
+        for g in range(3):
+            for name in ans.names:
+                assert rel_err(ans, exact, name, g) <= spec.error
+
+
+def test_guarantee_join_query(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9)
+    q = Query(child=L.Filter(
+        L.Join(L.Scan("lineitem"), L.Scan("orders"), "l_orderkey", "o_orderkey"),
+        Col("o_orderdate") < 1200),
+        aggs=(CompositeAgg("rev", "sum", Col("l_extendedprice")),))
+    exact = db.exact(q)
+    ans = db.query(q, spec, seed=3)
+    assert ans.report.fallback is None
+    assert rel_err(ans, exact, "rev") <= spec.error
+
+
+def test_guarantee_skewed_data(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9)
+    q = Query(child=L.Filter(L.Scan("skewed"), Col("s_filter") < 0.6),
+              aggs=(CompositeAgg("m", "sum", Col("s_measure")),),
+              group_by="s_group", max_groups=4)
+    exact = db.exact(q)
+    ans = db.query(q, spec, seed=5)
+    assert ans.report.fallback is None
+    for g in range(4):
+        assert rel_err(ans, exact, "m", g) <= spec.error
+
+
+def test_ratio_composite_aggregate(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9)
+    q = Query(child=L.Filter(L.Scan("lineitem"), Col("l_shipdate") < 2000),
+              aggs=(CompositeAgg("promo", "ratio",
+                                 Col("l_extendedprice") * Col("l_discount"),
+                                 expr2=Col("l_extendedprice")),))
+    exact = db.exact(q)
+    ans = db.query(q, spec, seed=4)
+    assert ans.report.fallback is None
+    assert rel_err(ans, exact, "promo") <= spec.error
+
+
+def test_fallback_small_table():
+    cat = tpch_catalog(scale_rows=5_000, block_rows=32, seed=3)
+    db = PilotDB(Executor(cat), large_table_rows=50_000)
+    ans = db.query(q6(), ErrorSpec(error=0.05, confidence=0.95))
+    assert ans.report.fallback == "no large table to sample"
+    # exact answer still returned
+    exact = db.exact(q6())
+    assert rel_err(ans, exact, "revenue") == 0.0
+
+
+def test_fallback_infeasible_tight_error(db):
+    """A 0.1% error target cannot be met at <=10% sampling here -> exact."""
+    ans = db.query(q6(), ErrorSpec(error=0.001, confidence=0.99), seed=0)
+    assert ans.report.fallback is not None
+    exact = db.exact(q6())
+    assert rel_err(ans, exact, "revenue") == 0.0
+
+
+def test_fallback_empty_selection(db):
+    q = Query(child=L.Filter(L.Scan("lineitem"), Col("l_shipdate") > 99_999),
+              aggs=(CompositeAgg("s", "sum", Col("l_quantity")),))
+    ans = db.query(q, ErrorSpec(error=0.05, confidence=0.95), seed=0)
+    assert ans.report.fallback is not None  # L_mu <= 0 or no groups
+
+
+def test_strict_group_coverage_falls_back(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9, group_min_size=10,
+                     strict_group_coverage=True)
+    q = Query(child=L.Scan("lineitem"),
+              aggs=(CompositeAgg("qty", "sum", Col("l_quantity")),),
+              group_by="l_returnflag", max_groups=3)
+    ans = db.query(q, spec, seed=0)
+    # covering 10-row groups needs theta_p > cap -> strict mode goes exact
+    assert ans.report.fallback is not None
+    assert "coverage" in ans.report.fallback
+
+
+def test_report_latency_decomposition(db):
+    ans = db.query(q6(), ErrorSpec(error=0.08, confidence=0.95), seed=2)
+    r = ans.report
+    assert r.pilot_time_s > 0 and r.final_time_s > 0 and r.plan_time_s >= 0
+    assert r.plan is not None and 0 < min(r.plan.rates.values()) <= 0.10
+
+
+def test_row_baseline_guarantee_and_cost(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9)
+    rdb = RowSamplingAQP(db.ex, large_table_rows=50_000)
+    exact = db.exact(q6())
+    ans = rdb.query(q6(), spec, seed=11)
+    assert ans.report.fallback is None
+    assert rel_err(ans, exact, "revenue") <= spec.error
+    # row sampling cannot skip blocks: final scan pays the full table
+    li_bytes = db.ex.table_bytes("lineitem")
+    assert ans.report.final_scanned_bytes >= li_bytes
+
+
+def test_block_beats_row_scan_bytes(db):
+    spec = ErrorSpec(error=0.10, confidence=0.9)
+    rdb = RowSamplingAQP(db.ex, large_table_rows=50_000)
+    a_blk = db.query(q6(), spec, seed=7)
+    a_row = rdb.query(q6(), spec, seed=7)
+    assert a_blk.report.final_scanned_bytes < a_row.report.final_scanned_bytes
+
+
+def test_unsupported_aggregate_rejected():
+    with pytest.raises(ValueError):
+        CompositeAgg("bad", "max", Col("x"))
+    with pytest.raises(ValueError):
+        L.AggSpec("count_distinct", None, "cd")
