@@ -12,6 +12,8 @@ kernels implement:
     count collapse (T sequential steps -> T/chunk GEMM steps).
 
 Kernel-vs-ref numerical equivalence is covered by tests/test_kernels.py.
+End-to-end eager-vs-compiled query execution (the physical layer that routes
+plans through these kernels) is measured in bench_compiled.py.
 """
 
 from __future__ import annotations

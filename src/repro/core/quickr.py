@@ -24,6 +24,7 @@ from repro.core.allocation import allocate
 from repro.core.spec import ErrorSpec
 from repro.core.taqa import ApproxAnswer, PilotDB, Query, TaqaReport, _combine
 from repro.engine import logical as L
+from repro.engine.executor import EmptySampleError
 
 
 @dataclasses.dataclass
@@ -72,7 +73,11 @@ class RowSamplingAQP(PilotDB):
         report.theta_pilot = theta_p
         t0 = time.perf_counter()
         pplan = L.rewrite_scans(plan, {table: L.SampleClause("row", theta_p, seed)})
-        pres = self.ex.execute(pplan)
+        try:
+            pres = self.ex.execute(pplan)
+        except EmptySampleError:
+            report.pilot_time_s = time.perf_counter() - t0
+            return self._exact(q, plan, comp_channels, report, "pilot sample empty")
         # Re-run with squared exprs to get row-level variances.
         sq_aggs = []
         for a in plan.aggs:
@@ -147,7 +152,12 @@ class RowSamplingAQP(PilotDB):
         report.plan = SamplingPlan(rates={table: theta_needed})
         t0 = time.perf_counter()
         fplan = L.rewrite_scans(plan, {table: L.SampleClause("row", theta_needed, seed + 977)})
-        res = self.ex.execute(fplan)
+        try:
+            res = self.ex.execute(fplan)
+        except EmptySampleError as e:
+            report.final_time_s = time.perf_counter() - t0
+            return self._exact(q, plan, comp_channels, report,
+                               f"final sample empty ({e.table})")
         report.final_time_s = time.perf_counter() - t0
         report.final_scanned_bytes = res.scanned_bytes
         values = _combine(q, comp_channels, res.values)

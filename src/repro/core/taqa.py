@@ -24,7 +24,7 @@ from repro.core.planner import Constraint, pick_plan, solve_candidates
 from repro.core.spec import CompositeAgg, ErrorSpec, SamplingPlan
 from repro.engine import cost as cost_mod
 from repro.engine import logical as L
-from repro.engine.executor import Executor, PilotStats
+from repro.engine.executor import EmptySampleError, Executor, PilotStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,7 +244,16 @@ class PilotDB:
         samples = {t: L.SampleClause("block", r, seed + 977)
                    for t, r in chosen.rates.items() if r < 1.0}
         final_plan = L.rewrite_scans(plan, samples)
-        res = self.ex.execute(final_plan)
+        try:
+            res = self.ex.execute(final_plan)
+        except EmptySampleError as e:
+            # The planner's rate drew zero blocks — no unbiased upscale
+            # exists, so PilotDB's "never return an unguaranteed estimate"
+            # contract forces the exact path (explicitly, not via a
+            # fabricated scale).
+            report.final_time_s = time.perf_counter() - t0
+            return self._exact(q, plan, comp_channels, report,
+                               f"final sample empty ({e.table})")
         report.final_time_s = time.perf_counter() - t0
         report.final_scanned_bytes = res.scanned_bytes
 

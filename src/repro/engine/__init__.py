@@ -1,7 +1,8 @@
 from repro.engine.table import BlockTable
 from repro.engine.expr import Col, Const, BinOp, Cmp, Between, And, Or, Not, eval_expr
 from repro.engine import logical
-from repro.engine.executor import Executor
+from repro.engine import physical
+from repro.engine.executor import EmptySampleError, Executor
 
 __all__ = [
     "BlockTable",
@@ -15,5 +16,7 @@ __all__ = [
     "Not",
     "eval_expr",
     "logical",
+    "physical",
+    "EmptySampleError",
     "Executor",
 ]

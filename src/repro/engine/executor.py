@@ -1,14 +1,27 @@
 """Plan executor.
 
-Executes logical plans eagerly with jnp operators, tracking the *scan cost*
-(bytes moved HBM→VMEM) per table — block-sampled scans pay only for sampled
-slabs, row-sampled and exact scans stream everything (Fig. 1 / Fig. 4).
+Executes logical plans through the compiled physical layer
+(:mod:`repro.engine.physical`): each plan shape lowers once to a single
+jitted executable — block-sampled scans route through the Pallas
+block-aggregation kernels (or their XLA twin off-TPU) — and repeated
+structurally-identical queries hit the compile cache.  The *scan cost*
+(bytes moved HBM→VMEM) is attributed by that layer: block-sampled scans pay
+only for sampled slabs, row-sampled and exact scans stream everything
+(Fig. 1 / Fig. 4).
+
+The pre-physical eager interpreter is retained (``use_compiled=False``) as
+the comparison baseline for tests and benchmarks.
 
 Besides plain execution it produces the two artifacts TAQA needs:
 
 * ``QueryResult``     — per-group aggregate values (+ lineage/cost),
 * ``execute_pilot``   — per-block (and per block-pair, for Lemma 4.8) pilot
-                        statistics of every simple aggregate.
+                        statistics of every simple aggregate, computed with
+                        zero host syncs between the scan and the statistics.
+
+A sampled scan that draws zero blocks/rows raises :class:`EmptySampleError`
+instead of fabricating an upscale factor — callers (``core.taqa``) take
+their exact-execution fallback path explicitly.
 """
 
 from __future__ import annotations
@@ -21,8 +34,27 @@ import numpy as np
 
 from repro.engine import logical as L
 from repro.engine import ops
-from repro.engine.sampling import SampleInfo, block_sample, row_sample
+from repro.engine.physical import PhysicalCompiler, ScanRuntime, scan_cost_bytes
+from repro.engine.sampling import (SampleInfo, block_sample, draw_block_ids,
+                                   pad_block_ids, row_sample)
 from repro.engine.table import BlockTable
+
+
+class EmptySampleError(RuntimeError):
+    """A sampled scan produced zero sampled units (blocks or rows).
+
+    No unbiased upscale exists for an empty sample; rather than fabricating a
+    scale (the old ``max(n, 1)`` behaviour, which silently degraded the
+    estimate), the executor surfaces the condition so the caller can fall
+    back to exact execution or re-sample at a higher rate.
+    """
+
+    def __init__(self, table: str, method: str, rate: float):
+        self.table = table
+        self.method = method
+        self.rate = rate
+        super().__init__(
+            f"sampled scan of {table!r} ({method}, rate={rate}) drew 0 units")
 
 
 @dataclasses.dataclass
@@ -64,8 +96,11 @@ class PilotStats:
 
 
 class Executor:
-    def __init__(self, catalog: Dict[str, BlockTable]):
+    def __init__(self, catalog: Dict[str, BlockTable], *,
+                 use_compiled: bool = True, kernel_mode: str = "auto"):
         self.catalog = dict(catalog)
+        self.use_compiled = use_compiled
+        self.physical = PhysicalCompiler(self.catalog, kernel_mode=kernel_mode)
 
     # -- table metadata (the "DBMS statistics" TAQA consults) ---------------
     def table_rows(self, name: str) -> int:
@@ -80,7 +115,97 @@ class Executor:
     def table_bytes(self, name: str) -> int:
         return self.catalog[name].total_bytes()
 
-    # -- relational execution ------------------------------------------------
+    def compile_cache_info(self):
+        """Hit/miss/size counters of the physical-plan compile cache."""
+        return self.physical.cache_info()
+
+    # -- host-side sampling decisions ---------------------------------------
+    def _scan_runtimes(
+        self, plan: L.Plan,
+    ) -> Tuple[Dict[str, ScanRuntime], Dict[str, SampleInfo]]:
+        """Draw every scan's TABLESAMPLE decision (host RNG, as a DBMS picks
+        pages before scanning) and package it as compiled-executable inputs.
+
+        Uses the same RNG stream as the eager samplers, so the two paths see
+        identical samples for identical seeds.
+        """
+        runtimes: Dict[str, ScanRuntime] = {}
+        infos: Dict[str, SampleInfo] = {}
+        for s in plan.scans():
+            table = self.catalog[s.table]
+            if s.sample is None:
+                runtimes[s.table] = ScanRuntime("none")
+                infos[s.table] = SampleInfo(
+                    "none", 1.0, 0, table.num_blocks, table.num_blocks,
+                    np.arange(table.num_blocks),
+                    scanned_bytes=scan_cost_bytes(table, "none"))
+            elif s.sample.method == "block":
+                ids = draw_block_ids(table.num_blocks, s.sample.rate, s.sample.seed)
+                phys, n_real, n_phys = pad_block_ids(ids, table.num_blocks)
+                runtimes[s.table] = ScanRuntime("block", n_real, n_phys, phys)
+                infos[s.table] = SampleInfo(
+                    "block", s.sample.rate, s.sample.seed, n_real,
+                    table.num_blocks, ids,
+                    scanned_bytes=scan_cost_bytes(table, "block", n_real))
+            else:
+                rng = np.random.default_rng(s.sample.seed)
+                keep = rng.random(table.padded_rows) < s.sample.rate
+                n_kept = int((np.asarray(table.valid) & keep).sum())
+                runtimes[s.table] = ScanRuntime("row", keep_mask=keep)
+                info = SampleInfo("row", s.sample.rate, s.sample.seed, None,
+                                  table.num_blocks, None,
+                                  scanned_bytes=scan_cost_bytes(table, "row"))
+                info.n_sampled_rows = n_kept
+                info.n_total_rows = table.num_rows
+                infos[s.table] = info
+        return runtimes, infos
+
+    @staticmethod
+    def _check_empty(infos: Dict[str, SampleInfo]) -> None:
+        for name, info in infos.items():
+            if info.rate >= 1.0:
+                continue
+            if info.method == "block" and not info.n_sampled_blocks:
+                raise EmptySampleError(name, "block", info.rate)
+            if info.method == "row" and not info.n_sampled_rows:
+                raise EmptySampleError(name, "row", info.rate)
+
+    @staticmethod
+    def _upscale(infos: Dict[str, SampleInfo]) -> float:
+        """Upscaling (§3.3 final rewriting step 2).  With exactly one sampled
+        table we use the Hájek scale N/n (conditional-SRS estimator matching
+        BSAP's Lemma-B.1 bounds); with two or more we use Horvitz–Thompson
+        1/∏θ (matching Lemma 4.8's variance expansion).  AVG is the ratio of
+        two upscaled sums, so the scale cancels either way.  Empty samples
+        raise EmptySampleError before this point — no fabricated scales.
+        """
+        sampled = [i for i in infos.values()
+                   if i.method in ("block", "row") and i.rate < 1.0]
+        if len(sampled) == 1:
+            info = sampled[0]
+            if info.method == "block":
+                return info.n_total_blocks / info.n_sampled_blocks
+            n = info.n_sampled_rows
+            return (info.n_total_rows or n) / n
+        scale = 1.0
+        for info in sampled:
+            scale /= info.rate
+        return scale
+
+    @staticmethod
+    def _compose_values(plan: L.Aggregate, sums: np.ndarray, counts: np.ndarray,
+                        scale: float) -> np.ndarray:
+        values = np.zeros_like(sums)
+        for i, a in enumerate(plan.aggs):
+            if a.op in ("sum", "count"):
+                values[i] = sums[i] * scale
+            elif a.op == "avg":
+                with np.errstate(invalid="ignore", divide="ignore"):
+                    values[i] = np.where(counts > 0,
+                                         sums[i] / np.maximum(counts, 1), np.nan)
+        return values
+
+    # -- eager relational execution (the pre-physical interpreter) -----------
     def _run_relational(
         self, plan: L.Plan, infos: Dict[str, SampleInfo],
         pair_for: Optional[Tuple[str, str]] = None,
@@ -122,6 +247,33 @@ class Executor:
 
     # -- public API ----------------------------------------------------------
     def execute(self, plan: L.Aggregate) -> QueryResult:
+        if self.use_compiled:
+            return self._execute_compiled(plan)
+        return self._execute_eager(plan)
+
+    def _execute_compiled(self, plan: L.Aggregate) -> QueryResult:
+        t0 = time.perf_counter()
+        runtimes, infos = self._scan_runtimes(plan)
+        self._check_empty(infos)
+        compiled = self.physical.compile_query(plan, runtimes)
+        sums_d, counts_d = compiled(runtimes)
+        # Single device→host boundary: the whole scan→aggregate pipeline ran
+        # as one executable.
+        sums = np.asarray(sums_d, dtype=np.float64)
+        counts = np.asarray(counts_d, dtype=np.float64)
+        values = self._compose_values(plan, sums, counts, self._upscale(infos))
+        return QueryResult(
+            agg_names=[a.name for a in plan.aggs],
+            values=values,
+            raw_sums=sums,
+            group_counts=counts,
+            group_present=counts > 0,
+            scanned_bytes=compiled.scanned_bytes(runtimes),
+            sample_infos=infos,
+            wall_time_s=time.perf_counter() - t0,
+        )
+
+    def _execute_eager(self, plan: L.Aggregate) -> QueryResult:
         t0 = time.perf_counter()
         infos: Dict[str, SampleInfo] = {}
         table = self._run_relational(plan.child, infos)
@@ -136,32 +288,8 @@ class Executor:
         counts = np.asarray(
             ops.grouped_counts(table, plan.group_by, plan.max_groups), dtype=np.float64)
 
-        # Upscaling (§3.3 final rewriting step 2).  With exactly one sampled
-        # table we use the Hájek scale N/n (conditional-SRS estimator matching
-        # BSAP's Lemma-B.1 bounds); with two or more we use Horvitz–Thompson
-        # 1/∏θ (matching Lemma 4.8's variance expansion).  AVG is the ratio of
-        # two upscaled sums, so the scale cancels either way.
-        sampled = [i for i in infos.values()
-                   if i.method in ("block", "row") and i.rate < 1.0]
-        if len(sampled) == 1:
-            info = sampled[0]
-            if info.method == "block":
-                n = max(info.n_sampled_blocks or 0, 1)
-                scale = info.n_total_blocks / n
-            else:
-                n = max(info.n_sampled_rows or 0, 1)
-                scale = (info.n_total_rows or n) / n
-        else:
-            scale = 1.0
-            for info in sampled:
-                scale /= info.rate
-        values = np.zeros_like(sums)
-        for i, a in enumerate(plan.aggs):
-            if a.op in ("sum", "count"):
-                values[i] = sums[i] * scale
-            elif a.op == "avg":
-                with np.errstate(invalid="ignore", divide="ignore"):
-                    values[i] = np.where(counts > 0, sums[i] / np.maximum(counts, 1), np.nan)
+        self._check_empty(infos)
+        values = self._compose_values(plan, sums, counts, self._upscale(infos))
         scanned = sum(info.scanned_bytes for info in infos.values())
         return QueryResult(
             agg_names=names,
@@ -185,6 +313,67 @@ class Executor:
         """Run the pilot query: block-sample ``pilot_table`` at theta_p and
         compute per-block (and per block-pair) sums of each simple aggregate.
         """
+        # The compiled lowering traces one pair table; the (currently unused
+        # by TAQA) multi-pair shape takes the eager path so both paths return
+        # pair_sums for every requested table.
+        if self.use_compiled and len(pair_tables) <= 1:
+            return self._execute_pilot_compiled(plan, pilot_table, theta_p,
+                                                seed, pair_tables)
+        return self._execute_pilot_eager(plan, pilot_table, theta_p, seed,
+                                         pair_tables)
+
+    def _execute_pilot_compiled(self, plan, pilot_table, theta_p, seed,
+                                pair_tables) -> PilotStats:
+        t0 = time.perf_counter()
+        table = self.catalog[pilot_table]
+        ids = draw_block_ids(table.num_blocks, theta_p, seed)
+        n_real = int(len(ids))
+        names = [a.name for a in plan.aggs] + ["__rows"]
+
+        if n_real == 0:
+            other = {s.table for s in plan.scans() if s.table != pilot_table}
+            scanned = sum(self.catalog[t].total_bytes() for t in other)
+            return PilotStats(
+                table=pilot_table, theta_p=theta_p, n_sampled_blocks=0,
+                n_total_blocks=table.num_blocks, block_rows=table.block_rows,
+                agg_names=names,
+                block_sums=np.zeros((0, plan.max_groups, len(names))),
+                group_present=np.zeros(plan.max_groups, bool),
+                pair_sums={}, right_total_blocks={}, scanned_bytes=scanned,
+                wall_time_s=time.perf_counter() - t0)
+
+        phys, n_real, n_phys = pad_block_ids(ids, table.num_blocks)
+        runtime = ScanRuntime("block", n_real, n_phys, phys)
+        pair_table = pair_tables[0] if pair_tables else None
+        compiled = self.physical.compile_pilot(plan, pilot_table, runtime,
+                                               pair_table)
+        # One executable from sampled scan to per-block statistics — zero
+        # host syncs in between; the conversions below are the boundary.
+        bs_d, present_d, pair_d = compiled({pilot_table: runtime})
+        block_sums = np.asarray(bs_d, dtype=np.float64)[:n_real]
+        present = np.asarray(present_d, dtype=bool)
+        pair_sums: Dict[str, np.ndarray] = {}
+        right_total: Dict[str, int] = {}
+        if pair_d is not None:
+            pair_sums[pair_table] = np.asarray(pair_d, dtype=np.float64)[:n_real]
+            right_total[pair_table] = self.catalog[pair_table].num_blocks
+        return PilotStats(
+            table=pilot_table,
+            theta_p=theta_p,
+            n_sampled_blocks=n_real,
+            n_total_blocks=table.num_blocks,
+            block_rows=table.block_rows,
+            agg_names=names,
+            block_sums=block_sums,
+            group_present=present,
+            pair_sums=pair_sums,
+            right_total_blocks=right_total,
+            scanned_bytes=compiled.scanned_bytes({pilot_table: runtime}),
+            wall_time_s=time.perf_counter() - t0,
+        )
+
+    def _execute_pilot_eager(self, plan, pilot_table, theta_p, seed,
+                             pair_tables) -> PilotStats:
         t0 = time.perf_counter()
         sampled_plan = L.rewrite_scans(
             plan, {pilot_table: L.SampleClause("block", theta_p, seed)})

@@ -123,16 +123,19 @@ def block_group_sums(table: BlockTable, exprs, group_by: Optional[str],
     statistics BSAP consumes.  ``block_ids`` lists the sampled origin blocks;
     blocks without surviving rows contribute zeros (they are real population
     units with zero contribution).
+
+    Built on the physical layer's fused multi-channel scatter: all channels
+    run in one jitted graph and the device→host transfer happens exactly once
+    at this boundary (the compiled pilot path in ``engine.physical`` avoids
+    even that — this entry point serves the eager executor and direct users).
     """
-    gid = group_ids(table, group_by, max_groups)
-    n_origin = int(table.num_origin_blocks)
-    seg = table.block_id.astype(jnp.int32) * max_groups + gid
-    out = []
-    for expr in exprs:
-        vals = _agg_values(table, expr)
-        dense = jnp.zeros(n_origin * max_groups, jnp.float32).at[seg].add(vals)
-        out.append(np.asarray(dense).reshape(n_origin, max_groups))
-    stacked = np.stack(out, axis=-1)  # (n_origin, groups, aggs)
+    from repro.engine import physical
+
+    dense = physical.dense_block_group_sums(
+        table.columns, table.valid, table.block_id,
+        exprs=tuple(exprs), group_by=group_by, max_groups=max_groups,
+        n_origin=int(table.num_origin_blocks))
+    stacked = np.asarray(dense).transpose(1, 2, 0)  # (n_origin, groups, aggs)
     return stacked[np.asarray(block_ids, dtype=np.int64)]
 
 
@@ -142,22 +145,16 @@ def block_pair_sums(table: BlockTable, exprs, lblock_ids: np.ndarray,
 
     Returns shape (len(lblock_ids), n_right_blocks, num_aggs).  Left origin
     blocks are compacted to their position among ``lblock_ids`` before the
-    scatter so the dense buffer is n_p × N2, not N1 × N2.
+    scatter so the dense buffer is n_p × N2, not N1 × N2.  The compaction
+    LUT, channel evaluation, and scatter are one jitted graph in the physical
+    layer; the single host transfer happens here.
     """
+    from repro.engine import physical
+
     lblock_ids = np.asarray(lblock_ids, dtype=np.int64)
-    n_p = len(lblock_ids)
-    n_origin = int(table.num_origin_blocks)
-    # origin block id -> compact pilot index (rows from unsampled blocks
-    # cannot occur here, but map them to a scratch slot for safety)
-    lut = np.full(n_origin, n_p, dtype=np.int32)
-    lut[lblock_ids] = np.arange(n_p, dtype=np.int32)
-    compact = jnp.asarray(lut)[table.block_id]
-    rb = table.columns[rblock_col].astype(jnp.int32)
-    rb = jnp.where(table.valid, rb, 0)
-    seg = compact * n_right_blocks + rb
-    out = []
-    for expr in exprs:
-        vals = _agg_values(table, expr)
-        dense = jnp.zeros((n_p + 1) * n_right_blocks, jnp.float32).at[seg].add(vals)
-        out.append(np.asarray(dense).reshape(n_p + 1, n_right_blocks)[:n_p])
-    return np.stack(out, axis=-1)
+    dense = physical.dense_block_pair_sums(
+        table.columns, table.valid, table.block_id,
+        jnp.asarray(lblock_ids, jnp.int32),
+        exprs=tuple(exprs), rblock_col=rblock_col,
+        n_right=n_right_blocks, n_origin=int(table.num_origin_blocks))
+    return np.asarray(dense).transpose(1, 2, 0)

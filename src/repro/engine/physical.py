@@ -1,0 +1,769 @@
+"""Physical plans: compiled query pipelines over the kernel layer.
+
+The engine is layered as::
+
+    logical.Plan  --lower-->  compiled physical executable  --run-->  stats
+      (what to compute)        (one jitted XLA graph,              (device
+       §2.3 plan algebra        kernels for the scan+agg            arrays)
+       + TABLESAMPLE clauses)   hot path)
+
+``PhysicalCompiler`` lowers a :class:`logical.Aggregate` tree into a single
+jit-compiled executable and caches it under a *plan signature* — the operator
+tree shape with sampling rates/seeds stripped, the referenced column set and
+dtypes, ``block_rows``, ``max_groups``, and the bucketed sampled-block count.
+Repeated pilot/final queries (and many concurrent users issuing structurally
+identical queries, the serve-layer scenario) therefore skip recompilation;
+``cache_info()`` exposes the hit/miss counters.
+
+Kernel routing.  Block-sampled scans and their downstream aggregations are
+routed through the Pallas kernels in ``repro.kernels`` when the plan shape
+allows:
+
+* ``pallas_filtered`` — single-table ``Aggregate(Filter*(Scan))`` with a
+  conjunctive range predicate and SUM(x*y)/SUM(x)/COUNT channels lowers onto
+  :func:`repro.kernels.filtered_agg.filtered_agg` (TPC-H Q6 shape): sampled
+  block ids travel by scalar prefetch, so unsampled slabs never leave HBM and
+  the scan pays θ·bytes, not bytes.
+* ``pallas_block``   — filterless ``Aggregate(Scan)`` with SUM(col)/COUNT
+  channels lowers onto :func:`repro.kernels.block_agg.block_agg`.
+* ``xla_gather``     — everything else (joins, unions, GROUP BY, composite
+  expressions) lowers to the kernels' XLA twin: a device-side slab gather
+  with static (bucketed) shape followed by one fused multi-channel
+  scatter-add.  Same semantics, one graph, no host round-trips.
+
+Pallas routes are selected on TPU backends (``kernel_mode="auto"``) where the
+kernels compile to real DMA programs; on CPU containers interpret mode would
+run the grid in Python, so ``auto`` falls back to ``xla_gather``.  Tests force
+``kernel_mode="pallas"`` at small sizes to pin route equivalence.
+
+Scan-cost attribution lives here too: a compiled executable knows which
+tables its kernels stream and charges ``n_real · block_rows · row_bytes`` for
+block-sampled scans and full heap bytes for row-sampled/exact scans — the
+same row-store accounting the samplers used, now owned by the layer that
+actually moves the bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import logical as L
+from repro.engine.expr import And, Between, BinOp, Cmp, Col, Expr, eval_expr
+from repro.engine.table import BlockTable
+from repro.kernels.block_agg import block_agg
+from repro.kernels.filtered_agg import filtered_agg
+
+_BIG_BOUND = 3.0e38       # "unbounded" predicate slot, f32-safe
+_INT_MAX = np.int32(2 ** 31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Scan-cost attribution
+# ---------------------------------------------------------------------------
+
+def scan_cost_bytes(table: BlockTable, method: str, n_real: int = 0) -> int:
+    """Bytes a scan of ``table`` moves, attributed by the kernel layer.
+
+    Block-sampled scans pay only for real sampled slabs (θ·bytes — the
+    padding blocks of the bucketed gather never move in a real storage
+    engine); row-sampled and exact scans stream the full heap.  The single
+    source of truth for both ``SampleInfo.scanned_bytes`` and compiled
+    executables' totals.
+    """
+    if method == "block":
+        return n_real * table.block_rows * table.row_bytes()
+    return table.total_bytes()
+
+
+# ---------------------------------------------------------------------------
+# Runtime sampling decisions (the host-side TABLESAMPLE draw)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScanRuntime:
+    """Per-table runtime inputs of a compiled executable.
+
+    The Bernoulli *decision* stays host-side (as a DBMS decides pages before
+    scanning them); everything downstream of the decision runs on device.
+    ``ids`` is padded to the bucketed length ``n_phys`` with zeros — padding
+    entries are masked out inside the graph via ``n_real``, so the executable
+    shape (and its cache entry) is shared across nearby sample sizes.
+    """
+
+    method: str                             # "none" | "block" | "row"
+    n_real: int = 0                         # real sampled blocks (block) — host int
+    n_phys: int = 0                         # bucketed physical block count
+    ids: Optional[np.ndarray] = None        # (n_phys,) int32, zero-padded
+    keep_mask: Optional[np.ndarray] = None  # (padded_rows,) bool (row method)
+
+    def sig(self) -> tuple:
+        if self.method == "block":
+            return ("block", self.n_phys)
+        return (self.method,)
+
+
+# ---------------------------------------------------------------------------
+# Plan signatures
+# ---------------------------------------------------------------------------
+
+def plan_signature(plan: L.Plan, runtimes: Optional[Dict[str, ScanRuntime]] = None,
+                   extra: tuple = ()) -> tuple:
+    """Hashable structural key for the compile cache.
+
+    Sampling rates and seeds are stripped (they are runtime data); which
+    tables are sampled, by which method, and at which bucketed size is kept
+    (those are shapes).  Predicate/expression *constants* stay in the key:
+    the filtered_agg kernel bakes them as compile-time bounds, exactly as a
+    DBMS compiles parametrized scans per constant set.
+    """
+    rsig = tuple(sorted((t, r.sig()) for t, r in (runtimes or {}).items()))
+    return (L.strip_samples(plan), rsig, tuple(extra))
+
+
+def _referenced_columns(plan: L.Plan) -> set:
+    cols: set = set()
+
+    def walk(p: L.Plan):
+        if isinstance(p, L.Aggregate):
+            for a in p.aggs:
+                if a.expr is not None:
+                    cols.update(a.expr.columns())
+            if p.group_by is not None:
+                cols.add(p.group_by)
+            walk(p.child)
+        elif isinstance(p, L.Filter):
+            cols.update(p.pred.columns())
+            walk(p.child)
+        elif isinstance(p, L.Join):
+            cols.add(p.left_key)
+            cols.add(p.right_key)
+            walk(p.left)
+            walk(p.right)
+        elif isinstance(p, L.Union):
+            for c in p.inputs:
+                walk(c)
+        elif isinstance(p, L.Scan):
+            pass
+        else:
+            raise TypeError(p)
+
+    walk(plan)
+    return cols
+
+
+def _needed_by_table(plan: L.Plan, catalog: Dict[str, BlockTable]) -> Dict[str, Tuple[str, ...]]:
+    """Referenced columns per scanned table (column pruning for the gather).
+
+    Column names are assumed unique across joined tables — the same invariant
+    ``ops.join_unique`` enforces with its collision check.
+    """
+    referenced = _referenced_columns(plan)
+    needed: Dict[str, Tuple[str, ...]] = {}
+    for s in plan.scans():
+        tab = catalog[s.table]
+        needed[s.table] = tuple(sorted(referenced.intersection(tab.columns)))
+    return needed
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-channel aggregation primitives (the XLA twin of the kernels)
+# ---------------------------------------------------------------------------
+
+def channel_matrix(columns: Dict[str, jnp.ndarray], valid: jnp.ndarray,
+                   exprs: Sequence[Optional[Expr]]) -> jnp.ndarray:
+    """Stack every aggregate channel's per-row values: (num_channels, rows).
+
+    ``None`` channels are COUNT (ones).  Invalid rows contribute zeros, so a
+    single scatter-add over the stacked matrix replaces the legacy
+    per-expression Python loop.
+    """
+    rows = valid.shape[0]
+    outs = []
+    for e in exprs:
+        if e is None:
+            v = jnp.ones(rows, jnp.float32)
+        else:
+            v = jnp.broadcast_to(eval_expr(e, columns).astype(jnp.float32), (rows,))
+        outs.append(jnp.where(valid, v, 0.0))
+    return jnp.stack(outs)
+
+
+@functools.partial(jax.jit, static_argnames=("exprs", "group_by", "max_groups", "n_origin"))
+def dense_block_group_sums(columns, valid, block_id, *, exprs: tuple,
+                           group_by: Optional[str], max_groups: int,
+                           n_origin: int) -> jnp.ndarray:
+    """Per-(origin-block, group) channel sums: (num_channels, n_origin, max_groups).
+
+    One fused scatter-add across all channels; the whole computation is one
+    jitted graph with zero host syncs (``ops.block_group_sums`` converts the
+    result exactly once at the boundary).
+    """
+    rows = valid.shape[0]
+    if group_by is None:
+        gid = jnp.zeros(rows, jnp.int32)
+    else:
+        gid = jnp.clip(columns[group_by].astype(jnp.int32), 0, max_groups - 1)
+    vals = channel_matrix(columns, valid, exprs)
+    seg = block_id.astype(jnp.int32) * max_groups + gid
+    dense = jnp.zeros((len(exprs), n_origin * max_groups), jnp.float32).at[:, seg].add(vals)
+    return dense.reshape(len(exprs), n_origin, max_groups)
+
+
+@functools.partial(jax.jit, static_argnames=("exprs", "rblock_col", "n_right", "n_origin"))
+def dense_block_pair_sums(columns, valid, block_id, lblock_ids, *, exprs: tuple,
+                          rblock_col: str, n_right: int, n_origin: int) -> jnp.ndarray:
+    """Per-(compact left block, right block) sums: (num_channels, n_p, n_right).
+
+    Left origin blocks compact to their position among ``lblock_ids`` inside
+    the graph (scatter-built LUT); rows from unsampled blocks land in a
+    scratch slot that is sliced away.
+    """
+    n_p = lblock_ids.shape[0]
+    lut = jnp.full(n_origin, n_p, jnp.int32).at[lblock_ids].set(
+        jnp.arange(n_p, dtype=jnp.int32), mode="drop")
+    compact = lut[block_id]
+    rb = jnp.where(valid, columns[rblock_col].astype(jnp.int32), 0)
+    seg = compact * n_right + rb
+    vals = channel_matrix(columns, valid, exprs)
+    dense = jnp.zeros((len(exprs), (n_p + 1) * n_right), jnp.float32).at[:, seg].add(vals)
+    return dense.reshape(len(exprs), n_p + 1, n_right)[:, :n_p]
+
+
+# ---------------------------------------------------------------------------
+# Traced relational pipeline (runs inside jit; static shapes from signatures)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Traced:
+    columns: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray
+    block_id: jnp.ndarray           # origin block id per row
+    pblock: Optional[jnp.ndarray]   # compact pilot-block index (pilot lowering)
+    block_rows: int
+    num_origin_blocks: int
+
+
+class _Tracer:
+    """Evaluates a logical plan symbolically over runtime device arrays.
+
+    Each ``trace`` call happens once per compiled signature (inside
+    ``jax.jit``); at runtime the resulting XLA graph executes with no Python
+    in the loop and no device→host transfers.
+    """
+
+    def __init__(self, catalog: Dict[str, BlockTable],
+                 needed: Dict[str, Tuple[str, ...]],
+                 methods: Dict[str, str],
+                 pilot_table: Optional[str] = None,
+                 n_phys_pilot: int = 0,
+                 pair_table: Optional[str] = None):
+        self.catalog = catalog
+        self.needed = needed
+        self.methods = methods            # table -> "none" | "block" | "row"
+        self.pilot_table = pilot_table
+        self.n_phys_pilot = n_phys_pilot  # scratch pblock value == n_phys_pilot
+        self.pair_table = pair_table
+
+    # -- scans ---------------------------------------------------------------
+    def _scratch_pblock(self, rows: int) -> Optional[jnp.ndarray]:
+        if self.pilot_table is None:
+            return None
+        return jnp.full(rows, self.n_phys_pilot, jnp.int32)
+
+    def _trace_scan(self, plan: L.Scan, rt) -> _Traced:
+        name = plan.table
+        tab = self.catalog[name]
+        cols = {c: rt["cols"][name][c] for c in self.needed[name]}
+        valid = rt["valid"][name]
+        bid = rt["bid"][name]
+        method = self.methods.get(name, "none")
+        br = tab.block_rows
+        if method == "block":
+            ids = rt["ids"][name]
+            nreal = rt["nreal"][name]
+            n_phys = ids.shape[0]
+            row_idx = (ids[:, None].astype(jnp.int32) * br
+                       + jnp.arange(br, dtype=jnp.int32)[None, :]).reshape(-1)
+            cols = {c: v[row_idx] for c, v in cols.items()}
+            real = jnp.repeat(jnp.arange(n_phys, dtype=jnp.int32) < nreal, br)
+            valid = valid[row_idx] & real
+            bid = bid[row_idx]
+            if name == self.pilot_table:
+                pblock = jnp.repeat(jnp.arange(n_phys, dtype=jnp.int32), br)
+            else:
+                pblock = self._scratch_pblock(n_phys * br)
+            return _Traced(cols, valid, bid, pblock, br, tab.num_origin_blocks)
+        if method == "row":
+            valid = valid & rt["mask"][name]
+        return _Traced(cols, valid, bid, self._scratch_pblock(tab.padded_rows),
+                       br, tab.num_origin_blocks)
+
+    # -- composite operators -------------------------------------------------
+    def trace(self, plan: L.Plan, rt) -> _Traced:
+        if isinstance(plan, L.Scan):
+            return self._trace_scan(plan, rt)
+        if isinstance(plan, L.Filter):
+            child = self.trace(plan.child, rt)
+            mask = eval_expr(plan.pred, child.columns)
+            return dataclasses.replace(child, valid=child.valid & mask)
+        if isinstance(plan, L.Join):
+            return self._trace_join(plan, rt)
+        if isinstance(plan, L.Union):
+            return self._trace_union(plan, rt)
+        raise TypeError(plan)
+
+    def _trace_join(self, plan: L.Join, rt) -> _Traced:
+        left = self.trace(plan.left, rt)
+        right = self.trace(plan.right, rt)
+        lkey = left.columns[plan.left_key].astype(jnp.int32)
+        rkey = jnp.where(right.valid,
+                         right.columns[plan.right_key].astype(jnp.int32), _INT_MAX)
+        order = jnp.argsort(rkey)
+        sorted_keys = rkey[order]
+        pos = jnp.searchsorted(sorted_keys, lkey)
+        pos_c = jnp.clip(pos, 0, sorted_keys.shape[0] - 1)
+        found = sorted_keys[pos_c] == lkey
+        match = order[pos_c]
+        valid = left.valid & found
+        new_cols = dict(left.columns)
+        for cname, col in right.columns.items():
+            if cname == plan.right_key:
+                continue
+            if cname in new_cols:
+                raise ValueError(f"column name collision in join: {cname}")
+            new_cols[cname] = col[match]
+        right_scans = plan.right.scans()
+        if (self.pair_table is not None and len(right_scans) == 1
+                and right_scans[0].table == self.pair_table):
+            new_cols[f"__rblock_{self.pair_table}"] = right.block_id[match].astype(jnp.int32)
+        return dataclasses.replace(left, columns=new_cols, valid=valid)
+
+    def _trace_union(self, plan: L.Union, rt) -> _Traced:
+        parts = [self.trace(p, rt) for p in plan.inputs]
+        names = set(parts[0].columns)
+        br = parts[0].block_rows
+        offset = 0
+        cols = {c: [] for c in names}
+        valids, bids, pblocks = [], [], []
+        for t in parts:
+            if set(t.columns) != names or t.block_rows != br:
+                raise ValueError("union inputs must share schema and block size")
+            for c in names:
+                cols[c].append(t.columns[c])
+            valids.append(t.valid)
+            bids.append(t.block_id + offset)
+            pblocks.append(t.pblock)
+            offset += t.num_origin_blocks
+        pblock = (jnp.concatenate(pblocks)
+                  if self.pilot_table is not None else None)
+        return _Traced({c: jnp.concatenate(v) for c, v in cols.items()},
+                       jnp.concatenate(valids), jnp.concatenate(bids),
+                       pblock, br, offset)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-shape matching (plan suffix -> Pallas lowering)
+# ---------------------------------------------------------------------------
+
+def _single_table_chain(child: L.Plan, table: str) -> Optional[List[Expr]]:
+    """If ``child`` is Filter*(Scan(table)), return its predicates (maybe [])."""
+    preds: List[Expr] = []
+    node = child
+    while isinstance(node, L.Filter):
+        preds.append(node.pred)
+        node = node.child
+    if isinstance(node, L.Scan) and node.table == table:
+        return preds
+    return None
+
+
+def _flatten_conjuncts(pred: Expr) -> List[Expr]:
+    if isinstance(pred, And):
+        return _flatten_conjuncts(pred.left) + _flatten_conjuncts(pred.right)
+    return [pred]
+
+
+def _match_q6_bounds(preds: List[Expr]) -> Optional[Tuple[Tuple[str, str, str], tuple]]:
+    """Map a conjunctive range predicate onto filtered_agg's fixed slots.
+
+    The kernel evaluates ``lo1<=f1<=hi1 AND lo2<=f2<=hi2 AND f3<c3`` with
+    compile-time bounds.  Two-sided/non-strict conditions fill the f1/f2
+    slots, a single strict upper bound fills f3; unused slots are padded with
+    ±3e38 (never binding for f32 data).  Returns ((f1,f2,f3) column names,
+    bounds) or None when the predicate doesn't fit.
+    """
+    conjuncts: List[Expr] = []
+    for p in preds:
+        conjuncts.extend(_flatten_conjuncts(p))
+    two_sided: List[Tuple[str, float, float]] = []
+    strict: List[Tuple[str, float]] = []
+    for c in conjuncts:
+        if isinstance(c, Between) and isinstance(c.arg, Col):
+            two_sided.append((c.arg.name, float(c.lo), float(c.hi)))
+        elif isinstance(c, Cmp) and isinstance(c.left, Col) and not c.right.columns():
+            v = float(eval_expr(c.right, {}))
+            if c.op == "<":
+                strict.append((c.left.name, v))
+            elif c.op == "<=":
+                two_sided.append((c.left.name, -_BIG_BOUND, v))
+            elif c.op == ">=":
+                two_sided.append((c.left.name, v, _BIG_BOUND))
+            else:
+                return None
+        else:
+            return None
+    if len(two_sided) > 2 or len(strict) > 1:
+        return None
+    anchor = (two_sided + [(s[0], -_BIG_BOUND, _BIG_BOUND) for s in strict])
+    if not anchor:
+        return None  # no predicate at all: the block_agg route handles it
+    while len(two_sided) < 2:
+        two_sided.append((anchor[0][0], -_BIG_BOUND, _BIG_BOUND))
+    if not strict:
+        strict.append((anchor[0][0], _BIG_BOUND))
+    (f1, lo1, hi1), (f2, lo2, hi2) = two_sided
+    f3, c3 = strict[0]
+    return (f1, f2, f3), (lo1, hi1, lo2, hi2, c3)
+
+
+def _match_channels(exprs: Sequence[Optional[Expr]], *, products: bool):
+    """Channels as kernel-computable specs.
+
+    ``products=True`` (filtered route) accepts COUNT / SUM(col) / SUM(a*b);
+    ``products=False`` (block route) accepts COUNT / SUM(col).  Returns a
+    list of ("count",) | ("prod", x, y|None) specs, or None on mismatch.
+    """
+    specs = []
+    for e in exprs:
+        if e is None:
+            specs.append(("count",))
+        elif isinstance(e, Col):
+            specs.append(("prod", e.name, None))
+        elif (products and isinstance(e, BinOp) and e.op == "*"
+              and isinstance(e.left, Col) and isinstance(e.right, Col)):
+            specs.append(("prod", e.left.name, e.right.name))
+        else:
+            return None
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Compiled executables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _CompiledBase:
+    fn: Callable
+    catalog: Dict[str, BlockTable]
+    needed: Dict[str, Tuple[str, ...]]
+    methods: Dict[str, str]
+    route: str
+
+    def _runtime_args(self, runtimes: Dict[str, ScanRuntime]) -> dict:
+        rt = {"cols": {}, "valid": {}, "bid": {}, "ids": {}, "nreal": {}, "mask": {}}
+        for name in self.needed:
+            tab = self.catalog[name]
+            rt["cols"][name] = {c: tab.columns[c] for c in self.needed[name]}
+            rt["valid"][name] = tab.valid
+            rt["bid"][name] = tab.block_id
+            r = runtimes.get(name)
+            method = self.methods.get(name, "none")
+            if method == "block":
+                rt["ids"][name] = jnp.asarray(r.ids, jnp.int32)
+                rt["nreal"][name] = jnp.asarray(r.n_real, jnp.int32)
+            elif method == "row":
+                rt["mask"][name] = jnp.asarray(r.keep_mask)
+        return rt
+
+    def __call__(self, runtimes: Dict[str, ScanRuntime]):
+        return self.fn(self._runtime_args(runtimes))
+
+    def scanned_bytes(self, runtimes: Dict[str, ScanRuntime]) -> int:
+        """Total scan cost of one run (see :func:`scan_cost_bytes`)."""
+        total = 0
+        for name in self.needed:
+            method = self.methods.get(name, "none")
+            n_real = runtimes[name].n_real if method == "block" else 0
+            total += scan_cost_bytes(self.catalog[name], method, n_real)
+        return total
+
+
+@dataclasses.dataclass
+class CompiledQuery(_CompiledBase):
+    """fn(rt) -> (sums (num_channels, max_groups), counts (max_groups,))."""
+
+
+@dataclasses.dataclass
+class CompiledPilot(_CompiledBase):
+    """fn(rt) -> (block_sums (n_phys, max_groups, num_channels),
+                  group_present (max_groups,) bool,
+                  pair (n_phys, n_right, num_channels) or None)."""
+
+    has_pair: bool = False
+
+
+@dataclasses.dataclass
+class CacheInfo:
+    hits: int = 0
+    misses: int = 0
+    size: int = 0
+
+
+class PhysicalCompiler:
+    """Lowers logical plans to compiled executables, with a signature cache."""
+
+    def __init__(self, catalog: Dict[str, BlockTable], kernel_mode: str = "auto"):
+        if kernel_mode not in ("auto", "pallas", "xla"):
+            raise ValueError(
+                f"kernel_mode must be 'auto', 'pallas', or 'xla', got {kernel_mode!r}")
+        self.catalog = catalog
+        self.kernel_mode = kernel_mode
+        self._cache: Dict[tuple, _CompiledBase] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self.hits, self.misses, len(self._cache))
+
+    # -- route policy --------------------------------------------------------
+    def _use_pallas(self) -> bool:
+        if self.kernel_mode == "auto":
+            # Interpret mode executes the grid step-by-step in the Pallas
+            # interpreter — fine for correctness tests, hopeless as a hot
+            # path — so off-TPU the same physical plan lowers to the XLA twin.
+            return jax.default_backend() == "tpu"
+        return self.kernel_mode == "pallas"
+
+    def _geometry_sig(self, plan: L.Plan, needed) -> tuple:
+        out = []
+        for t in sorted(needed):
+            tab = self.catalog[t]
+            out.append((t, tab.block_rows, tab.padded_rows, tab.num_origin_blocks,
+                        tuple((c, str(tab.columns[c].dtype)) for c in needed[t])))
+        return tuple(out)
+
+    def _lookup(self, key, build):
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        compiled = build()
+        self._cache[key] = compiled
+        return compiled
+
+    # -- final / plain queries ----------------------------------------------
+    def compile_query(self, plan: L.Aggregate,
+                      runtimes: Dict[str, ScanRuntime]) -> CompiledQuery:
+        needed = _needed_by_table(plan, self.catalog)
+        key = ("query", self._use_pallas(),
+               plan_signature(plan, runtimes, self._geometry_sig(plan, needed)))
+        return self._lookup(key, lambda: self._build_query(plan, runtimes, needed))
+
+    def _build_query(self, plan, runtimes, needed) -> CompiledQuery:
+        methods = {t: r.method for t, r in runtimes.items()}
+        exprs = tuple(None if a.op == "count" else a.expr for a in plan.aggs)
+        mg = plan.max_groups
+
+        kernel = self._match_query_kernel(plan, runtimes, exprs) if self._use_pallas() else None
+        if kernel is not None:
+            return CompiledQuery(fn=jax.jit(kernel[0]), catalog=self.catalog,
+                                 needed=needed, methods=methods, route=kernel[1])
+
+        tracer = _Tracer(self.catalog, needed, methods)
+
+        def run(rt):
+            tt = tracer.trace(plan.child, rt)
+            rows = tt.valid.shape[0]
+            if plan.group_by is None:
+                gid = jnp.zeros(rows, jnp.int32)
+            else:
+                gid = jnp.clip(tt.columns[plan.group_by].astype(jnp.int32), 0, mg - 1)
+            vals = channel_matrix(tt.columns, tt.valid, exprs)
+            sums = jnp.zeros((len(exprs), mg), jnp.float32).at[:, gid].add(vals)
+            counts = jnp.zeros(mg, jnp.float32).at[gid].add(tt.valid.astype(jnp.float32))
+            return sums, counts
+
+        return CompiledQuery(fn=jax.jit(run), catalog=self.catalog, needed=needed,
+                             methods=methods, route="xla_gather")
+
+    def _match_query_kernel(self, plan, runtimes, exprs):
+        """Whole-query kernel route: one block-sampled table, no groups.
+
+        The grouped totals are the per-block kernel stats summed over sampled
+        blocks, so the Q6/plain shapes skip the gather entirely.
+        """
+        if plan.max_groups != 1 or plan.group_by is not None:
+            return None
+        sampled = [t for t, r in runtimes.items() if r.method != "none"]
+        if len(runtimes) != 1 or len(sampled) != 1 or runtimes[sampled[0]].method != "block":
+            return None
+        table = sampled[0]
+        preds = _single_table_chain(plan.child, table)
+        if preds is None:
+            return None
+        lowered = self._lower_block_stats(table, preds, exprs, with_rows=False)
+        if lowered is None:
+            return None
+        stats_fn, route = lowered
+
+        def run(rt):
+            ch, cnt = stats_fn(rt)      # (n_phys, n_ch), (n_phys,)
+            return ch.sum(axis=0)[:, None], cnt.sum()[None]
+
+        return run, route
+
+    # -- pilot queries -------------------------------------------------------
+    def compile_pilot(self, plan: L.Aggregate, pilot_table: str,
+                      runtime: ScanRuntime,
+                      pair_table: Optional[str] = None) -> CompiledPilot:
+        needed = _needed_by_table(plan, self.catalog)
+        key = ("pilot", self._use_pallas(), pilot_table, pair_table,
+               plan_signature(plan, {pilot_table: runtime},
+                              self._geometry_sig(plan, needed)))
+        return self._lookup(key, lambda: self._build_pilot(
+            plan, pilot_table, runtime.n_phys, pair_table, needed))
+
+    def _build_pilot(self, plan, pilot_table, n_phys, pair_table, needed) -> CompiledPilot:
+        methods = {pilot_table: "block"}
+        mg = plan.max_groups
+        # One channel per simple aggregate plus the trailing "__rows" channel
+        # (group presence + COUNT/AVG planning), matching PilotStats.
+        exprs = tuple([None if a.op == "count" else a.expr for a in plan.aggs] + [None])
+        has_pair = pair_table is not None and any(
+            isinstance(p, L.Join) and [s.table for s in p.right.scans()] == [pair_table]
+            for p in _walk(plan))
+
+        if self._use_pallas() and mg == 1 and not has_pair:
+            preds = _single_table_chain(plan.child, pilot_table)
+            if preds is not None:
+                lowered = self._lower_block_stats(pilot_table, preds, exprs,
+                                                  with_rows=True)
+                if lowered is not None:
+                    stats_fn, route = lowered
+
+                    def run(rt):
+                        ch, _ = stats_fn(rt)               # (n_phys, n_ch)
+                        block_sums = ch[:, None, :]        # mg == 1
+                        present = (ch[:, -1].sum() > 0)[None]
+                        return block_sums, present, None
+
+                    return CompiledPilot(fn=jax.jit(run), catalog=self.catalog,
+                                         needed=needed, methods=methods,
+                                         route=route, has_pair=False)
+
+        tracer = _Tracer(self.catalog, needed, methods, pilot_table=pilot_table,
+                         n_phys_pilot=n_phys, pair_table=pair_table)
+        n_right = self.catalog[pair_table].num_blocks if has_pair else 0
+        rcol = f"__rblock_{pair_table}" if has_pair else None
+
+        def run(rt):
+            tt = tracer.trace(plan.child, rt)
+            rows = tt.valid.shape[0]
+            if plan.group_by is None:
+                gid = jnp.zeros(rows, jnp.int32)
+            else:
+                gid = jnp.clip(tt.columns[plan.group_by].astype(jnp.int32), 0, mg - 1)
+            vals = channel_matrix(tt.columns, tt.valid, exprs)
+            seg = tt.pblock * mg + gid
+            dense = jnp.zeros((len(exprs), (n_phys + 1) * mg),
+                              jnp.float32).at[:, seg].add(vals)
+            bs = dense[:, : n_phys * mg].reshape(len(exprs), n_phys, mg)
+            block_sums = bs.transpose(1, 2, 0)
+            present = block_sums[:, :, -1].sum(axis=0) > 0
+            pair = None
+            if has_pair:
+                rb = jnp.where(tt.valid, tt.columns[rcol], 0)
+                pseg = tt.pblock * n_right + rb
+                pdense = jnp.zeros((len(exprs), (n_phys + 1) * n_right),
+                                   jnp.float32).at[:, pseg].add(vals)
+                pair = pdense[:, : n_phys * n_right].reshape(
+                    len(exprs), n_phys, n_right).transpose(1, 2, 0)
+            return block_sums, present, pair
+
+        return CompiledPilot(fn=jax.jit(run), catalog=self.catalog, needed=needed,
+                             methods=methods, route="xla_gather", has_pair=has_pair)
+
+    # -- Pallas lowering of per-block stats ----------------------------------
+    def _lower_block_stats(self, table: str, preds: List[Expr],
+                           exprs: Sequence[Optional[Expr]], *, with_rows: bool):
+        """Lower Filter*(Scan) per-block channel stats onto the kernels.
+
+        Returns (stats_fn, route) where ``stats_fn(rt)`` yields
+        ``(channel_sums (n_phys, n_ch), counts (n_phys,))`` with padding rows
+        (beyond n_real) zeroed, or None when the shape doesn't fit a kernel.
+        The sampled block ids reach the kernels via scalar prefetch — the
+        unsampled slabs never move.
+        """
+        tab = self.catalog[table]
+        br = tab.block_rows
+        if preds:
+            q6 = _match_q6_bounds(preds)
+            specs = _match_channels(exprs, products=True)
+            if q6 is None or specs is None:
+                return None
+            (f1, f2, f3), bounds = q6
+
+            def stats_fn(rt):
+                cols = rt["cols"][table]
+                valid = rt["valid"][table].astype(jnp.float32)
+                ids = rt["ids"][table]
+                nreal = rt["nreal"][table]
+                n_phys = ids.shape[0]
+                ones = jnp.ones(tab.padded_rows, jnp.float32)
+                outs = {}
+                for spec in specs:
+                    if spec[0] != "prod" or spec[1:] in outs:
+                        continue
+                    x = cols[spec[1]]
+                    y = ones if spec[2] is None else cols[spec[2]]
+                    outs[spec[1:]] = filtered_agg(
+                        x, y, cols[f1], cols[f2], cols[f3], valid, br, ids, bounds)
+                if not outs:  # COUNT-only query: any column works for cnt
+                    c0 = cols[f1]
+                    outs[None] = filtered_agg(c0, c0, cols[f1], cols[f2], cols[f3],
+                                              valid, br, ids, bounds)
+                cnt = next(iter(outs.values()))[:, 0]
+                chans = [cnt if s[0] == "count" else outs[s[1:]][:, 1] for s in specs]
+                mask = (jnp.arange(n_phys) < nreal).astype(jnp.float32)
+                return jnp.stack(chans, axis=1) * mask[:, None], cnt * mask
+
+            return stats_fn, "pallas_filtered"
+
+        specs = _match_channels(exprs, products=False)
+        if specs is None:
+            return None
+
+        def stats_fn(rt):
+            cols = rt["cols"][table]
+            valid = rt["valid"][table].astype(jnp.float32)
+            ids = rt["ids"][table]
+            nreal = rt["nreal"][table]
+            n_phys = ids.shape[0]
+            outs = {}
+            for spec in specs:
+                if spec[0] == "prod" and spec[1] not in outs:
+                    outs[spec[1]] = block_agg(cols[spec[1]], valid, br, ids)
+            if not outs:  # COUNT-only: the cnt lane ignores the value column
+                outs[None] = block_agg(valid, valid, br, ids)
+            cnt = next(iter(outs.values()))[:, 0]
+            chans = [cnt if s[0] == "count" else outs[s[1]][:, 1] for s in specs]
+            mask = (jnp.arange(n_phys) < nreal).astype(jnp.float32)
+            return jnp.stack(chans, axis=1) * mask[:, None], cnt * mask
+
+        return stats_fn, "pallas_block"
+
+
+def _walk(plan: L.Plan):
+    yield plan
+    if isinstance(plan, L.Aggregate):
+        yield from _walk(plan.child)
+    else:
+        for c in plan.children():
+            yield from _walk(c)

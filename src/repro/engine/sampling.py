@@ -36,17 +36,44 @@ class SampleInfo:
     n_total_rows: Optional[int] = None
 
 
-def _bucket(k: int) -> int:
+def bucket_blocks(k: int) -> int:
     """Round the sampled-block count up to the next power of two.  Sampled
-    tables then recur in log-many shapes, so XLA's per-shape executable
-    cache is hit across queries — without bucketing, every distinct sample
-    size recompiles the whole eager op pipeline (~1.4 s, measured: 76
-    compiles per query), drowning the scan savings on warm paths.  The <=2x
-    physical overshoot gathers padding rows that are invalid and excluded
-    from the scanned-bytes accounting."""
+    tables then recur in log-many shapes, so the physical layer's compile
+    cache (and XLA's per-shape executable cache) is hit across queries —
+    without bucketing, every distinct sample size recompiles the whole
+    pipeline (~1.4 s, measured: 76 compiles per query), drowning the scan
+    savings on warm paths.  The <=2x physical overshoot gathers padding rows
+    that are invalid and excluded from the scanned-bytes accounting."""
     if k <= 64:
         return 64
     return 1 << (k - 1).bit_length()
+
+
+_bucket = bucket_blocks  # backward-compatible alias
+
+
+def draw_block_ids(num_blocks: int, rate: float, seed: int) -> np.ndarray:
+    """The host-side Bernoulli block draw — the TABLESAMPLE SYSTEM decision.
+
+    The ONE RNG stream both the eager samplers and the compiled physical
+    path consume, so identical seeds give identical samples on either path.
+    """
+    rng = np.random.default_rng(seed)
+    keep = rng.random(num_blocks) < rate
+    return np.nonzero(keep)[0].astype(np.int32)
+
+
+def pad_block_ids(ids: np.ndarray, num_blocks: int) -> tuple[np.ndarray, int, int]:
+    """Zero-pad sampled ids to the bucketed physical count.
+
+    Returns ``(phys_ids, n_real, n_phys)``; padding entries re-point at
+    block 0 and must be masked out downstream (rows >= n_real).
+    """
+    n_real = int(len(ids))
+    n_phys = min(bucket_blocks(max(n_real, 1)), num_blocks)
+    pad = max(n_phys - n_real, 0)
+    phys = np.concatenate([ids, np.zeros(pad, np.int32)]) if pad else ids
+    return phys, n_real, n_phys
 
 
 def block_sample(table: BlockTable, rate: float, seed: int) -> tuple[BlockTable, SampleInfo]:
@@ -56,21 +83,18 @@ def block_sample(table: BlockTable, rate: float, seed: int) -> tuple[BlockTable,
     copies of block 0 (they contribute nothing to any statistic and are not
     listed in sampled_block_ids); scanned_bytes counts REAL blocks only —
     padding rows would not move in a real storage engine."""
-    rng = np.random.default_rng(seed)
-    keep = rng.random(table.num_blocks) < rate
-    ids = np.nonzero(keep)[0].astype(np.int32)
-    n_real = int(len(ids))
-    target = min(_bucket(max(n_real, 1)), table.num_blocks)
-    pad = max(target - n_real, 0)
-    phys = np.concatenate([ids, np.zeros(pad, np.int32)]) if pad else ids
+    from repro.engine.physical import scan_cost_bytes
+
+    ids = draw_block_ids(table.num_blocks, rate, seed)
+    phys, n_real, _ = pad_block_ids(ids, table.num_blocks)
     sampled = table.gather_blocks(phys)
-    if pad or n_real == 0:
+    if len(phys) > n_real:
         mask = np.ones(len(phys) * table.block_rows, dtype=bool)
         mask[n_real * table.block_rows:] = False
         sampled = sampled.with_valid(sampled.valid & jnp.asarray(mask))
     info = SampleInfo(
         "block", rate, seed, n_real, table.num_blocks, ids,
-        scanned_bytes=n_real * table.block_rows * table.row_bytes())
+        scanned_bytes=scan_cost_bytes(table, "block", n_real))
     return sampled, info
 
 

@@ -10,6 +10,11 @@ Output per sampled block: (count, sum, sum-of-squares, min, max, 0, 0, 0) —
 exactly the per-block statistics the pilot query groups by `ctid` (§3.3) and
 that BSAP's bounds consume (count/sum/sumsq) plus min/max for future outlier
 indexes.  Lane-padded to 8 for clean TPU stores.
+
+Empty-block sentinel: a sampled block with zero valid rows reports
+count=0, sum=0, sumsq=0 and **min=max=NaN** (not the float32 ±3.4e38 extremes
+of the masked reduction).  Consumers must mask min/max on count>0; sums are
+safe to use unmasked.  The oracle in ``ref.py`` follows the same convention.
 """
 
 from __future__ import annotations
@@ -31,8 +36,9 @@ def _kernel(ids_ref, vals_ref, valid_ref, out_ref):
     s = jnp.sum(v * m)
     ss = jnp.sum(v * v * m)
     big = jnp.float32(3.4e38)
-    mn = jnp.min(jnp.where(m > 0, v, big))
-    mx = jnp.max(jnp.where(m > 0, v, -big))
+    nan = jnp.float32(jnp.nan)
+    mn = jnp.where(cnt > 0, jnp.min(jnp.where(m > 0, v, big)), nan)
+    mx = jnp.where(cnt > 0, jnp.max(jnp.where(m > 0, v, -big)), nan)
     zero = jnp.float32(0.0)
     out_ref[0, :] = jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])
 

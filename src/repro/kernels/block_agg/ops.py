@@ -31,6 +31,8 @@ def block_agg(column: jax.Array, valid: jax.Array, block_rows: int,
     """Per-sampled-block (count, sum, sumsq, min, max) for a 1-D column.
 
     column/valid: (num_blocks * block_rows,); ids: sampled block indices.
+    Blocks with zero valid rows report min=max=NaN with count=0 (the
+    empty-block sentinel; mask min/max on count>0 downstream).
     """
     n_blocks = column.shape[0] // block_rows
     v2 = column.reshape(n_blocks, block_rows).astype(jnp.float32)

@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for the block_agg kernel."""
+"""Pure-jnp oracle for the block_agg kernel.
+
+Follows the kernel's empty-block sentinel: blocks with zero valid rows
+report count=0, sum=sumsq=0, min=max=NaN (mask on count>0 downstream).
+"""
 
 from __future__ import annotations
 
@@ -13,7 +17,8 @@ def block_agg_ref(values, valid, ids, *, block_rows: int):
     s = (v * m).sum(axis=1)
     ss = (v * v * m).sum(axis=1)
     big = jnp.float32(3.4e38)
-    mn = jnp.where(m > 0, v, big).min(axis=1)
-    mx = jnp.where(m > 0, v, -big).max(axis=1)
+    nan = jnp.float32(jnp.nan)
+    mn = jnp.where(cnt > 0, jnp.where(m > 0, v, big).min(axis=1), nan)
+    mx = jnp.where(cnt > 0, jnp.where(m > 0, v, -big).max(axis=1), nan)
     z = jnp.zeros_like(cnt)
     return jnp.stack([cnt, s, ss, mn, mx, z, z, z], axis=1)

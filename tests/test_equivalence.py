@@ -10,6 +10,9 @@ consequence numerically by exhaustive enumeration over all 2^N kept sets.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this container")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import equivalence as EQ

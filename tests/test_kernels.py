@@ -45,6 +45,25 @@ def test_block_agg_agrees_with_host_numpy():
         assert out[j, 4] == pytest.approx(seg.max(), rel=1e-5)
 
 
+def test_block_agg_empty_block_sentinel():
+    """A sampled block with zero valid rows reports count=0, sum=sumsq=0 and
+    min=max=NaN (the documented sentinel), in kernel and oracle alike."""
+    rng = np.random.default_rng(11)
+    br, nb = 64, 8
+    col = rng.normal(5, 2, nb * br).astype(np.float32)
+    valid = np.ones(nb * br, np.float32)
+    valid[2 * br:3 * br] = 0.0  # block 2 entirely invalid
+    ids = np.array([1, 2, 5], np.int32)
+    for use_ref in (False, True):
+        out = np.asarray(block_agg(jnp.asarray(col), jnp.asarray(valid), br, ids,
+                                   use_ref=use_ref))
+        assert out[1, 0] == 0.0 and out[1, 1] == 0.0 and out[1, 2] == 0.0
+        assert np.isnan(out[1, 3]) and np.isnan(out[1, 4])
+        # non-empty blocks keep real extrema
+        assert np.isfinite(out[0, 3:5]).all() and np.isfinite(out[2, 3:5]).all()
+        assert out[0, 0] == br
+
+
 def test_block_agg_single_block_and_all_blocks():
     rng = np.random.default_rng(2)
     col = jnp.asarray(rng.normal(size=6 * 128).astype(np.float32))
