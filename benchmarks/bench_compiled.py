@@ -87,7 +87,12 @@ def run() -> dict:
             "compiled": compiled,
             "compile_overhead_s": compiled["first_call_s"] - compiled["steady_state_s"],
             "steady_speedup": eager["steady_state_s"] / compiled["steady_state_s"],
-            "cache": {"hits": info.hits, "misses": info.misses, "size": info.size},
+            "cache": {"hits": info.hits, "misses": info.misses, "size": info.size,
+                      "hit_rate": info.hits / max(info.hits + info.misses, 1)},
+            "scanned_bytes": {
+                "pilot": compiled["pilot_scanned_bytes"],
+                "final": compiled["final_scanned_bytes"],
+            },
             "scanned_bytes_equal": (
                 eager["pilot_scanned_bytes"] == compiled["pilot_scanned_bytes"]
                 and eager["final_scanned_bytes"] == compiled["final_scanned_bytes"]),

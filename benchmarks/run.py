@@ -1,14 +1,44 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows; detailed JSON lands in
-benchmarks/results/.  BENCH_ROWS env var scales the data (default 2M rows).
+benchmarks/results/.  The ``compiled`` bench additionally emits the
+machine-readable ``BENCH_compiled.json`` at the repo root (eager vs compiled
+latency, compile-cache hit rate, scanned bytes) for trajectory tracking.
+BENCH_ROWS env var scales the data (default 2M rows).
 
   PYTHONPATH=src python -m benchmarks.run [--only <name>]
 """
 
 import argparse
+import json
+import os
 import sys
 import time
+
+BENCH_COMPILED_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_compiled.json")
+
+
+def _emit_bench_compiled(payload: dict) -> None:
+    """Flatten the compiled-vs-eager payload into the root JSON artifact."""
+    from benchmarks.common import SCALE_ROWS  # the size the data was built at
+    doc = {"bench": "compiled", "rows": SCALE_ROWS}
+    for name, entry in payload.items():
+        doc[name] = {
+            "eager_steady_s": entry["eager"]["steady_state_s"],
+            "compiled_steady_s": entry["compiled"]["steady_state_s"],
+            "compiled_first_call_s": entry["compiled"]["first_call_s"],
+            "steady_speedup": entry["steady_speedup"],
+            "cache_hit_rate": entry["cache"]["hit_rate"],
+            "cache_hits": entry["cache"]["hits"],
+            "cache_misses": entry["cache"]["misses"],
+            "pilot_scanned_bytes": entry["scanned_bytes"]["pilot"],
+            "final_scanned_bytes": entry["scanned_bytes"]["final"],
+            "scanned_bytes_equal": entry["scanned_bytes_equal"],
+        }
+    with open(BENCH_COMPILED_PATH, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# wrote {os.path.normpath(BENCH_COMPILED_PATH)}", file=sys.stderr)
 
 
 def main() -> None:
@@ -37,7 +67,9 @@ def main() -> None:
     t0 = time.time()
     for name in todo:
         try:
-            benches[name]()
+            payload = benches[name]()
+            if name == "compiled" and payload:
+                _emit_bench_compiled(payload)
         except Exception as e:  # keep the harness going; failures are visible
             print(f"{name},nan,FAILED:{type(e).__name__}:{e}")
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)

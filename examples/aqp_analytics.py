@@ -1,10 +1,12 @@
-"""Grouped + join analytics with guarantees (the paper's harder cases).
+"""Grouped + join analytics with guarantees, through the Session front door.
 
     PYTHONPATH=src python examples/aqp_analytics.py
 
-Demonstrates: Group-By queries (per-group guarantees via Boole allocation),
-composite aggregates (AVG via the corrected division rule), and a PK-FK join
-whose pilot collects Lemma-4.8 block-pair statistics.
+Demonstrates the three client surfaces over one session:
+  * plain SQL with `ERROR e% CONFIDENCE p%` (grouped, join, ratio queries),
+  * the fluent builder (`session.table(...).where(...).agg(...)`),
+  * the concurrent scheduler: a herd of structurally identical queries
+    drains as one signature group, compiling once and running warm.
 """
 
 import os
@@ -14,51 +16,77 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import CompositeAgg, ErrorSpec, PilotDB, Query
-from repro.engine import logical as L
+from repro.api import Session, avg_, count_, sum_
 from repro.engine.datagen import tpch_catalog
-from repro.engine.executor import Executor
 from repro.engine.expr import Col
 
 
-def show(db, name, q, spec, seed=7):
-    exact = db.exact(q)
-    ans = db.query(q, spec, seed=seed)
-    r = ans.report
+def show(name, approx, exact, error_target):
     errs = []
-    for i in range(len(ans.names)):
-        for g in range(ans.values.shape[1]):
-            t = exact.values[i, g]
-            if exact.group_present[g] and np.isfinite(t) and abs(t) > 1e-9:
-                errs.append(abs(ans.values[i, g] - t) / abs(t))
+    a, e = approx.result(), exact.result()
+    for i in range(len(a.names)):
+        for g in range(a.values.shape[1]):
+            t = e.values[i, g]
+            if e.group_present[g] and np.isfinite(t) and abs(t) > 1e-9:
+                errs.append(abs(a.values[i, g] - t) / abs(t))
+    r = approx.report
     frac = (r.pilot_scanned_bytes + r.final_scanned_bytes) / r.exact_scanned_bytes
-    print(f"[{name}] max err {max(errs):.3%} (target {spec.error:.0%}), "
+    print(f"[{name}] max err {max(errs):.3%} (target {error_target:.0%}), "
           f"scanned {frac:.1%}, plan={r.plan.rates if r.plan else r.fallback}")
 
 
 def main():
-    cat = tpch_catalog(scale_rows=2_000_000, block_rows=32, seed=0)
-    db = PilotDB(Executor(cat), large_table_rows=100_000)
-    spec = ErrorSpec(error=0.05, confidence=0.95)
+    rows = int(os.environ.get("EXAMPLE_ROWS", 2_000_000))
+    catalog = tpch_catalog(scale_rows=rows, block_rows=32, seed=0)
+    session = Session(catalog, seed=7)
 
-    show(db, "grouped Q1", Query(
-        child=L.Scan("lineitem"),
-        aggs=(CompositeAgg("qty", "sum", Col("l_quantity")),
-              CompositeAgg("avg_price", "avg", Col("l_extendedprice")),
-              CompositeAgg("orders", "count")),
-        group_by="l_returnflag", max_groups=3), spec)
+    # -- SQL front door ------------------------------------------------------
+    grouped = ("SELECT SUM(l_quantity) AS qty, AVG(l_extendedprice) AS avg_price, "
+               "COUNT(*) AS orders FROM lineitem GROUP BY l_returnflag "
+               "ERROR 5% CONFIDENCE 95%")
+    show("grouped Q1", session.sql(grouped),
+         session.sql(grouped.split(" ERROR")[0]), 0.05)
 
-    show(db, "join     ", Query(
-        child=L.Filter(L.Join(L.Scan("lineitem"), L.Scan("orders"),
-                              "l_orderkey", "o_orderkey"),
-                       Col("o_orderdate") < 1200),
-        aggs=(CompositeAgg("rev", "sum", Col("l_extendedprice")),)), spec)
+    join = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+            "JOIN orders ON l_orderkey = o_orderkey WHERE o_orderdate < 1200 "
+            "ERROR 5% CONFIDENCE 95%")
+    show("join     ", session.sql(join), session.sql(join.split(" ERROR")[0]), 0.05)
 
-    show(db, "ratio Q14", Query(
-        child=L.Filter(L.Scan("lineitem"), Col("l_shipdate").between(400, 2200)),
-        aggs=(CompositeAgg("promo_share", "ratio",
-                           Col("l_extendedprice") * Col("l_discount") * Col("l_linestatus"),
-                           expr2=Col("l_extendedprice") * Col("l_discount")),)), spec)
+    ratio = ("SELECT SUM(l_extendedprice * l_discount * l_linestatus) / "
+             "SUM(l_extendedprice * l_discount) AS promo_share FROM lineitem "
+             "WHERE l_shipdate BETWEEN 400 AND 2200 ERROR 5% CONFIDENCE 95%")
+    show("ratio Q14", session.sql(ratio), session.sql(ratio.split(" ERROR")[0]), 0.05)
+
+    # -- fluent builder (lowers to the identical internal plan) --------------
+    builder = (session.table("lineitem")
+               .where(Col("l_shipdate") < 2400)
+               .group_by("l_returnflag")
+               .agg(sum_(Col("l_quantity")).as_("qty"),
+                    avg_(Col("l_extendedprice")).as_("avg_price"),
+                    count_().as_("orders"))
+               .error(0.05, 0.95))
+    approx = builder.run()
+    exact = (session.table("lineitem")
+             .where(Col("l_shipdate") < 2400)
+             .group_by("l_returnflag")
+             .agg(sum_(Col("l_quantity")).as_("qty"),
+                  avg_(Col("l_extendedprice")).as_("avg_price"),
+                  count_().as_("orders"))
+             .run())
+    show("builder  ", approx, exact, 0.05)
+
+    # -- concurrent scheduler: compile once, serve many ----------------------
+    herd_sql = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+                "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+    session.sql(herd_sql)  # warm the compile cache
+    handles = [session.submit(herd_sql) for _ in range(16)]
+    session.drain()
+    stats = session.scheduler.last_drain
+    print(f"[scheduler] {stats.n_queries} identical queries in "
+          f"{stats.n_groups} group(s): {stats.compile_misses} new "
+          f"compilations, cache hit rate {stats.cache_hit_rate:.0%}, "
+          f"{stats.wall_time_s*1e3:.0f} ms total")
+    assert all(h.status == "done" for h in handles)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+# The user-facing front door (§2.4): plain SQL extended with
+# `ERROR e% CONFIDENCE p%`, a typed fluent builder, and a Session that owns
+# tables, the compile cache, and seed derivation.  The raw dataclass surface
+# (core.taqa.Query + CompositeAgg) remains available as the internal
+# representation these lower to.
+from repro.api.builder import QueryBuilder, avg_, count_, sum_
+from repro.api.scheduler import DrainStats, QueryScheduler
+from repro.api.session import (QueryFailedError, QueryHandle, QueryStatus,
+                               Session, SessionConfig)
+from repro.api.sql import (ParsedQuery, SqlSyntaxError, UnsupportedSqlError,
+                           parse_sql, render_sql)
+
+__all__ = [
+    "Session",
+    "SessionConfig",
+    "QueryHandle",
+    "QueryStatus",
+    "QueryFailedError",
+    "QueryScheduler",
+    "DrainStats",
+    "QueryBuilder",
+    "sum_",
+    "count_",
+    "avg_",
+    "parse_sql",
+    "render_sql",
+    "ParsedQuery",
+    "SqlSyntaxError",
+    "UnsupportedSqlError",
+]

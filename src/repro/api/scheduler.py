@@ -1,0 +1,114 @@
+"""Concurrent query scheduler: signature-grouped, submission-fair draining.
+
+The millions-of-users scenario sends streams of structurally identical
+queries (the same dashboard refreshed by many users — fresh sampling seeds,
+same plan *including predicate constants*: the kernels bake constants in as
+compile-time bounds, so queries differing in a WHERE constant compile
+separately, exactly as ``engine/physical.plan_signature`` keys them).  The
+physical layer already compiles one executable per plan signature; this
+scheduler makes the serving side exploit it:
+
+* submissions queue as :class:`QueryHandle`\\ s (seeds were already derived
+  at submission, so scheduling order never changes sampling),
+* ``drain()`` groups pending handles by :func:`repro.core.taqa.
+  structural_signature` and runs each group back-to-back — the first member
+  pays the (cached) compilation, the rest run warm,
+* groups are visited in order of their earliest submission and members in
+  submission order, so no query starves behind an unrelated hot group
+  (submission-fair batches); ``max_queries`` caps one drain call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Dict, List, Optional
+
+from repro.core.taqa import structural_signature
+
+if TYPE_CHECKING:  # circular at runtime: session owns the scheduler
+    from repro.api.session import QueryHandle, Session
+
+
+@dataclasses.dataclass
+class DrainStats:
+    """What one ``drain()`` call did to the compile cache and the queue."""
+
+    n_queries: int = 0
+    n_groups: int = 0
+    compile_misses: int = 0   # new physical compilations this drain
+    compile_hits: int = 0     # warm executions this drain
+    wall_time_s: float = 0.0
+    group_sizes: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.compile_hits + self.compile_misses
+        return self.compile_hits / total if total else 0.0
+
+
+class QueryScheduler:
+    def __init__(self, session: "Session"):
+        self._session = session
+        self._pending: List["QueryHandle"] = []
+        self._signatures: Dict[int, object] = {}  # query_id -> structural key
+        self.last_drain: Optional[DrainStats] = None
+        self.total_drained = 0
+
+    def submit(self, handle: "QueryHandle") -> "QueryHandle":
+        if handle.done:
+            return handle  # pre-failed (e.g. parse rejection) — nothing to run
+        if handle.query_id in self._signatures:
+            return handle  # idempotent: a retried submit must not double-
+                           # queue the handle (it would double-count stats)
+        # the signature is immutable per handle: compute once at submission,
+        # not on every drain pass over the queue
+        self._signatures[handle.query_id] = structural_signature(handle.query)
+        self._pending.append(handle)
+        return handle
+
+    @property
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    def _grouped(self) -> List[List["QueryHandle"]]:
+        groups: Dict[object, List["QueryHandle"]] = {}
+        for h in self._pending:
+            groups.setdefault(self._signatures[h.query_id], []).append(h)
+        # Submission-fair: a group runs no earlier than its first member's
+        # arrival; members keep submission order within the group.
+        return sorted(groups.values(), key=lambda g: g[0].query_id)
+
+    def drain(self, max_queries: Optional[int] = None) -> List["QueryHandle"]:
+        """Run pending queries grouped by plan signature; return completed
+        handles in execution order.  ``max_queries`` bounds one batch — the
+        remainder stays queued for the next call."""
+        if max_queries is not None and max_queries < 1:
+            raise ValueError(f"max_queries must be >= 1, got {max_queries}")
+        t0 = time.perf_counter()
+        info0 = self._session.compile_cache_info()
+        stats = DrainStats()
+        completed: List["QueryHandle"] = []
+        for group in self._grouped():
+            if max_queries is not None and len(completed) >= max_queries:
+                break
+            batch = group if max_queries is None else \
+                group[: max_queries - len(completed)]
+            stats.n_groups += 1
+            stats.group_sizes.append(len(batch))
+            for h in batch:
+                self._session._run_handle(h)
+                completed.append(h)
+        done_ids = {h.query_id for h in completed}
+        self._pending = [h for h in self._pending
+                         if h.query_id not in done_ids]
+        for qid in done_ids:
+            self._signatures.pop(qid, None)
+        info1 = self._session.compile_cache_info()
+        stats.n_queries = len(completed)
+        stats.compile_misses = info1.misses - info0.misses
+        stats.compile_hits = info1.hits - info0.hits
+        stats.wall_time_s = time.perf_counter() - t0
+        self.last_drain = stats
+        self.total_drained += len(completed)
+        return completed

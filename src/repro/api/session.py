@@ -1,0 +1,305 @@
+"""Session — the stateful front door of the PilotDB middleware.
+
+A :class:`Session` owns everything that must persist across queries for the
+many-users scenario to pay off:
+
+* the registered tables (the catalog) and the :class:`Executor` whose
+  physical compile cache makes repeated structurally-identical queries run
+  warm (see ``engine/physical.py``),
+* a session PRNG (:class:`numpy.random.SeedSequence`) from which every
+  query's sampling seed is derived at *submission* time — two sessions
+  created with the same seed replay bit-identical answers for the same
+  query sequence, with no global RNG state anywhere,
+* a :class:`repro.api.QueryScheduler` for batched submission.
+
+``session.sql(...)`` / ``builder.run()`` return a :class:`QueryHandle`
+carrying status, the :class:`ApproxAnswer`, the :class:`TaqaReport` and any
+fallback reason — execution failures are captured on the handle instead of
+raising through the client (`EmptySampleError` in particular is already an
+*internal* signal: TAQA answers it with an explicit exact fallback).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api.builder import QueryBuilder
+from repro.api.scheduler import QueryScheduler
+from repro.api.sql import UnsupportedSqlError, parse_sql
+from repro.core.spec import ErrorSpec
+from repro.core.taqa import ApproxAnswer, PilotDB, Query, TaqaReport
+from repro.engine.executor import Executor
+from repro.engine.table import BlockTable
+
+
+class QueryStatus:
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
+class QueryFailedError(RuntimeError):
+    """Raised by :meth:`QueryHandle.result` when execution failed."""
+
+
+@dataclasses.dataclass
+class QueryHandle:
+    """One submitted query: its lowered form, derived seed, and outcome."""
+
+    query_id: int
+    query: Optional[Query]            # None only for parse-failed handles
+    spec: Optional[ErrorSpec]         # None -> exact execution was requested
+    seed: int
+    sql: Optional[str] = None
+    status: str = QueryStatus.PENDING
+    error: Optional[str] = None
+    _answer: Optional[ApproxAnswer] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status in (QueryStatus.DONE, QueryStatus.FAILED)
+
+    @property
+    def answer(self) -> Optional[ApproxAnswer]:
+        return self._answer
+
+    @property
+    def report(self) -> Optional[TaqaReport]:
+        return self._answer.report if self._answer is not None else None
+
+    @property
+    def fallback(self) -> Optional[str]:
+        """Reason exact execution was used, if TAQA fell back (else None)."""
+        r = self.report
+        return r.fallback if r is not None else None
+
+    def result(self) -> ApproxAnswer:
+        """The answer; raises if the query failed or has not run yet."""
+        if self.status == QueryStatus.FAILED:
+            raise QueryFailedError(self.error or "query failed")
+        if self._answer is None:
+            raise RuntimeError(
+                f"query {self.query_id} is {self.status}; drain the "
+                "scheduler it was submitted to (session.drain(), or "
+                "gateway.run() for gateway tickets) before reading results")
+        return self._answer
+
+    def scalar(self, name: str, group: int = 0) -> float:
+        return self.result().scalar(name, group)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    large_table_rows: int = 50_000     # sampling threshold (§3.1)
+    default_error: float = 0.05        # builder .error() defaults
+    default_confidence: float = 0.95
+    use_compiled: bool = True
+    kernel_mode: str = "auto"
+    spec_kwargs: Optional[Dict] = None  # TAQA tunable overrides for SQL specs
+    # The physical layer sizes dense per-(block, group) buffers by
+    # max_groups; an id-cardinality GROUP BY through the public front door
+    # would otherwise allocate process-killing buffers in a shared server.
+    max_groups_limit: int = 4096
+
+
+class Session:
+    """A client session against a catalog of block tables."""
+
+    def __init__(self, catalog: Optional[Dict[str, BlockTable]] = None, *,
+                 seed: int = 0, config: SessionConfig = SessionConfig(),
+                 executor: Optional[Executor] = None):
+        self.config = config
+        if config.spec_kwargs:
+            # fail at construction, not on every client's ERROR clause
+            dataclasses.replace(
+                ErrorSpec(error=config.default_error,
+                          confidence=config.default_confidence),
+                **config.spec_kwargs)
+        if executor is not None:
+            if catalog is not None:
+                raise ValueError(
+                    "pass either catalog or executor, not both: an explicit "
+                    "executor brings its own catalog, and the catalog "
+                    "argument would be silently ignored")
+            self.executor = executor
+        else:
+            self.executor = Executor(catalog or {},
+                                     use_compiled=config.use_compiled,
+                                     kernel_mode=config.kernel_mode)
+        self.db = PilotDB(self.executor,
+                          large_table_rows=config.large_table_rows)
+        self._seed_seq = np.random.SeedSequence(seed)
+        self._next_id = 0
+        self._max_groups_cache: Dict[tuple, int] = {}
+        self.scheduler = QueryScheduler(self)
+
+    # -- catalog -------------------------------------------------------------
+    def register_table(self, name: str, table: BlockTable) -> None:
+        self.executor.register_table(name, table)
+        # replacing a table invalidates its cached statistics
+        self._max_groups_cache = {k: v for k, v in
+                                  self._max_groups_cache.items()
+                                  if k[0] != name}
+
+    def tables(self) -> List[str]:
+        return sorted(self.executor.catalog)
+
+    def infer_max_groups(self, tables, column: str) -> int:
+        """Group-id domain size for integer-coded group columns, from the
+        catalog (the "DBMS statistics" a middleware would consult).
+
+        ``tables`` is the table name — or every table in the query's FROM/
+        JOIN chain, since GROUP BY may name a joined table's column.  An
+        unknown table or column resolves to 1 rather than raising: the
+        inference is advisory, and the real error surfaces at execution
+        where it is captured on the handle.
+        """
+        if isinstance(tables, str):
+            tables = (tables,)
+        for name in tables:
+            tab = self.executor.catalog.get(name)
+            if tab is None or column not in tab.columns:
+                continue
+            key = (name, column)
+            if key not in self._max_groups_cache:
+                col = np.asarray(tab.columns[column])[np.asarray(tab.valid)]
+                if col.size == 0:
+                    self._max_groups_cache[key] = 1
+                else:
+                    # grouping requires non-negative integer group codes;
+                    # a float/negative column would silently collapse groups
+                    if not (np.issubdtype(col.dtype, np.integer)
+                            or np.all(col == np.floor(col))):
+                        raise UnsupportedSqlError(
+                            f"GROUP BY {column}: column is not integer-coded "
+                            f"(dtype {col.dtype}); group columns must hold "
+                            "non-negative integer group ids")
+                    if col.min() < 0:
+                        raise UnsupportedSqlError(
+                            f"GROUP BY {column}: negative group ids "
+                            "(min {:g}) are not supported".format(col.min()))
+                    self._max_groups_cache[key] = int(col.max()) + 1
+            return self._max_groups_cache[key]
+        return 1
+
+    def compile_cache_info(self):
+        return self.executor.compile_cache_info()
+
+    # -- seed derivation ------------------------------------------------------
+    def _derive_seed(self) -> int:
+        """Per-query seed from the session PRNG key.  Spawning advances the
+        SeedSequence deterministically, so seeds depend only on the session
+        seed and the submission index — never on global state or on how the
+        scheduler later reorders execution."""
+        child = self._seed_seq.spawn(1)[0]
+        return int(child.generate_state(1, dtype=np.uint32)[0])
+
+    # -- front doors ----------------------------------------------------------
+    def table(self, name: str) -> QueryBuilder:
+        if name not in self.executor.catalog:
+            raise KeyError(f"unknown table {name!r}; registered: "
+                           f"{self.tables()}")
+        return QueryBuilder(self, name)
+
+    def sql(self, text: str) -> QueryHandle:
+        """Parse and execute dialect SQL synchronously.
+
+        Parse-stage rejections — :class:`repro.api.SqlSyntaxError`, and
+        :class:`repro.api.UnsupportedSqlError` for semantic violations such
+        as GROUP BY on a non-integer-coded column — raise immediately (the
+        query never existed); execution failures are captured on the
+        returned handle.
+        """
+        handle = self._parse_to_handle(text)
+        self._run_handle(handle)
+        return handle
+
+    def prepare(self, text: str) -> QueryHandle:
+        """Parse dialect SQL into a pending handle without scheduling it —
+        for callers that run their own :class:`QueryScheduler` (e.g. a
+        gateway keeping its queue separate from the session's)."""
+        return self._parse_to_handle(text)
+
+    def submit(self, text: str) -> QueryHandle:
+        """Parse dialect SQL and enqueue it on the session scheduler."""
+        return self.scheduler.submit(self.prepare(text))
+
+    def execute(self, query: Query, spec: Optional[ErrorSpec] = None) -> QueryHandle:
+        """Execute an already-lowered query synchronously (builder path)."""
+        handle = self._make_handle(query, spec)
+        self._run_handle(handle)
+        return handle
+
+    def submit_query(self, query: Query,
+                     spec: Optional[ErrorSpec] = None) -> QueryHandle:
+        return self.scheduler.submit(self._make_handle(query, spec))
+
+    def drain(self, max_queries: Optional[int] = None) -> List[QueryHandle]:
+        return self.scheduler.drain(max_queries)
+
+    # -- plumbing -------------------------------------------------------------
+    def _parse_to_handle(self, text: str) -> QueryHandle:
+        parsed = parse_sql(text, max_groups_resolver=self.infer_max_groups,
+                           spec_kwargs=self.config.spec_kwargs)
+        return self._make_handle(parsed.query, parsed.spec, sql=text)
+
+    def _validate_group_domain(self, query: Query) -> None:
+        """Reject GROUP BY shapes that would silently misbehave: a
+        max_groups above the buffer-size cap (OOM in a shared server) or
+        below the column's observed domain (the engine clips overflow group
+        ids, silently merging those rows into the last group)."""
+        if query.group_by is None:
+            return
+        limit = self.config.max_groups_limit
+        if query.max_groups > limit:
+            raise UnsupportedSqlError(
+                f"GROUP BY {query.group_by}: max_groups={query.max_groups} "
+                f"exceeds the session limit {limit} (per-block group "
+                "buffers scale with max_groups)")
+        tables = tuple(s.table for s in query.child.scans())
+        domain = self.infer_max_groups(tables, query.group_by)
+        if domain > query.max_groups:
+            raise UnsupportedSqlError(
+                f"GROUP BY {query.group_by}: MAXGROUPS {query.max_groups} "
+                f"is below the observed group domain ({domain}); overflow "
+                "groups would be silently merged into the last group")
+
+    def _make_handle(self, query: Query, spec: Optional[ErrorSpec],
+                     sql: Optional[str] = None) -> QueryHandle:
+        # validate before deriving a seed: rejected queries never consume
+        # from the session PRNG, keeping replay deterministic
+        self._validate_group_domain(query)
+        handle = QueryHandle(query_id=self._next_id, query=query, spec=spec,
+                             seed=self._derive_seed(), sql=sql)
+        self._next_id += 1
+        return handle
+
+    def failed_handle(self, sql: str, error: str) -> QueryHandle:
+        """A pre-failed handle for requests that never parsed (gateways use
+        this to reject one client's bad SQL without dropping the batch)."""
+        handle = QueryHandle(query_id=self._next_id, query=None, spec=None,
+                             seed=0, sql=sql, status=QueryStatus.FAILED,
+                             error=error)
+        self._next_id += 1
+        return handle
+
+    def _run_handle(self, handle: QueryHandle) -> QueryHandle:
+        if handle.done:
+            return handle
+        handle.status = QueryStatus.RUNNING
+        try:
+            if handle.spec is None:
+                ans = self.db.exact(handle.query)
+            else:
+                ans = self.db.query(handle.query, handle.spec,
+                                    seed=handle.seed)
+            handle._answer = ans
+            handle.status = QueryStatus.DONE
+        except Exception as e:  # capture, don't raise through the client
+            handle.status = QueryStatus.FAILED
+            handle.error = f"{type(e).__name__}: {e}"
+        return handle

@@ -1,0 +1,526 @@
+"""The PilotDB SQL dialect (§2.4): parser and renderer.
+
+Grammar (case-insensitive keywords)::
+
+    query   := SELECT item (',' item)*
+               FROM ident (JOIN ident ON ident '=' ident)*
+               (WHERE pred)?
+               (GROUP BY ident (MAXGROUPS int)?)?
+               (ERROR num '%' CONFIDENCE num '%')?
+    item    := composite (AS ident)?
+    composite := wterm '+' wterm          -- addition rule (Table 2)
+               | aggcall '/' aggcall      -- division rule: SUM/SUM ratio
+               | aggcall '*' aggcall      -- multiplication rule
+               | aggcall
+    wterm   := (num '*')? aggcall         -- weighted SUM, only under '+'
+    aggcall := SUM '(' expr ')' | AVG '(' expr ')' | COUNT '(' '*' ')'
+    pred    := or-chain of AND-chains of comparisons / BETWEEN / NOT (...)
+    expr    := arithmetic over columns and numeric literals (+ - * /)
+
+`MAXGROUPS n` is a dialect extension fixing the group-id domain
+(``Query.max_groups``); when omitted the caller may supply a resolver that
+infers it from catalog statistics (see :meth:`repro.api.Session.sql`).
+
+Lowering targets the existing internal representation unchanged:
+:class:`repro.core.taqa.Query` (+ :class:`repro.core.spec.ErrorSpec`), i.e.
+the same frozen dataclasses tests hand-build.  AND/OR chains fold *right*
+(``a AND b AND c`` -> ``And(a, And(b, c))``) and arithmetic folds left,
+matching the hand-built idiom, so parse -> lower reproduces those plans
+bit-for-bit and :func:`render_sql` round-trips through :func:`parse_sql`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.spec import CompositeAgg, ErrorSpec
+from repro.core.taqa import Query
+from repro.engine import logical as L
+from repro.engine.expr import (And, Between, BinOp, Cmp, Col, Const, Expr, Not,
+                               Or)
+
+
+class SqlSyntaxError(ValueError):
+    """The query text does not parse in the PilotDB dialect."""
+
+
+class UnsupportedSqlError(ValueError):
+    """A plan/query outside the dialect surface (rendering direction)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ParsedQuery:
+    query: Query
+    spec: Optional[ErrorSpec]   # None: no ERROR clause -> exact execution
+
+    @property
+    def is_approximate(self) -> bool:
+        return self.spec is not None
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+# ---------------------------------------------------------------------------
+
+_KEYWORDS = {
+    "SELECT", "FROM", "WHERE", "GROUP", "BY", "JOIN", "ON", "AS", "AND",
+    "OR", "NOT", "BETWEEN", "SUM", "COUNT", "AVG", "ERROR", "CONFIDENCE",
+    "MAXGROUPS",
+}
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:"
+    r"(?P<num>\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)"
+    r"|(?P<ident>[A-Za-z_][A-Za-z_0-9]*)"
+    r"|(?P<op><=|>=|<>|!=|==|[-+*/(),%=<>])"
+    r")")
+
+
+def _tokenize(text: str) -> List[Tuple[str, object]]:
+    toks: List[Tuple[str, object]] = []
+    pos = 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if m is None:
+            rest = text[pos:].strip()
+            if not rest:
+                break
+            raise SqlSyntaxError(f"cannot tokenize near {rest[:20]!r}")
+        pos = m.end()
+        if m.lastgroup == "num":
+            toks.append(("num", float(m.group("num"))))
+        elif m.lastgroup == "ident":
+            word = m.group("ident")
+            if word.upper() in _KEYWORDS:
+                toks.append(("kw", word.upper()))
+            else:
+                toks.append(("ident", word))
+        else:
+            toks.append(("op", m.group("op")))
+    toks.append(("end", None))
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# Parser
+# ---------------------------------------------------------------------------
+
+_CMP_OPS = {"<": "<", "<=": "<=", ">": ">", ">=": ">=",
+            "=": "==", "==": "==", "!=": "!=", "<>": "!="}
+
+
+class _Parser:
+    def __init__(self, toks: List[Tuple[str, object]]):
+        self.toks = toks
+        self.pos = 0
+
+    # -- token helpers -------------------------------------------------------
+    def peek(self) -> Tuple[str, object]:
+        return self.toks[self.pos]
+
+    def advance(self) -> Tuple[str, object]:
+        t = self.toks[self.pos]
+        self.pos += 1
+        return t
+
+    def accept_kw(self, *words: str) -> Optional[str]:
+        k, v = self.peek()
+        if k == "kw" and v in words:
+            self.advance()
+            return v  # type: ignore[return-value]
+        return None
+
+    def accept_op(self, *ops: str) -> Optional[str]:
+        k, v = self.peek()
+        if k == "op" and v in ops:
+            self.advance()
+            return v  # type: ignore[return-value]
+        return None
+
+    def expect_kw(self, word: str) -> None:
+        if self.accept_kw(word) is None:
+            raise SqlSyntaxError(f"expected {word}, got {self.peek()[1]!r}")
+
+    def expect_op(self, op: str) -> None:
+        if self.accept_op(op) is None:
+            raise SqlSyntaxError(f"expected {op!r}, got {self.peek()[1]!r}")
+
+    def expect_ident(self) -> str:
+        k, v = self.advance()
+        if k != "ident":
+            raise SqlSyntaxError(f"expected identifier, got {v!r}")
+        return v  # type: ignore[return-value]
+
+    def expect_num(self) -> float:
+        k, v = self.advance()
+        if k != "num":
+            raise SqlSyntaxError(f"expected number, got {v!r}")
+        return v  # type: ignore[return-value]
+
+    def expect_signed_num(self) -> float:
+        if self.accept_op("-"):
+            return -self.expect_num()
+        return self.expect_num()
+
+    # -- arithmetic expressions (left-assoc, matching operator overloads) ----
+    def parse_arith(self) -> Expr:
+        e = self.parse_term()
+        while True:
+            op = self.accept_op("+", "-")
+            if op is None:
+                return e
+            e = BinOp(op, e, self.parse_term())
+
+    def parse_term(self) -> Expr:
+        e = self.parse_factor()
+        while True:
+            op = self.accept_op("*", "/")
+            if op is None:
+                return e
+            e = BinOp(op, e, self.parse_factor())
+
+    def parse_factor(self) -> Expr:
+        if self.accept_op("("):
+            e = self.parse_arith()
+            self.expect_op(")")
+            return e
+        if self.accept_op("-"):
+            return Const(-self.expect_num())
+        k, v = self.peek()
+        if k == "num":
+            self.advance()
+            return Const(float(v))  # type: ignore[arg-type]
+        if k == "ident":
+            self.advance()
+            return Col(v)  # type: ignore[arg-type]
+        raise SqlSyntaxError(f"expected expression, got {v!r}")
+
+    # -- predicates ----------------------------------------------------------
+    def parse_pred(self) -> Expr:
+        return self._parse_or()
+
+    def _parse_or(self) -> Expr:
+        # Right fold: a OR b OR c -> Or(a, Or(b, c)).
+        left = self._parse_and()
+        if self.accept_kw("OR"):
+            return Or(left, self._parse_or())
+        return left
+
+    def _parse_and(self) -> Expr:
+        left = self._parse_not()
+        if self.accept_kw("AND"):
+            return And(left, self._parse_and())
+        return left
+
+    def _parse_not(self) -> Expr:
+        if self.accept_kw("NOT"):
+            return Not(self._parse_not())
+        return self._parse_cmp()
+
+    def _parse_cmp(self) -> Expr:
+        # '(' may open either a predicate group or an arithmetic group;
+        # try the predicate reading first and backtrack on failure.
+        if self.peek() == ("op", "("):
+            mark = self.pos
+            try:
+                self.advance()
+                inner = self.parse_pred()
+                self.expect_op(")")
+                if isinstance(inner, (Cmp, Between, And, Or, Not)):
+                    return inner
+            except SqlSyntaxError:
+                pass
+            self.pos = mark
+        left = self.parse_arith()
+        if self.accept_kw("BETWEEN"):
+            lo = self.expect_signed_num()
+            self.expect_kw("AND")
+            hi = self.expect_signed_num()
+            return Between(left, float(lo), float(hi))
+        for tok, op in _CMP_OPS.items():
+            if self.accept_op(tok):
+                return Cmp(op, left, self.parse_arith())
+        raise SqlSyntaxError(f"expected comparison, got {self.peek()[1]!r}")
+
+    # -- aggregates ----------------------------------------------------------
+    def parse_aggcall(self) -> Tuple[str, Optional[Expr]]:
+        kw = self.accept_kw("SUM", "AVG", "COUNT")
+        if kw is None:
+            raise SqlSyntaxError(
+                f"expected SUM/AVG/COUNT, got {self.peek()[1]!r}")
+        self.expect_op("(")
+        if kw == "COUNT":
+            self.expect_op("*")
+            self.expect_op(")")
+            return "count", None
+        e = self.parse_arith()
+        self.expect_op(")")
+        return kw.lower(), e
+
+    def _parse_weighted_sum(self) -> Tuple[float, Expr]:
+        weight, sign = 1.0, 1.0
+        if self.accept_op("-"):
+            sign = -1.0
+        k, _ = self.peek()
+        if k == "num":
+            weight = self.expect_num()
+            self.expect_op("*")
+        elif sign < 0:
+            raise SqlSyntaxError("expected a numeric weight after '-'")
+        kind, expr = self.parse_aggcall()
+        if kind != "sum":
+            raise SqlSyntaxError("composite aggregates combine SUM parts only")
+        return sign * float(weight), expr  # type: ignore[return-value]
+
+    def parse_select_item(self, index: int) -> CompositeAgg:
+        # a (possibly negative) weight can only open an 'add' composite
+        if self.peek()[0] == "num" or self.peek() == ("op", "-"):
+            w1, e1 = self._parse_weighted_sum()
+            self.expect_op("+")
+            w2, e2 = self._parse_weighted_sum()
+            kind, expr, expr2, weights = "add", e1, e2, (w1, w2)
+        else:
+            kind, expr = self.parse_aggcall()
+            expr2, weights = None, (1.0, 1.0)
+            op = self.accept_op("/", "*", "+")
+            if op is not None:
+                if kind != "sum":
+                    raise SqlSyntaxError(
+                        "composite aggregates combine SUM parts only")
+                if op == "+":
+                    w2, expr2 = self._parse_weighted_sum()
+                    kind, weights = "add", (1.0, w2)
+                else:
+                    kind2, expr2 = self.parse_aggcall()
+                    if kind2 != "sum":
+                        raise SqlSyntaxError(
+                            "composite aggregates combine SUM parts only")
+                    kind = "ratio" if op == "/" else "product"
+        name = self.expect_ident() if self.accept_kw("AS") else f"agg{index}"
+        return CompositeAgg(name, kind, expr, expr2=expr2, weights=weights)
+
+    # -- full query ----------------------------------------------------------
+    def parse_query(
+        self,
+        max_groups_resolver: Optional[Callable[[Tuple[str, ...], str], int]] = None,
+        spec_kwargs: Optional[dict] = None,
+    ) -> ParsedQuery:
+        self.expect_kw("SELECT")
+        aggs = [self.parse_select_item(0)]
+        while self.accept_op(","):
+            aggs.append(self.parse_select_item(len(aggs)))
+
+        self.expect_kw("FROM")
+        base = self.expect_ident()
+        child: L.Plan = L.Scan(base)
+        while self.accept_kw("JOIN"):
+            right = self.expect_ident()
+            self.expect_kw("ON")
+            lk = self.expect_ident()
+            self.expect_op("=")
+            rk = self.expect_ident()
+            child = L.Join(child, L.Scan(right), lk, rk)
+
+        if self.accept_kw("WHERE"):
+            child = L.Filter(child, self.parse_pred())
+
+        group_by, max_groups = None, 1
+        if self.accept_kw("GROUP"):
+            self.expect_kw("BY")
+            group_by = self.expect_ident()
+            if self.accept_kw("MAXGROUPS"):
+                n = self.expect_num()
+                if n != int(n):
+                    raise SqlSyntaxError(f"MAXGROUPS must be an integer, "
+                                         f"got {n!r}")
+                max_groups = int(n)
+            elif max_groups_resolver is not None:
+                tables = tuple(s.table for s in child.scans())
+                max_groups = int(max_groups_resolver(tables, group_by))
+            if max_groups < 1:
+                raise SqlSyntaxError("MAXGROUPS must be >= 1")
+
+        spec = None
+        if self.accept_kw("ERROR"):
+            err = self.expect_num()
+            self.expect_op("%")
+            self.expect_kw("CONFIDENCE")
+            conf = self.expect_num()
+            self.expect_op("%")
+            try:
+                spec = ErrorSpec(error=err / 100.0, confidence=conf / 100.0)
+            except ValueError as e:
+                # out-of-range targets (ERROR 150%) are dialect violations,
+                # not internal errors — reject at the parse stage
+                raise SqlSyntaxError(f"invalid ERROR/CONFIDENCE clause: {e}")
+            if spec_kwargs:
+                # caller-config tunables are applied OUTSIDE the client-error
+                # wrapping: a bad server-side override must fail loudly, not
+                # masquerade as the client's syntax error
+                spec = dataclasses.replace(spec, **spec_kwargs)
+
+        if self.peek()[0] != "end":
+            raise SqlSyntaxError(f"trailing input at {self.peek()[1]!r}")
+        q = Query(child=child, aggs=tuple(aggs), group_by=group_by,
+                  max_groups=max_groups)
+        return ParsedQuery(query=q, spec=spec)
+
+
+def parse_sql(
+    text: str,
+    *,
+    max_groups_resolver: Optional[Callable[[Tuple[str, ...], str], int]] = None,
+    spec_kwargs: Optional[dict] = None,
+) -> ParsedQuery:
+    """Parse dialect SQL into the internal (Query, ErrorSpec) representation.
+
+    ``max_groups_resolver(tables, column)`` — called with every table in the
+    FROM/JOIN chain — supplies ``max_groups`` for GROUP BY queries that omit
+    MAXGROUPS; ``spec_kwargs`` overrides TAQA tunables
+    on the lowered :class:`ErrorSpec` (e.g. ``{"min_pilot_blocks": 50}``).
+    """
+    return _Parser(_tokenize(text)).parse_query(max_groups_resolver,
+                                                spec_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Renderer (the inverse direction, for round-trip tests and logging)
+# ---------------------------------------------------------------------------
+
+_PREC = {"+": 1, "-": 1, "*": 2, "/": 2}
+
+
+def _num(v: float) -> str:
+    f = float(v)
+    if f.is_integer() and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def _pct(frac: float) -> str:
+    """Shortest percent literal p with float(p)/100 == frac (exact re-parse);
+    naive ``frac * 100`` drifts (0.05 * 100 == 5.000000000000001)."""
+    for digits in range(0, 18):
+        s = f"{frac * 100:.{digits}f}"
+        if "." in s:
+            s = s.rstrip("0").rstrip(".")
+        if s and float(s) / 100.0 == frac:
+            return s
+    return repr(frac * 100)
+
+
+def _render_arith(e: Expr, parent_prec: int = 0, right: bool = False) -> str:
+    if isinstance(e, Col):
+        return e.name
+    if isinstance(e, Const):
+        return _num(e.value)
+    if isinstance(e, BinOp):
+        p = _PREC[e.op]
+        s = (f"{_render_arith(e.left, p, False)} {e.op} "
+             f"{_render_arith(e.right, p, True)}")
+        # Parenthesize when re-parsing (left-assoc, precedence-climbing)
+        # would otherwise reassociate the tree.
+        if p < parent_prec or (p == parent_prec and right):
+            return f"({s})"
+        return s
+    raise UnsupportedSqlError(f"not an arithmetic expression: {e!r}")
+
+
+_SQL_CMP = {"==": "=", "!=": "!=", "<": "<", "<=": "<=", ">": ">", ">=": ">="}
+
+
+def _render_pred(e: Expr) -> str:
+    if isinstance(e, Or):
+        left = _render_pred(e.left)
+        if isinstance(e.left, Or):  # left-nested Or needs explicit grouping
+            left = f"({left})"
+        return f"{left} OR {_render_pred(e.right)}"
+    if isinstance(e, And):
+        def side(x: Expr, is_left: bool) -> str:
+            s = _render_pred(x)
+            if isinstance(x, Or) or (is_left and isinstance(x, And)):
+                return f"({s})"
+            return s
+        return f"{side(e.left, True)} AND {side(e.right, False)}"
+    if isinstance(e, Not):
+        return f"NOT ({_render_pred(e.arg)})"
+    if isinstance(e, Cmp):
+        return (f"{_render_arith(e.left)} {_SQL_CMP[e.op]} "
+                f"{_render_arith(e.right)}")
+    if isinstance(e, Between):
+        return (f"{_render_arith(e.arg)} BETWEEN {_num(e.lo)} AND "
+                f"{_num(e.hi)}")
+    raise UnsupportedSqlError(f"not a predicate: {e!r}")
+
+
+def _render_agg(a: CompositeAgg) -> str:
+    if a.kind == "sum":
+        body = f"SUM({_render_arith(a.expr)})"
+    elif a.kind == "count":
+        body = "COUNT(*)"
+    elif a.kind == "avg":
+        body = f"AVG({_render_arith(a.expr)})"
+    elif a.kind == "ratio":
+        body = f"SUM({_render_arith(a.expr)}) / SUM({_render_arith(a.expr2)})"
+    elif a.kind == "product":
+        body = f"SUM({_render_arith(a.expr)}) * SUM({_render_arith(a.expr2)})"
+    elif a.kind == "add":
+        w1, w2 = a.weights
+        s1, s2 = (f"SUM({_render_arith(a.expr)})",
+                  f"SUM({_render_arith(a.expr2)})")
+        if w1 != 1.0:
+            s1 = f"{_num(w1)} * {s1}"
+        if w2 != 1.0:
+            s2 = f"{_num(w2)} * {s2}"
+        body = f"{s1} + {s2}"
+    else:
+        raise UnsupportedSqlError(f"composite kind {a.kind!r}")
+    return f"{body} AS {a.name}"
+
+
+def render_sql(query: Query, spec: Optional[ErrorSpec] = None) -> str:
+    """Render the internal representation back to dialect SQL.
+
+    Only the dialect surface is expressible: a single optional Filter over a
+    left-deep Join chain over plain Scans.  TABLESAMPLE clauses and Unions
+    raise :class:`UnsupportedSqlError` — those are TAQA's rewriting
+    intermediates, not user queries.
+    """
+    preds: List[Expr] = []
+    node: L.Plan = query.child
+    while isinstance(node, L.Filter):
+        preds.append(node.pred)
+        node = node.child
+    joins: List[Tuple[str, str, str]] = []
+    while isinstance(node, L.Join):
+        if not isinstance(node.right, L.Scan):
+            raise UnsupportedSqlError("join right side must be a plain Scan")
+        if node.right.sample is not None:
+            raise UnsupportedSqlError("TABLESAMPLE is not renderable SQL")
+        joins.append((node.right.table, node.left_key, node.right_key))
+        node = node.left
+    if not isinstance(node, L.Scan):
+        raise UnsupportedSqlError(f"unsupported plan shape at {node!r}")
+    if node.sample is not None:
+        raise UnsupportedSqlError("TABLESAMPLE is not renderable SQL")
+
+    parts = ["SELECT " + ", ".join(_render_agg(a) for a in query.aggs),
+             f"FROM {node.table}"]
+    for table, lk, rk in reversed(joins):
+        parts.append(f"JOIN {table} ON {lk} = {rk}")
+    if preds:
+        pred = preds[-1]
+        for p in reversed(preds[:-1]):  # nested filters AND together
+            pred = And(p, pred)
+        parts.append(f"WHERE {_render_pred(pred)}")
+    if query.group_by is not None:
+        clause = f"GROUP BY {query.group_by}"
+        if query.max_groups != 1:
+            clause += f" MAXGROUPS {query.max_groups}"
+        parts.append(clause)
+    if spec is not None:
+        parts.append(f"ERROR {_pct(spec.error)}% "
+                     f"CONFIDENCE {_pct(spec.confidence)}%")
+    return " ".join(parts)

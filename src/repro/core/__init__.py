@@ -2,7 +2,8 @@
 # (block-sampling statistics with a priori guarantees, §4), implemented over
 # the repro.engine columnar JAX substrate.
 from repro.core.spec import CompositeAgg, ErrorSpec, SamplingPlan
-from repro.core.taqa import ApproxAnswer, PilotDB, Query, TaqaReport
+from repro.core.taqa import (ApproxAnswer, PilotDB, Query, TaqaReport,
+                             build_engine_plan, structural_signature)
 from repro.core.quickr import RowSamplingAQP
 
 __all__ = [
@@ -14,4 +15,6 @@ __all__ = [
     "Query",
     "TaqaReport",
     "RowSamplingAQP",
+    "build_engine_plan",
+    "structural_signature",
 ]

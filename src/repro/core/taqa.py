@@ -95,8 +95,35 @@ def _decompose(aggs: Tuple[CompositeAgg, ...]) -> Tuple[List[L.AggSpec], List[Tu
     return specs, comp_channels
 
 
+def build_engine_plan(q: Query) -> Tuple[L.Aggregate, List[Tuple[int, ...]]]:
+    """Lower a user query to the engine plan: composites decomposed into
+    simple channels under one terminal Aggregate (§3.3 pilot step 3)."""
+    specs, comp_channels = _decompose(q.aggs)
+    plan = L.Aggregate(child=q.child, aggs=tuple(specs),
+                       group_by=q.group_by, max_groups=q.max_groups)
+    return plan, comp_channels
+
+
+def structural_signature(q: Query) -> L.Aggregate:
+    """Hashable structural identity of a query's physical shape.
+
+    Two queries with equal signatures lower to the same engine plan modulo
+    TABLESAMPLE clauses, i.e. they share every compile-cache entry the
+    physical layer creates (`engine.physical.plan_signature` strips sampling
+    the same way).  The scheduler groups submissions by this key so
+    structurally identical pilots compile once and run back-to-back warm.
+    """
+    plan, _ = build_engine_plan(q)
+    return L.strip_samples(plan)
+
+
 class PilotDB:
-    """The middleware.  `query()` is the user entry point (Fig. 2 workflow)."""
+    """The middleware.  `query()` is the user entry point (Fig. 2 workflow).
+
+    This is the internal representation's driver; the public front door is
+    :class:`repro.api.Session`, which owns an instance of this class per
+    session and derives per-query seeds from the session PRNG.
+    """
 
     def __init__(self, executor: Executor, large_table_rows: int = 50_000):
         self.ex = executor
@@ -104,10 +131,7 @@ class PilotDB:
 
     # -- helpers -------------------------------------------------------------
     def _engine_plan(self, q: Query) -> Tuple[L.Aggregate, List[Tuple[int, ...]]]:
-        specs, comp_channels = _decompose(q.aggs)
-        plan = L.Aggregate(child=q.child, aggs=tuple(specs),
-                           group_by=q.group_by, max_groups=q.max_groups)
-        return plan, comp_channels
+        return build_engine_plan(q)
 
     def _large_tables(self, plan: L.Aggregate) -> List[str]:
         seen: Dict[str, None] = {}

@@ -102,6 +102,21 @@ class Executor:
         self.use_compiled = use_compiled
         self.physical = PhysicalCompiler(self.catalog, kernel_mode=kernel_mode)
 
+    # -- catalog management ---------------------------------------------------
+    def register_table(self, name: str, table: BlockTable) -> None:
+        """Add (or replace) a catalog table.
+
+        The physical compiler shares this catalog dict, so new tables are
+        immediately compilable.  Replacing a table needs no *engine-level*
+        cache invalidation: column data enters compiled executables as
+        runtime arguments (``_CompiledBase._runtime_args``), and a geometry
+        change alters the plan signature, forcing a fresh compilation.
+        Higher layers may cache table *statistics* — go through their own
+        registration (e.g. ``api.Session.register_table``, which refreshes
+        its group-domain cache) rather than calling this directly.
+        """
+        self.catalog[name] = table
+
     # -- table metadata (the "DBMS statistics" TAQA consults) ---------------
     def table_rows(self, name: str) -> int:
         return self.catalog[name].num_rows

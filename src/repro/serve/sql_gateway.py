@@ -1,0 +1,91 @@
+"""Multi-client SQL gateway over one Session — the AQP serving front.
+
+Mirrors :class:`repro.serve.engine.ServeEngine`'s submit/run idiom for the
+query side of the house: many clients post dialect SQL, the gateway parses
+each request immediately (a client's syntax error fails only that client's
+ticket, never the batch) and enqueues the rest on the session's
+:class:`QueryScheduler`.  ``run()`` drains in signature-grouped,
+submission-fair batches, so a thundering herd of structurally identical
+dashboard queries compiles once and runs warm — the paper's middleware
+stance (§2.4) at serving scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.api.scheduler import QueryScheduler
+from repro.api.session import QueryHandle, Session
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    requests: int = 0
+    rejected: int = 0          # failed at parse, never scheduled
+    served: int = 0
+    drains: int = 0
+    compile_misses: int = 0
+    compile_hits: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.compile_hits + self.compile_misses
+        return self.compile_hits / total if total else 0.0
+
+
+class SqlGateway:
+    def __init__(self, session: Session, *, batch_size: Optional[int] = None):
+        if batch_size is not None and batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.session = session
+        self.batch_size = batch_size
+        # A private scheduler over the shared session: draining this gateway
+        # never executes (or counts) queries submitted elsewhere on the
+        # session, and two gateways over one session keep separate stats.
+        self.scheduler = QueryScheduler(session)
+        self.stats = GatewayStats()
+        self._tickets: Dict[int, Tuple[str, QueryHandle]] = {}
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, client_id: str, sql: str) -> int:
+        """Post one client request; returns a ticket (the query id)."""
+        self.stats.requests += 1
+        try:
+            handle = self.scheduler.submit(self.session.prepare(sql))
+        except (ValueError, RecursionError) as e:
+            # ValueError covers SqlSyntaxError/UnsupportedSqlError (both
+            # subclass it); anything else — an internal bug — propagates
+            # loudly instead of being blamed on the client.
+            # one client's unparseable request (including pathological
+            # inputs like a parser-depth-busting predicate chain) fails
+            # only that ticket, never the batch
+            handle = self.session.failed_handle(sql, f"{type(e).__name__}: {e}")
+            self.stats.rejected += 1
+        self._tickets[handle.query_id] = (client_id, handle)
+        return handle.query_id
+
+    def run(self) -> Dict[int, QueryHandle]:
+        """Drain every scheduled request; returns ticket -> finished handle.
+
+        Only *this round's* results are returned: delivered tickets are
+        pruned, so a long-lived submit/run loop neither re-delivers stale
+        answers nor accumulates every answer ever served.
+        """
+        while self.scheduler.pending_count:
+            done = self.scheduler.drain(self.batch_size)
+            self.stats.drains += 1
+            self.stats.served += len(done)
+            drain = self.scheduler.last_drain
+            self.stats.compile_misses += drain.compile_misses
+            self.stats.compile_hits += drain.compile_hits
+        delivered = {qid: h for qid, (_, h) in self._tickets.items()
+                     if h.done}
+        for qid in delivered:
+            del self._tickets[qid]
+        return delivered
+
+    def results_for(self, client_id: str) -> List[QueryHandle]:
+        """This client's not-yet-delivered handles (pending or undelivered
+        failures); answers already returned by ``run()`` are pruned."""
+        return [h for cid, h in self._tickets.values() if cid == client_id]

@@ -1,0 +1,523 @@
+"""Session front door: SQL parser, fluent builder, scheduler, seed threading.
+
+Round-trip tests assert the parser lowers to the *same frozen dataclasses*
+tests elsewhere hand-build (`tests/test_taqa.py`), so the SQL dialect and the
+internal representation can never drift apart silently.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (QueryFailedError, Session, SessionConfig,
+                       SqlSyntaxError, avg_, count_, parse_sql, render_sql,
+                       sum_)
+from repro.core import CompositeAgg, ErrorSpec, Query
+from repro.engine import logical as L
+from repro.engine.datagen import tpch_catalog
+from repro.engine.executor import EmptySampleError, Executor
+from repro.engine.expr import And, Col
+
+# The exact hand-built plans from tests/test_taqa.py
+Q6_PRED = And(Col("l_shipdate").between(100, 1500),
+              And(Col("l_discount").between(0.02, 0.08), Col("l_quantity") < 24))
+Q6_HAND = Query(child=L.Filter(L.Scan("lineitem"), Q6_PRED),
+                aggs=(CompositeAgg("revenue", "sum",
+                                   Col("l_extendedprice") * Col("l_discount")),))
+Q6_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS revenue FROM lineitem "
+          "WHERE l_shipdate BETWEEN 100 AND 1500 "
+          "AND l_discount BETWEEN 0.02 AND 0.08 AND l_quantity < 24")
+
+GROUPED_HAND = Query(
+    child=L.Scan("lineitem"),
+    aggs=(CompositeAgg("qty", "sum", Col("l_quantity")),
+          CompositeAgg("cnt", "count"),
+          CompositeAgg("avgp", "avg", Col("l_extendedprice"))),
+    group_by="l_returnflag", max_groups=3)
+GROUPED_SQL = ("SELECT SUM(l_quantity) AS qty, COUNT(*) AS cnt, "
+               "AVG(l_extendedprice) AS avgp FROM lineitem "
+               "GROUP BY l_returnflag MAXGROUPS 3")
+
+JOIN_HAND = Query(
+    child=L.Filter(
+        L.Join(L.Scan("lineitem"), L.Scan("orders"), "l_orderkey", "o_orderkey"),
+        Col("o_orderdate") < 1200),
+    aggs=(CompositeAgg("rev", "sum", Col("l_extendedprice")),))
+JOIN_SQL = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+            "JOIN orders ON l_orderkey = o_orderkey WHERE o_orderdate < 1200")
+
+RATIO_HAND = Query(
+    child=L.Filter(L.Scan("lineitem"), Col("l_shipdate") < 2000),
+    aggs=(CompositeAgg("promo", "ratio",
+                       Col("l_extendedprice") * Col("l_discount"),
+                       expr2=Col("l_extendedprice")),))
+RATIO_SQL = ("SELECT SUM(l_extendedprice * l_discount) / SUM(l_extendedprice) "
+             "AS promo FROM lineitem WHERE l_shipdate < 2000")
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(scale_rows=600_000, block_rows=32, seed=0)
+
+
+@pytest.fixture()
+def session(catalog):
+    return Session(catalog, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Parser: lowering equals the hand-built dataclass plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sql,hand", [
+    (Q6_SQL, Q6_HAND),
+    (GROUPED_SQL, GROUPED_HAND),
+    (JOIN_SQL, JOIN_HAND),
+    (RATIO_SQL, RATIO_HAND),
+])
+def test_parse_lowers_to_handbuilt_plan(sql, hand):
+    parsed = parse_sql(sql)
+    assert parsed.query == hand
+    assert parsed.spec is None
+
+
+def test_parse_error_clause():
+    parsed = parse_sql(Q6_SQL + " ERROR 5% CONFIDENCE 95%")
+    assert parsed.query == Q6_HAND
+    assert parsed.spec == ErrorSpec(error=0.05, confidence=0.95)
+    assert parsed.is_approximate
+
+
+@pytest.mark.parametrize("sql,hand", [
+    (Q6_SQL, Q6_HAND),
+    (GROUPED_SQL, GROUPED_HAND),
+    (JOIN_SQL, JOIN_HAND),
+    (RATIO_SQL, RATIO_HAND),
+])
+def test_render_round_trip_matches_handbuilt(sql, hand):
+    """parse -> lower -> render -> parse again reproduces the plan exactly."""
+    for spec in (None, ErrorSpec(error=0.025, confidence=0.9)):
+        rendered = render_sql(hand, spec)
+        reparsed = parse_sql(rendered)
+        assert reparsed.query == hand, rendered
+        assert reparsed.spec == spec
+
+
+@pytest.mark.parametrize("sql", [
+    "SELECT SUM(a) * SUM(b) AS prod FROM t",
+    "SELECT 0.5 * SUM(a) + 2 * SUM(b) AS mix FROM t",
+    "SELECT -2 * SUM(a) + SUM(b) AS diff FROM t",
+    "SELECT SUM(a) + -0.5 * SUM(b) AS mix FROM t",
+    "SELECT SUM(a) + SUM(b) AS both FROM t WHERE NOT (x < 3 OR y >= 4)",
+    "SELECT COUNT(*) AS n FROM t JOIN u ON a = b JOIN v ON c = d",
+    "SELECT AVG(a - b) AS d FROM t WHERE (a + b) * 2 < 10 AND c != 4",
+    "SELECT SUM(a) AS s FROM t WHERE x BETWEEN -1.5 AND 1 AND y < -3",
+    "SELECT SUM(a) AS s FROM t GROUP BY g MAXGROUPS 7 ERROR 2.5% CONFIDENCE 97.5%",
+])
+def test_render_round_trip_clause_combinations(sql):
+    p1 = parse_sql(sql)
+    p2 = parse_sql(render_sql(p1.query, p1.spec))
+    assert p2.query == p1.query
+    assert p2.spec == p1.spec
+
+
+@pytest.mark.parametrize("bad", [
+    "SELECT SUM(a) FROM",                       # missing table
+    "SUM(a) FROM t",                            # missing SELECT
+    "SELECT MAX(a) AS m FROM t",                # non-linear aggregate
+    "SELECT SUM(a) / COUNT(*) AS r FROM t",     # ratio needs SUM parts
+    "SELECT SUM(a) AS s FROM t WHERE x",        # predicate isn't boolean
+    "SELECT SUM(a) AS s FROM t ERROR 5 CONFIDENCE 95%",  # missing %
+    "SELECT SUM(a) AS s FROM t trailing",       # trailing input
+    "SELECT SUM(a) AS s FROM t ERROR 150% CONFIDENCE 95%",  # out of range
+    "SELECT SUM(a) AS s FROM t ERROR 5% CONFIDENCE 100%",   # out of range
+    "SELECT SUM(a) AS s FROM t GROUP BY g MAXGROUPS 2.5",   # non-integral
+])
+def test_parse_rejects_bad_sql(bad):
+    with pytest.raises(SqlSyntaxError):
+        parse_sql(bad)
+
+
+def test_default_agg_names():
+    parsed = parse_sql("SELECT SUM(a), COUNT(*) FROM t")
+    assert [a.name for a in parsed.query.aggs] == ["agg0", "agg1"]
+
+
+# ---------------------------------------------------------------------------
+# Builder: the typed twin lowers identically
+# ---------------------------------------------------------------------------
+
+def test_builder_lowers_like_sql(session):
+    q, spec = (session.table("lineitem")
+               .where(Q6_PRED)
+               .agg(sum_(Col("l_extendedprice") * Col("l_discount")).as_("revenue"))
+               .error(0.05, 0.95)
+               .build())
+    assert q == Q6_HAND
+    assert spec == ErrorSpec(error=0.05, confidence=0.95)
+
+
+def test_builder_composites(session):
+    b = session.table("lineitem").agg(
+        (sum_(Col("l_extendedprice") * Col("l_discount"))
+         / sum_(Col("l_extendedprice"))).as_("promo"),
+        (sum_(Col("a")) * sum_(Col("b"))).as_("prod"),
+        (0.5 * sum_(Col("a")) + 2 * sum_(Col("b"))).as_("mix"),
+        count_().as_("n"),
+        avg_(Col("l_quantity")).as_("avg_qty"))
+    q, _ = b.build()
+    kinds = [a.kind for a in q.aggs]
+    assert kinds == ["ratio", "product", "add", "count", "avg"]
+    assert q.aggs[2].weights == (0.5, 2.0)
+
+
+def test_builder_composite_preserves_operand_name():
+    """An .as_() name on an operand carries through /,*,+ composition."""
+    ratio = sum_(Col("a")).as_("promo") / sum_(Col("b"))
+    assert ratio.to_composite("agg0").name == "promo"
+    mix = 0.5 * sum_(Col("a")) + sum_(Col("b")).as_("mix")
+    assert mix.to_composite("agg0").name == "mix"
+    # an explicit name on the composite still wins
+    assert (ratio.as_("r2")).to_composite("agg0").name == "r2"
+
+
+def test_builder_rejects_weighted_non_add_composites(session):
+    """A scalar coefficient outside '+' must raise, never silently drop."""
+    with pytest.raises(TypeError):
+        (0.5 * sum_(Col("a"))) / sum_(Col("b"))
+    with pytest.raises(TypeError):
+        2 * sum_(Col("a")) * sum_(Col("b"))
+    with pytest.raises(TypeError):
+        sum_(Col("a")) / (2 * sum_(Col("b")))
+    with pytest.raises(TypeError):
+        session.table("lineitem").agg(2 * sum_(Col("l_quantity"))).build()
+    # scalar operands of / and + get a descriptive TypeError, not an
+    # AttributeError from inside the Agg internals
+    with pytest.raises(TypeError, match="Table-2"):
+        sum_(Col("a")) / 2
+    with pytest.raises(TypeError, match="Table-2"):
+        sum_(Col("a")) + 3
+
+
+def test_bad_session_spec_kwargs_fail_at_construction(catalog):
+    """A server-side tunable typo must fail loudly when the Session is
+    built, not masquerade as every client's SQL syntax error."""
+    with pytest.raises(TypeError):
+        Session(catalog, config=SessionConfig(
+            spec_kwargs={"min_pilot_block": 50}))  # typo: missing 's'
+
+
+def test_builder_error_applies_session_spec_kwargs(catalog):
+    """Both front doors must run identical TAQA tunables (interchangeable)."""
+    session = Session(catalog, seed=0,
+                      config=SessionConfig(spec_kwargs={"min_pilot_blocks": 50}))
+    _, built_spec = (session.table("lineitem")
+                     .agg(sum_(Col("l_quantity")).as_("q"))
+                     .error(0.05, 0.95).build())
+    parsed_spec = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                              "ERROR 5% CONFIDENCE 95%").spec
+    assert built_spec == parsed_spec
+    assert built_spec.min_pilot_blocks == 50
+    # explicit kwargs on .error() still win over the session override
+    _, spec2 = (session.table("lineitem")
+                .agg(sum_(Col("l_quantity")).as_("q"))
+                .error(0.05, 0.95, min_pilot_blocks=40).build())
+    assert spec2.min_pilot_blocks == 40
+
+
+def test_builder_join_and_group(session):
+    q, _ = (session.table("lineitem")
+            .join("orders", "l_orderkey", "o_orderkey")
+            .where(Col("o_orderdate") < 1200)
+            .agg(sum_(Col("l_extendedprice")).as_("rev"))
+            .build())
+    assert q == JOIN_HAND
+    qg, _ = (session.table("lineitem")
+             .group_by("l_returnflag")  # max_groups inferred from catalog
+             .agg(sum_(Col("l_quantity")).as_("qty"))
+             .build())
+    assert qg.max_groups == 3
+
+
+def test_max_groups_inference_from_catalog(session):
+    parsed_sql = "SELECT SUM(l_quantity) AS qty FROM lineitem GROUP BY l_returnflag"
+    handle = session.sql(parsed_sql)
+    assert handle.query.max_groups == 3
+    assert handle.status == "done"
+
+
+# ---------------------------------------------------------------------------
+# Session execution: the acceptance path
+# ---------------------------------------------------------------------------
+
+def test_session_sql_avg_guaranteed_answer(catalog):
+    """Acceptance: AVG + WHERE + ERROR 5% CONFIDENCE 95% through session.sql
+    returns a guaranteed (non-fallback) ApproxAnswer within the target."""
+    session = Session(
+        catalog, seed=0,
+        config=SessionConfig(spec_kwargs={"max_final_rate": 0.25}))
+    handle = session.sql("SELECT AVG(l_extendedprice) AS avgp FROM lineitem "
+                         "WHERE l_quantity < 24 ERROR 5% CONFIDENCE 95%")
+    assert handle.status == "done"
+    assert handle.fallback is None
+    exact = session.sql("SELECT AVG(l_extendedprice) AS avgp FROM lineitem "
+                        "WHERE l_quantity < 24")
+    rel = abs(handle.scalar("avgp") - exact.scalar("avgp")) / exact.scalar("avgp")
+    assert rel <= 0.05
+    # and it sampled, rather than scanning everything
+    r = handle.report
+    assert r.pilot_scanned_bytes + r.final_scanned_bytes < r.exact_scanned_bytes
+
+
+def test_seed_threading_bit_identical_sessions(catalog):
+    sql = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+           "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+    a = Session(catalog, seed=11).sql(sql)
+    b = Session(catalog, seed=11).sql(sql)
+    assert a.seed == b.seed
+    assert np.array_equal(a.result().values, b.result().values)
+    assert a.report.plan.rates == b.report.plan.rates
+    c = Session(catalog, seed=12).sql(sql)
+    assert c.seed != a.seed
+
+
+def test_seeds_assigned_at_submission_not_drain(catalog):
+    """Scheduler batching must not change sampling: submit+drain replays the
+    synchronous path bit-for-bit for the same session seed."""
+    sql1 = ("SELECT SUM(l_quantity) AS qty FROM lineitem "
+            "WHERE l_shipdate < 2000 ERROR 8% CONFIDENCE 95%")
+    sql2 = ("SELECT COUNT(*) AS n FROM lineitem "
+            "WHERE l_discount BETWEEN 0.02 AND 0.08 ERROR 8% CONFIDENCE 95%")
+    sync = Session(catalog, seed=3)
+    r1, r2 = sync.sql(sql1), sync.sql(sql2)
+    queued = Session(catalog, seed=3)
+    h1, h2 = queued.submit(sql1), queued.submit(sql2)
+    queued.drain()
+    assert np.array_equal(h1.result().values, r1.result().values)
+    assert np.array_equal(h2.result().values, r2.result().values)
+
+
+def test_exact_sql_without_error_clause(session):
+    handle = session.sql("SELECT SUM(l_quantity) AS qty FROM lineitem")
+    assert handle.status == "done"
+    assert handle.spec is None
+    assert handle.fallback == "requested exact"
+    assert handle.scalar("qty") > 0
+
+
+# ---------------------------------------------------------------------------
+# Failure capture: nothing raises through the client
+# ---------------------------------------------------------------------------
+
+def test_empty_sample_error_exact_fallback_end_to_end(session, monkeypatch):
+    """EmptySampleError from the final sampled scan surfaces as an explicit
+    exact fallback on the handle — never as an exception to the client."""
+    real_execute = Executor.execute
+
+    def flaky_execute(self, plan):
+        if any(s.sample is not None for s in plan.scans()):
+            raise EmptySampleError("lineitem", "block", 0.01)
+        return real_execute(self, plan)
+
+    monkeypatch.setattr(Executor, "execute", flaky_execute)
+    handle = session.sql(Q6_SQL + " ERROR 8% CONFIDENCE 95%")
+    assert handle.status == "done"
+    assert handle.report.fallback is not None
+    assert "final sample empty" in handle.report.fallback
+    # the fallback is the exact answer, not a fabricated estimate
+    exact = session.sql(Q6_SQL)
+    assert handle.scalar("revenue") == exact.scalar("revenue")
+
+
+def test_zero_selectivity_predicate_falls_back(session):
+    handle = session.sql("SELECT SUM(l_quantity) AS s FROM lineitem "
+                         "WHERE l_shipdate > 99999 ERROR 5% CONFIDENCE 95%")
+    assert handle.status == "done"
+    assert handle.report.fallback is not None
+    assert handle.scalar("s") == 0.0
+
+
+def test_execution_failure_captured_on_handle(session):
+    handle = session.sql("SELECT SUM(nope) AS s FROM lineitem "
+                         "ERROR 5% CONFIDENCE 95%")
+    assert handle.status == "failed"
+    assert handle.error is not None
+    with pytest.raises(QueryFailedError):
+        handle.result()
+
+
+def test_unknown_table_rejected(session):
+    with pytest.raises(KeyError):
+        session.table("nope")
+    handle = session.sql("SELECT COUNT(*) AS n FROM nope")
+    assert handle.status == "failed"
+
+
+def test_register_table(catalog):
+    session = Session({"lineitem": catalog["lineitem"]}, seed=0)
+    assert session.tables() == ["lineitem"]
+    session.register_table("orders", catalog["orders"])
+    assert "orders" in session.tables()
+    handle = session.sql("SELECT COUNT(*) AS n FROM orders")
+    assert handle.status == "done" and handle.scalar("n") > 0
+
+
+def test_register_table_invalidates_group_statistics(catalog):
+    """Replacing a table must refresh cached MAXGROUPS inference."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    session = Session(dict(catalog), seed=0)
+    assert session.infer_max_groups("lineitem", "l_returnflag") == 3
+    old = catalog["lineitem"]
+    wider = dc.replace(
+        old,
+        columns={**old.columns,
+                 "l_returnflag": jnp.asarray(
+                     np.arange(old.padded_rows) % 6,
+                     old.columns["l_returnflag"].dtype)},
+        valid=old.valid, block_id=old.block_id,
+        num_origin_blocks=old.num_origin_blocks)
+    session.register_table("lineitem", wider)
+    assert session.infer_max_groups("lineitem", "l_returnflag") == 6
+    handle = session.sql("SELECT COUNT(*) AS n FROM lineitem "
+                         "GROUP BY l_returnflag")
+    assert handle.query.max_groups == 6
+
+
+def test_group_by_joined_table_column(session):
+    """GROUP BY may name a joined table's column; inference consults every
+    table in the FROM/JOIN chain, not only the base."""
+    handle = session.sql("SELECT SUM(l_quantity) AS qty FROM lineitem "
+                         "JOIN orders ON l_orderkey = o_orderkey "
+                         "GROUP BY o_orderpriority")
+    assert handle.status == "done"
+    assert handle.query.max_groups == \
+        session.infer_max_groups("orders", "o_orderpriority")
+    builder_q, _ = (session.table("lineitem")
+                    .join("orders", "l_orderkey", "o_orderkey")
+                    .group_by("o_orderpriority")
+                    .agg(sum_(Col("l_quantity")).as_("qty"))
+                    .build())
+    assert builder_q.max_groups == handle.query.max_groups
+
+
+def test_group_by_non_integer_column_rejected(session):
+    """GROUP BY on a float-coded column must be refused, not silently
+    collapsed into one group."""
+    from repro.api import UnsupportedSqlError
+    with pytest.raises(UnsupportedSqlError):
+        session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                    "GROUP BY l_discount")
+    # an explicit MAXGROUPS matching the integer-coded domain still works
+    handle = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                         "GROUP BY l_returnflag MAXGROUPS 3")
+    assert handle.status == "done"
+
+
+def test_group_by_id_cardinality_rejected_not_oom(session):
+    """An id-column GROUP BY through the front door must be refused — the
+    dense per-(block, group) buffers would otherwise OOM the server."""
+    from repro.api import UnsupportedSqlError
+    with pytest.raises(UnsupportedSqlError, match="limit"):
+        session.sql("SELECT COUNT(*) AS n FROM lineitem "
+                    "GROUP BY l_orderkey ERROR 5% CONFIDENCE 95%")
+    with pytest.raises(UnsupportedSqlError, match="limit"):
+        session.sql("SELECT COUNT(*) AS n FROM lineitem "
+                    "GROUP BY l_returnflag MAXGROUPS 1000000")
+
+
+def test_maxgroups_below_domain_rejected(catalog):
+    """MAXGROUPS below the observed domain would silently merge overflow
+    groups into the last group — refuse instead of returning wrong sums.
+    Rejected queries consume no seed, so replay stays deterministic."""
+    from repro.api import UnsupportedSqlError
+    good = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+    a = Session(catalog, seed=21)
+    with pytest.raises(UnsupportedSqlError, match="domain"):
+        a.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+              "GROUP BY l_returnflag MAXGROUPS 2")
+    ha = a.sql(good)
+    b = Session(catalog, seed=21)
+    hb = b.sql(good)  # no rejected query before it
+    assert ha.seed == hb.seed
+    assert np.array_equal(ha.result().values, hb.result().values)
+
+
+def test_unknown_table_with_group_by_is_captured(session):
+    # inference is advisory: the missing table fails at execution, on the
+    # handle — never as a KeyError through sql()/submit()
+    handle = session.sql("SELECT COUNT(*) AS n FROM nope GROUP BY g")
+    assert handle.status == "failed"
+    assert "KeyError" in handle.error
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: signature grouping, compile-once, fairness
+# ---------------------------------------------------------------------------
+
+def test_scheduler_identical_queries_compile_once(catalog):
+    session = Session(catalog, seed=7)
+    sql = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+           "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+    warm = session.sql(sql)          # first query pays the compilations
+    assert warm.status == "done"
+    handles = [session.submit(sql) for _ in range(6)]
+    assert session.scheduler.pending_count == 6
+    done = session.drain()
+    stats = session.scheduler.last_drain
+    assert [h.query_id for h in done] == [h.query_id for h in handles]
+    assert all(h.status == "done" for h in done)
+    # N structurally identical queries trigger at most one physical
+    # compilation (a sample-size bucket boundary) — the rest run warm.
+    assert stats.compile_misses <= 1, stats
+    assert stats.compile_hits >= 10
+    assert stats.n_groups == 1 and stats.group_sizes == [6]
+    # answers differ across members (fresh seeds), but all are guaranteed
+    assert all(h.fallback is None for h in done)
+    assert len({h.seed for h in done}) == len(done)
+
+
+def test_scheduler_submission_fair_grouping(catalog):
+    session = Session(catalog, seed=1)
+    sql_a = "SELECT SUM(l_quantity) AS qty FROM lineitem ERROR 10% CONFIDENCE 90%"
+    sql_b = ("SELECT COUNT(*) AS n FROM lineitem WHERE l_shipdate < 2000 "
+             "ERROR 10% CONFIDENCE 90%")
+    order = [session.submit(s) for s in (sql_a, sql_b, sql_a, sql_b, sql_a)]
+    done = session.drain()
+    stats = session.scheduler.last_drain
+    assert stats.n_groups == 2 and sorted(stats.group_sizes) == [2, 3]
+    # group A arrived first -> all of A runs before any of B,
+    # members in submission order within each group
+    ids = [h.query_id for h in done]
+    assert ids == [order[0].query_id, order[2].query_id, order[4].query_id,
+                   order[1].query_id, order[3].query_id]
+
+
+def test_session_rejects_catalog_and_executor_together(catalog):
+    from repro.engine.executor import Executor
+    with pytest.raises(ValueError, match="not both"):
+        Session(catalog, executor=Executor(catalog))
+
+
+def test_scheduler_resubmit_is_idempotent(catalog):
+    session = Session(catalog, seed=4)
+    handle = session.submit("SELECT COUNT(*) AS n FROM lineitem")
+    session.scheduler.submit(handle)  # retry must not double-queue
+    assert session.scheduler.pending_count == 1
+    done = session.drain()
+    assert len(done) == 1 and session.scheduler.last_drain.n_queries == 1
+
+
+def test_scheduler_max_queries_batching(catalog):
+    session = Session(catalog, seed=2)
+    sql = "SELECT SUM(l_quantity) AS qty FROM lineitem ERROR 10% CONFIDENCE 90%"
+    for _ in range(5):
+        session.submit(sql)
+    first = session.drain(max_queries=2)
+    assert len(first) == 2 and session.scheduler.pending_count == 3
+    rest = session.drain()
+    assert len(rest) == 3 and session.scheduler.pending_count == 0
+    with pytest.raises(ValueError):
+        session.drain(max_queries=0)

@@ -1,14 +1,17 @@
-"""Serving engine + guaranteed approximate evaluation."""
+"""Serving engine + SQL gateway + guaranteed approximate evaluation."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Session
 from repro.aqpeval import GuaranteedEvaluator
 from repro.configs import ARCHITECTURES
+from repro.engine.datagen import tpch_catalog
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
+from repro.serve.sql_gateway import SqlGateway
 
 RNG = jax.random.PRNGKey(0)
 
@@ -60,6 +63,70 @@ def test_engine_single_compiled_graph():
     eng.submit([2, 3], max_new_tokens=3)
     eng.run()
     assert eng._decode._cache_size() == n1  # no recompilation
+
+
+# -- SQL gateway: the AQP serving front -------------------------------------------
+
+@pytest.fixture(scope="module")
+def aqp_session():
+    return Session(tpch_catalog(scale_rows=200_000, block_rows=32, seed=0),
+                   seed=5)
+
+
+def test_gateway_serves_many_clients_warm(aqp_session):
+    """A herd of structurally identical dashboard queries from different
+    clients runs as one signature group — compile once, serve warm."""
+    gw = SqlGateway(aqp_session)
+    sql = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+           "WHERE l_quantity < 24 ERROR 10% CONFIDENCE 90%")
+    tickets = {gw.submit(f"client{i}", sql): f"client{i}" for i in range(8)}
+    assert len(gw.results_for("client3")) == 1  # queued, not yet delivered
+    results = gw.run()
+    assert set(results) == set(tickets)
+    assert all(h.status == "done" for h in results.values())
+    assert gw.stats.served == 8 and gw.stats.rejected == 0
+    # every query past the first two compilations hit the compile cache
+    assert gw.stats.cache_hit_rate > 0.5
+    # delivered tickets are pruned: no re-delivery, no unbounded growth
+    assert gw.results_for("client3") == []
+    assert gw.run() == {}
+
+
+def test_gateway_bad_sql_fails_only_that_ticket(aqp_session):
+    gw = SqlGateway(aqp_session)
+    good = gw.submit("alice", "SELECT COUNT(*) AS n FROM lineitem")
+    bad = gw.submit("bob", "SELEKT COUNT(*) FROM lineitem")
+    missing = gw.submit("eve", "SELECT COUNT(*) AS n FROM not_a_table "
+                               "GROUP BY g")
+    out_of_range = gw.submit("mallory", "SELECT COUNT(*) AS n FROM lineitem "
+                                        "ERROR 150% CONFIDENCE 95%")
+    deep = gw.submit("trudy", "SELECT COUNT(*) AS n FROM lineitem WHERE "
+                     + " AND ".join(["l_quantity < 24"] * 2000))
+    results = gw.run()
+    assert results[good].status == "done"
+    assert results[bad].status == "failed"
+    assert "SqlSyntaxError" in results[bad].error
+    assert results[missing].status == "failed"
+    assert results[out_of_range].status == "failed"
+    # a parser-depth-busting request fails its own ticket, not the batch
+    assert results[deep].status == "failed"
+    assert gw.stats.rejected >= 2
+    assert gw.stats.requests == 5
+
+
+def test_gateway_rejects_degenerate_batch_size(aqp_session):
+    with pytest.raises(ValueError):
+        SqlGateway(aqp_session, batch_size=0)
+
+
+def test_gateway_batched_drains(aqp_session):
+    gw = SqlGateway(aqp_session, batch_size=3)
+    sql = "SELECT SUM(l_quantity) AS q FROM lineitem ERROR 10% CONFIDENCE 90%"
+    for i in range(7):
+        gw.submit(f"c{i}", sql)
+    results = gw.run()
+    assert len(results) == 7
+    assert gw.stats.drains >= 3  # 3 + 3 + 1 under batch_size=3
 
 
 # -- guaranteed approximate evaluation -------------------------------------------
