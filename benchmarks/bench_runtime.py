@@ -1,0 +1,151 @@
+"""Herd benchmark for the concurrent query runtime (repro.runtime).
+
+Workload: a dashboard herd — N structurally identical queries (the many-
+users case) plus M distinct queries — pushed through the session scheduler
+under four runtime configurations:
+
+  serial       workers=0, sharing off, cache off  (the old drain() loop)
+  async        worker pool only
+  async+share  + one pilot per signature group
+  full         + session result cache (the default configuration)
+
+Reported per configuration: wall time, pilot stages executed, physical
+compilations, result-cache hits — and a bit-identity check across all four
+(answers are a pure function of session seed and query content; the runtime
+may only change wall-clock, never values).  Emits the machine-readable
+``BENCH_runtime.json`` at the repo root for trajectory tracking.
+
+  PYTHONPATH=src python -m benchmarks.run --only runtime
+  BENCH_ROWS=200000 PYTHONPATH=src python -m benchmarks.bench_runtime
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE_ROWS, catalog, csv_row, save_results
+from repro.api import Session, SessionConfig
+
+BENCH_RUNTIME_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_runtime.json")
+
+HERD_N = int(os.environ.get("BENCH_HERD_N", 12))
+DISTINCT_M = int(os.environ.get("BENCH_DISTINCT_M", 4))
+
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+DISTINCT_SQLS = [
+    "SELECT SUM(l_quantity) AS q FROM lineitem ERROR 10% CONFIDENCE 90%",
+    "SELECT COUNT(*) AS n FROM lineitem WHERE l_shipdate < 2000 "
+    "ERROR 10% CONFIDENCE 90%",
+    "SELECT AVG(l_extendedprice) AS p FROM lineitem "
+    "WHERE l_discount BETWEEN 0.02 AND 0.08 ERROR 10% CONFIDENCE 90%",
+    "SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+    "WHERE l_shipdate BETWEEN 400 AND 2200 ERROR 10% CONFIDENCE 90%",
+]
+
+CONFIGS = {
+    "serial": SessionConfig(async_workers=0, share_pilots=False,
+                            result_cache_size=0, large_table_rows=100_000),
+    "async": SessionConfig(async_workers=4, share_pilots=False,
+                           result_cache_size=0, large_table_rows=100_000),
+    "async_share": SessionConfig(async_workers=4, share_pilots=True,
+                                 result_cache_size=0,
+                                 large_table_rows=100_000),
+    "full": SessionConfig(async_workers=4, share_pilots=True,
+                          result_cache_size=128, large_table_rows=100_000),
+}
+
+
+def _workload():
+    sqls = [HERD_SQL] * HERD_N
+    for i in range(DISTINCT_M):
+        sqls.append(DISTINCT_SQLS[i % len(DISTINCT_SQLS)])
+    return sqls
+
+
+def _run_config(cfg: SessionConfig, tables) -> dict:
+    session = Session(tables, seed=17, config=cfg)
+    # Warm the jit caches on every unique query first, so the measured
+    # window is the steady-state serving loop, not first-touch XLA
+    # compilation (identical across configurations; the result cache — when
+    # enabled — is warm too, which is exactly its serving-state semantics).
+    for s in dict.fromkeys(_workload()):
+        session.sql(s)
+    ex = session.executor
+    info0 = session.compile_cache_info()
+    p0, m0, h0 = ex.pilots_run, info0.misses, info0.hits
+    rc0 = session.result_cache_info().hits
+    handles = [session.submit(s) for s in _workload()]
+    t0 = time.perf_counter()
+    session.drain()
+    wall = time.perf_counter() - t0
+    info = session.compile_cache_info()
+    out = {
+        "wall_s": wall,
+        "queries": len(handles),
+        "pilots_run": ex.pilots_run - p0,
+        "compile_misses": info.misses - m0,
+        "compile_hits": info.hits - h0,
+        "result_hits": session.result_cache_info().hits - rc0,
+        "failed": sum(h.status != "done" for h in handles),
+        "values": {h.query_id: np.asarray(h.result().values)
+                   for h in handles},
+        "sqls": {h.query_id: h.sql for h in handles},
+    }
+    session.close()
+    return out
+
+
+def run() -> dict:
+    tables = {k: v for k, v in catalog().items() if k != "skewed"}
+    results = {}
+    for name, cfg in CONFIGS.items():
+        results[name] = _run_config(cfg, tables)
+
+    # bit-identity across configurations, matched by query content
+    base = results["serial"]
+    by_sql = {}
+    for qid, sql in base["sqls"].items():
+        by_sql.setdefault(sql, base["values"][qid])
+    identical = True
+    for name, res in results.items():
+        for qid, sql in res["sqls"].items():
+            if not np.array_equal(res["values"][qid], by_sql[sql]):
+                identical = False
+    for res in results.values():
+        res.pop("values"), res.pop("sqls")
+
+    doc = {"bench": "runtime", "rows": SCALE_ROWS,
+           "herd_n": HERD_N, "distinct_m": DISTINCT_M,
+           "bit_identical_across_configs": identical}
+    doc.update({name: res for name, res in results.items()})
+    for name in ("async", "async_share", "full"):
+        doc[name]["speedup_vs_serial"] = (
+            results["serial"]["wall_s"] / results[name]["wall_s"]
+            if results[name]["wall_s"] else float("nan"))
+
+    with open(BENCH_RUNTIME_PATH, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# wrote {os.path.normpath(BENCH_RUNTIME_PATH)}", file=sys.stderr)
+    save_results("runtime", doc)
+
+    n = HERD_N + DISTINCT_M
+    for name, res in results.items():
+        print(csv_row(
+            f"runtime_{name}", res["wall_s"] / n * 1e6,
+            f"pilots={res['pilots_run']};misses={res['compile_misses']};"
+            f"result_hits={res['result_hits']};"
+            f"speedup={doc[name].get('speedup_vs_serial', 1.0):.2f}x"))
+    assert identical, "runtime configurations must be bit-identical"
+    assert all(res["failed"] == 0 for res in results.values())
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -45,12 +45,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench: guarantees|naive_clt|scan|"
-                         "speedup|quickr|ablation|kernels|compiled")
+                         "speedup|quickr|ablation|kernels|compiled|runtime")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_compiled, bench_guarantees,
                             bench_kernels, bench_naive_clt, bench_quickr,
-                            bench_scan, bench_speedup)
+                            bench_runtime, bench_scan, bench_speedup)
 
     benches = {
         "scan": bench_scan.run,              # Fig. 4
@@ -61,6 +61,7 @@ def main() -> None:
         "naive_clt": bench_naive_clt.run,    # Fig. 16/17 (Appendix A.1)
         "kernels": bench_kernels.run,        # kernel-layer system model
         "compiled": bench_compiled.run,      # eager vs compiled physical layer
+        "runtime": bench_runtime.run,        # serving herd: async/share/cache
     }
     todo = [args.only] if args.only else list(benches)
     print("name,us_per_call,derived")

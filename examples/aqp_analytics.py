@@ -75,18 +75,21 @@ def main():
              .run())
     show("builder  ", approx, exact, 0.05)
 
-    # -- concurrent scheduler: compile once, serve many ----------------------
+    # -- concurrent runtime: one pilot + cached answers for a herd -----------
     herd_sql = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
                 "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
-    session.sql(herd_sql)  # warm the compile cache
+    warm = session.sql(herd_sql)  # warms compile caches AND the result cache
     handles = [session.submit(herd_sql) for _ in range(16)]
     session.drain()
     stats = session.scheduler.last_drain
-    print(f"[scheduler] {stats.n_queries} identical queries in "
-          f"{stats.n_groups} group(s): {stats.compile_misses} new "
-          f"compilations, cache hit rate {stats.cache_hit_rate:.0%}, "
+    print(f"[runtime] {stats.n_queries} identical queries in "
+          f"{stats.n_groups} group(s): {stats.pilots_run} pilot stage(s), "
+          f"{stats.compile_misses} new compilations, "
+          f"{stats.result_hits} answers from the result cache, "
           f"{stats.wall_time_s*1e3:.0f} ms total")
     assert all(h.status == "done" for h in handles)
+    # cached answers are the warm query's original guaranteed answer
+    assert all(h.scalar("rev") == warm.scalar("rev") for h in handles)
 
 
 if __name__ == "__main__":

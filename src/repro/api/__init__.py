@@ -8,7 +8,8 @@ from repro.api.scheduler import DrainStats, QueryScheduler
 from repro.api.session import (QueryFailedError, QueryHandle, QueryStatus,
                                Session, SessionConfig)
 from repro.api.sql import (ParsedQuery, SqlSyntaxError, UnsupportedSqlError,
-                           parse_sql, render_sql)
+                           parse_sql, render_sql, resolve_string_literals)
+from repro.runtime import BackpressureError, ResultCacheInfo
 
 __all__ = [
     "Session",
@@ -24,7 +25,10 @@ __all__ = [
     "avg_",
     "parse_sql",
     "render_sql",
+    "resolve_string_literals",
     "ParsedQuery",
     "SqlSyntaxError",
     "UnsupportedSqlError",
+    "BackpressureError",
+    "ResultCacheInfo",
 ]

@@ -1,21 +1,28 @@
 """Concurrent query scheduler: signature-grouped, submission-fair draining.
 
 The millions-of-users scenario sends streams of structurally identical
-queries (the same dashboard refreshed by many users — fresh sampling seeds,
-same plan *including predicate constants*: the kernels bake constants in as
-compile-time bounds, so queries differing in a WHERE constant compile
-separately, exactly as ``engine/physical.plan_signature`` keys them).  The
-physical layer already compiles one executable per plan signature; this
-scheduler makes the serving side exploit it:
+queries (the same dashboard refreshed by many users — same plan *including
+predicate constants*: the kernels bake constants in as compile-time bounds,
+so queries differing in a WHERE constant compile separately, exactly as
+``engine/physical.plan_signature`` keys them).  The physical layer already
+compiles one executable per plan signature; this scheduler makes the
+serving side exploit it:
 
-* submissions queue as :class:`QueryHandle`\\ s (seeds were already derived
-  at submission, so scheduling order never changes sampling),
-* ``drain()`` groups pending handles by :func:`repro.core.taqa.
-  structural_signature` and runs each group back-to-back — the first member
-  pays the (cached) compilation, the rest run warm,
-* groups are visited in order of their earliest submission and members in
-  submission order, so no query starves behind an unrelated hot group
+* submissions queue as :class:`QueryHandle`\\ s (seeds derive from query
+  content at submission, so scheduling order never changes sampling),
+* draining groups pending handles by their structural signature (computed
+  once at submission, carried on the handle) and hands the groups to the
+  session's :class:`repro.runtime.AsyncRuntime` — groups run concurrently
+  on the worker pool, one pilot is shared within each group's pilot-params
+  subgroup, and cached answers short-circuit execution entirely,
+* groups are *admitted* in order of their earliest submission and members
+  in submission order, so no query starves behind an unrelated hot group
   (submission-fair batches); ``max_queries`` caps one drain call.
+
+``drain()`` blocks until its batch finished and returns handles in the
+fair admission order (regardless of worker completion order);
+``drain_async()`` dispatches everything pending and returns immediately —
+callers observe completion via ``handle.poll()`` / ``handle.wait()``.
 """
 
 from __future__ import annotations
@@ -32,12 +39,21 @@ if TYPE_CHECKING:  # circular at runtime: session owns the scheduler
 
 @dataclasses.dataclass
 class DrainStats:
-    """What one ``drain()`` call did to the compile cache and the queue."""
+    """What one ``drain()`` call did to the caches and the queue.
+
+    ``pilots_run`` and ``result_hits`` are attributed per handle (from the
+    batch's own reports/flags), so concurrent activity elsewhere on the
+    session never leaks in.  ``compile_misses``/``compile_hits`` diff the
+    session-global compile cache around the drain — exact when nothing else
+    executes concurrently, which is the single-drainer serving loop.
+    """
 
     n_queries: int = 0
     n_groups: int = 0
     compile_misses: int = 0   # new physical compilations this drain
     compile_hits: int = 0     # warm executions this drain
+    pilots_run: int = 0       # pilot stages executed for this batch
+    result_hits: int = 0      # batch answers served from the result cache
     wall_time_s: float = 0.0
     group_sizes: List[int] = dataclasses.field(default_factory=list)
 
@@ -51,19 +67,29 @@ class QueryScheduler:
     def __init__(self, session: "Session"):
         self._session = session
         self._pending: List["QueryHandle"] = []
-        self._signatures: Dict[int, object] = {}  # query_id -> structural key
+        self._queued: set = set()  # query ids, for idempotent resubmits
+        # dispatched-but-unfinished handles: a retried submit() during an
+        # async drain must not re-queue a handle a worker is executing
+        self._in_flight: Dict[int, "QueryHandle"] = {}
         self.last_drain: Optional[DrainStats] = None
         self.total_drained = 0
+
+    def _prune_in_flight(self) -> None:
+        self._in_flight = {qid: h for qid, h in self._in_flight.items()
+                           if not h.done}
 
     def submit(self, handle: "QueryHandle") -> "QueryHandle":
         if handle.done:
             return handle  # pre-failed (e.g. parse rejection) — nothing to run
-        if handle.query_id in self._signatures:
+        self._prune_in_flight()
+        if handle.query_id in self._queued \
+                or handle.query_id in self._in_flight:
             return handle  # idempotent: a retried submit must not double-
-                           # queue the handle (it would double-count stats)
-        # the signature is immutable per handle: compute once at submission,
-        # not on every drain pass over the queue
-        self._signatures[handle.query_id] = structural_signature(handle.query)
+                           # queue the handle (it would double-count stats,
+                           # or double-execute one already on a worker)
+        if handle.signature is None:  # hand-built handles from older callers
+            handle.signature = structural_signature(handle.query)
+        self._queued.add(handle.query_id)
         self._pending.append(handle)
         return handle
 
@@ -74,41 +100,72 @@ class QueryScheduler:
     def _grouped(self) -> List[List["QueryHandle"]]:
         groups: Dict[object, List["QueryHandle"]] = {}
         for h in self._pending:
-            groups.setdefault(self._signatures[h.query_id], []).append(h)
+            groups.setdefault(h.signature, []).append(h)
         # Submission-fair: a group runs no earlier than its first member's
         # arrival; members keep submission order within the group.
         return sorted(groups.values(), key=lambda g: g[0].query_id)
 
+    def _take_batch(self, max_queries: Optional[int]) -> List[List["QueryHandle"]]:
+        """Dequeue up to ``max_queries`` handles as signature-grouped batches
+        in fair order; the remainder stays pending."""
+        batches: List[List["QueryHandle"]] = []
+        taken = 0
+        for group in self._grouped():
+            if max_queries is not None and taken >= max_queries:
+                break
+            batch = group if max_queries is None else \
+                group[: max_queries - taken]
+            batches.append(batch)
+            taken += len(batch)
+        dispatched = {h.query_id for b in batches for h in b}
+        self._pending = [h for h in self._pending
+                         if h.query_id not in dispatched]
+        self._queued -= dispatched
+        self._prune_in_flight()
+        for b in batches:
+            for h in b:
+                self._in_flight[h.query_id] = h
+        return batches
+
     def drain(self, max_queries: Optional[int] = None) -> List["QueryHandle"]:
         """Run pending queries grouped by plan signature; return completed
-        handles in execution order.  ``max_queries`` bounds one batch — the
-        remainder stays queued for the next call."""
+        handles in fair admission order.  ``max_queries`` bounds one batch —
+        the remainder stays queued for the next call."""
         if max_queries is not None and max_queries < 1:
             raise ValueError(f"max_queries must be >= 1, got {max_queries}")
         t0 = time.perf_counter()
         info0 = self._session.compile_cache_info()
+        batches = self._take_batch(max_queries)
+        self._session.runtime.run_groups(batches, block=True)
+        completed = [h for b in batches for h in b]
+
         stats = DrainStats()
-        completed: List["QueryHandle"] = []
-        for group in self._grouped():
-            if max_queries is not None and len(completed) >= max_queries:
-                break
-            batch = group if max_queries is None else \
-                group[: max_queries - len(completed)]
-            stats.n_groups += 1
-            stats.group_sizes.append(len(batch))
-            for h in batch:
-                self._session._run_handle(h)
-                completed.append(h)
-        done_ids = {h.query_id for h in completed}
-        self._pending = [h for h in self._pending
-                         if h.query_id not in done_ids]
-        for qid in done_ids:
-            self._signatures.pop(qid, None)
+        stats.n_groups = len(batches)
+        stats.group_sizes = [len(b) for b in batches]
         info1 = self._session.compile_cache_info()
         stats.n_queries = len(completed)
         stats.compile_misses = info1.misses - info0.misses
         stats.compile_hits = info1.hits - info0.hits
+        # per-handle attribution: a pilot stage belongs to this batch when a
+        # non-cached member's report records its own (non-shared) pilot run
+        stats.result_hits = sum(1 for h in completed if h.cached)
+        stats.pilots_run = sum(
+            1 for h in completed
+            if not h.cached and h.report is not None
+            and h.report.pilot_ran and not h.report.pilot_shared)
         stats.wall_time_s = time.perf_counter() - t0
         self.last_drain = stats
         self.total_drained += len(completed)
         return completed
+
+    def drain_async(self) -> List["QueryHandle"]:
+        """Dispatch everything pending to the runtime and return the
+        dispatched handles immediately (they finish in the background; with
+        ``async_workers=0`` this degenerates to a blocking drain).  No
+        :class:`DrainStats` are recorded — concurrent completions have no
+        well-defined batch boundary."""
+        batches = self._take_batch(None)
+        handles = [h for b in batches for h in b]
+        self._session.runtime.run_groups(batches, block=False)
+        self.total_drained += len(handles)
+        return handles

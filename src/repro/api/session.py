@@ -3,36 +3,61 @@
 A :class:`Session` owns everything that must persist across queries for the
 many-users scenario to pay off:
 
-* the registered tables (the catalog) and the :class:`Executor` whose
-  physical compile cache makes repeated structurally-identical queries run
-  warm (see ``engine/physical.py``),
-* a session PRNG (:class:`numpy.random.SeedSequence`) from which every
-  query's sampling seed is derived at *submission* time — two sessions
-  created with the same seed replay bit-identical answers for the same
-  query sequence, with no global RNG state anywhere,
-* a :class:`repro.api.QueryScheduler` for batched submission.
+* the registered tables (the catalog, plus optional per-column string
+  dictionaries) and the :class:`Executor` whose physical compile cache makes
+  repeated structurally-identical queries run warm (see
+  ``engine/physical.py``),
+* the concurrent query runtime (:mod:`repro.runtime`): a worker pool that
+  overlaps drain groups, one-pilot-per-group statistic sharing, and the
+  session result cache,
+* deterministic seed derivation (below), and a
+  :class:`repro.api.QueryScheduler` for batched submission.
+
+Seed derivation.  Every query's sampling seed is a pure function of
+``(session seed, lowered query, ErrorSpec)`` — not of submission order — and
+the *pilot* seed is a pure function of ``(session seed, structural
+signature, pilot-stage tunables)``.  Consequences, all load-bearing for the
+runtime:
+
+* equal-seed sessions replay bit-identical answers for the same queries, in
+  ANY submission order and under any scheduler/runtime interleaving;
+* a query answered from a group's shared pilot is bit-identical to the same
+  query run solo (solo runs derive the identical pilot seed);
+* a repeated identical query re-derives the identical ``(query, spec,
+  seed)`` triple, which is exactly the result cache's key — repeats are
+  cache hits with their original error reports.
+
+Result-cache invalidation contract: see :meth:`Session.register_table`.
 
 ``session.sql(...)`` / ``builder.run()`` return a :class:`QueryHandle`
 carrying status, the :class:`ApproxAnswer`, the :class:`TaqaReport` and any
 fallback reason — execution failures are captured on the handle instead of
 raising through the client (`EmptySampleError` in particular is already an
 *internal* signal: TAQA answers it with an explicit exact fallback).
+Handles are pollable (`poll()`) and waitable (`wait(timeout)`), so clients
+of the async runtime never need to block on a drain.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.api.builder import QueryBuilder
 from repro.api.scheduler import QueryScheduler
-from repro.api.sql import UnsupportedSqlError, parse_sql
+from repro.api.sql import (UnsupportedSqlError, parse_sql,
+                           resolve_string_literals)
 from repro.core.spec import ErrorSpec
-from repro.core.taqa import ApproxAnswer, PilotDB, Query, TaqaReport
+from repro.core.taqa import (ApproxAnswer, PilotDB, Query, TaqaReport,
+                             pilot_params, structural_signature)
 from repro.engine.executor import Executor
 from repro.engine.table import BlockTable
+from repro.runtime import AsyncRuntime, ResultCache, ResultCacheInfo
+from repro.runtime import shared_pilot as _shared_pilot
 
 
 class QueryStatus:
@@ -46,6 +71,13 @@ class QueryFailedError(RuntimeError):
     """Raised by :meth:`QueryHandle.result` when execution failed."""
 
 
+def _content_hash(*parts) -> int:
+    """Deterministic 64-bit hash of frozen-dataclass content (their reprs
+    are complete and stable — plans, exprs and specs hold only scalars)."""
+    digest = hashlib.blake2b(repr(parts).encode(), digest_size=8).digest()
+    return int.from_bytes(digest, "big")
+
+
 @dataclasses.dataclass
 class QueryHandle:
     """One submitted query: its lowered form, derived seed, and outcome."""
@@ -57,7 +89,14 @@ class QueryHandle:
     sql: Optional[str] = None
     status: str = QueryStatus.PENDING
     error: Optional[str] = None
+    cached: bool = False              # answered from the session result cache
     _answer: Optional[ApproxAnswer] = None
+    # structural signature, computed once at submission (scheduler grouping,
+    # pilot-seed derivation, compile-cache affinity all key off it)
+    signature: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
@@ -77,6 +116,35 @@ class QueryHandle:
         r = self.report
         return r.fallback if r is not None else None
 
+    # -- async observation ----------------------------------------------------
+    def poll(self) -> str:
+        """Non-blocking status probe: pending / running / done / failed."""
+        return self.status
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the query finished (done OR failed); False on
+        timeout.  Returns immediately for handles that never entered a
+        runtime (synchronous paths complete before returning)."""
+        if self.done:
+            return True
+        return self._done_event.wait(timeout)
+
+    # -- completion (runtime-internal) ----------------------------------------
+    def _mark_running(self) -> None:
+        if not self.done:
+            self.status = QueryStatus.RUNNING
+
+    def _mark_done(self, answer: ApproxAnswer, cached: bool = False) -> None:
+        self._answer = answer
+        self.cached = cached
+        self.status = QueryStatus.DONE
+        self._done_event.set()
+
+    def _mark_failed(self, error: str) -> None:
+        self.status = QueryStatus.FAILED
+        self.error = error
+        self._done_event.set()
+
     def result(self) -> ApproxAnswer:
         """The answer; raises if the query failed or has not run yet."""
         if self.status == QueryStatus.FAILED:
@@ -85,7 +153,8 @@ class QueryHandle:
             raise RuntimeError(
                 f"query {self.query_id} is {self.status}; drain the "
                 "scheduler it was submitted to (session.drain(), or "
-                "gateway.run() for gateway tickets) before reading results")
+                "gateway.run() for gateway tickets) — or wait() on the "
+                "handle after an async drain — before reading results")
         return self._answer
 
     def scalar(self, name: str, group: int = 0) -> float:
@@ -104,6 +173,17 @@ class SessionConfig:
     # max_groups; an id-cardinality GROUP BY through the public front door
     # would otherwise allocate process-killing buffers in a shared server.
     max_groups_limit: int = 4096
+    # -- concurrent runtime (repro.runtime) ----------------------------------
+    # Worker threads draining signature groups concurrently; 0 restores the
+    # synchronous-cooperative loop (groups run inline on the draining
+    # thread).  Answers never depend on this — only wall-clock does.
+    async_workers: int = 4
+    # One pilot per (signature, pilot-params) subgroup, statistics fanned
+    # out to every member (off: each query runs its own — bit-identical —
+    # pilot; the switch trades pilot scans for nothing else).
+    share_pilots: bool = True
+    # Session result-cache capacity in answers; 0 disables caching.
+    result_cache_size: int = 128
 
 
 class Session:
@@ -132,18 +212,71 @@ class Session:
                                      kernel_mode=config.kernel_mode)
         self.db = PilotDB(self.executor,
                           large_table_rows=config.large_table_rows)
-        self._seed_seq = np.random.SeedSequence(seed)
+        self._entropy = int(seed)
         self._next_id = 0
         self._max_groups_cache: Dict[tuple, int] = {}
+        self._dictionaries: Dict[str, Dict[str, int]] = {}
+        # Bumped by register_table; snapshotted when a query starts
+        # executing so an answer computed against since-replaced data can
+        # never be delivered or (re-)enter the result cache.  The lock makes
+        # bump+swap atomic with respect to snapshots: a snapshot is taken
+        # either wholly before a replacement (the completion check then sees
+        # the bump) or wholly after (the query runs on the new data).
+        self._table_gen: Dict[str, int] = {}
+        self._gen_lock = threading.Lock()
+        self.result_cache = ResultCache(config.result_cache_size)
+        self.runtime = AsyncRuntime(self, workers=config.async_workers)
         self.scheduler = QueryScheduler(self)
 
+    def close(self) -> None:
+        """Shut the runtime's worker pool down (idempotent)."""
+        self.runtime.shutdown()
+
     # -- catalog -------------------------------------------------------------
-    def register_table(self, name: str, table: BlockTable) -> None:
-        self.executor.register_table(name, table)
+    def register_table(self, name: str, table: BlockTable, *,
+                       dictionaries: Optional[Dict[str, Sequence[str]]] = None,
+                       ) -> None:
+        """Add (or replace) a catalog table.
+
+        Cache-invalidation contract: registering ``name`` synchronously
+        evicts (a) the cached MAXGROUPS statistics of its columns and
+        (b) every result-cache entry whose plan scanned ``name`` — including
+        join queries that merely touch it — so no later lookup can return an
+        answer (or an error report) computed against the replaced data.
+        Entries over other tables survive; compiled *executables* need no
+        invalidation (see :meth:`Executor.register_table`: data enters as
+        runtime arguments, geometry changes re-key the compile cache).
+        A query of ``name`` still in flight on the runtime when the
+        replacement lands fails with a retryable error rather than
+        delivering a possibly-torn answer (see :meth:`_complete_handle`).
+
+        ``dictionaries`` maps dictionary-encoded column names to their value
+        lists (code = list index), enabling string literals for those
+        columns in WHERE clauses: ``WHERE l_returnflag = 'A'`` lowers to the
+        integer code before planning.
+        """
+        # bump+swap under the generation lock: no snapshot can interleave
+        # between the new generation and the new data (see _gen_lock above)
+        with self._gen_lock:
+            self._table_gen[name] = self._table_gen.get(name, 0) + 1
+            self.executor.register_table(name, table)
         # replacing a table invalidates its cached statistics
         self._max_groups_cache = {k: v for k, v in
                                   self._max_groups_cache.items()
                                   if k[0] != name}
+        # eviction after the bump: an in-flight query's cache insert either
+        # sees the bump in its put guard (skipped) or lands before this
+        # eviction (removed) — the only two orders under the cache lock
+        self.result_cache.invalidate_table(name)
+        if dictionaries:
+            for column, values in dictionaries.items():
+                self.register_dictionary(column, values)
+
+    def register_dictionary(self, column: str, values: Sequence[str]) -> None:
+        """Declare ``column`` as dictionary-encoded: ``values[i]`` is the
+        string for integer code ``i``.  String literals comparing against
+        ``column`` then lower to the code (see ``api/sql.py``)."""
+        self._dictionaries[column] = {v: i for i, v in enumerate(values)}
 
     def tables(self) -> List[str]:
         return sorted(self.executor.catalog)
@@ -189,14 +322,29 @@ class Session:
     def compile_cache_info(self):
         return self.executor.compile_cache_info()
 
+    def result_cache_info(self) -> ResultCacheInfo:
+        return self.result_cache.info()
+
     # -- seed derivation ------------------------------------------------------
-    def _derive_seed(self) -> int:
-        """Per-query seed from the session PRNG key.  Spawning advances the
-        SeedSequence deterministically, so seeds depend only on the session
-        seed and the submission index — never on global state or on how the
-        scheduler later reorders execution."""
-        child = self._seed_seq.spawn(1)[0]
-        return int(child.generate_state(1, dtype=np.uint32)[0])
+    def _derive_seed(self, query: Query, spec: Optional[ErrorSpec]) -> int:
+        """Per-query seed as a pure function of session seed and query
+        content.  Identical resubmissions re-derive the identical seed
+        (making them result-cache hits), distinct queries get independent
+        streams, and replay is submission-order-independent."""
+        seq = np.random.SeedSequence(
+            [self._entropy, _content_hash(query, spec)])
+        return int(seq.generate_state(1, dtype=np.uint32)[0])
+
+    def _pilot_seed_for(self, handle: QueryHandle) -> int:
+        """Pilot seed from (session seed, structural signature, pilot-stage
+        tunables) — NOT from the per-query seed.  Every query that could
+        share a pilot derives the same value, so a shared pilot's statistics
+        are bit-identical to the pilot each member would have run solo."""
+        params = None if handle.spec is None else pilot_params(handle.spec)
+        seq = np.random.SeedSequence(
+            [self._entropy, 0x9E3779B9,
+             _content_hash(handle.signature, params)])
+        return int(seq.generate_state(1, dtype=np.uint32)[0])
 
     # -- front doors ----------------------------------------------------------
     def table(self, name: str) -> QueryBuilder:
@@ -210,9 +358,9 @@ class Session:
 
         Parse-stage rejections — :class:`repro.api.SqlSyntaxError`, and
         :class:`repro.api.UnsupportedSqlError` for semantic violations such
-        as GROUP BY on a non-integer-coded column — raise immediately (the
-        query never existed); execution failures are captured on the
-        returned handle.
+        as GROUP BY on a non-integer-coded column or an unresolvable string
+        literal — raise immediately (the query never existed); execution
+        failures are captured on the returned handle.
         """
         handle = self._parse_to_handle(text)
         self._run_handle(handle)
@@ -241,11 +389,29 @@ class Session:
     def drain(self, max_queries: Optional[int] = None) -> List[QueryHandle]:
         return self.scheduler.drain(max_queries)
 
+    def drain_async(self) -> List[QueryHandle]:
+        """Dispatch every pending query to the runtime without waiting;
+        observe completion per handle via ``poll()`` / ``wait()``."""
+        return self.scheduler.drain_async()
+
     # -- plumbing -------------------------------------------------------------
     def _parse_to_handle(self, text: str) -> QueryHandle:
         parsed = parse_sql(text, max_groups_resolver=self.infer_max_groups,
                            spec_kwargs=self.config.spec_kwargs)
         return self._make_handle(parsed.query, parsed.spec, sql=text)
+
+    def _resolve_dictionary(self, column: str, literal: str) -> int:
+        codes = self._dictionaries.get(column)
+        if codes is None:
+            raise UnsupportedSqlError(
+                f"string literal {literal!r} compares against {column!r}, "
+                "which has no registered dictionary (see "
+                "Session.register_dictionary)")
+        if literal not in codes:
+            raise UnsupportedSqlError(
+                f"{literal!r} is not in the dictionary of {column!r} "
+                f"(values: {sorted(codes)})")
+        return codes[literal]
 
     def _validate_group_domain(self, query: Query) -> None:
         """Reject GROUP BY shapes that would silently misbehave: a
@@ -270,11 +436,13 @@ class Session:
 
     def _make_handle(self, query: Query, spec: Optional[ErrorSpec],
                      sql: Optional[str] = None) -> QueryHandle:
-        # validate before deriving a seed: rejected queries never consume
-        # from the session PRNG, keeping replay deterministic
+        # resolve + validate before deriving a seed: rejected queries never
+        # enter the seed/cache keyspace
+        query = resolve_string_literals(query, self._resolve_dictionary)
         self._validate_group_domain(query)
         handle = QueryHandle(query_id=self._next_id, query=query, spec=spec,
-                             seed=self._derive_seed(), sql=sql)
+                             seed=self._derive_seed(query, spec), sql=sql,
+                             signature=structural_signature(query))
         self._next_id += 1
         return handle
 
@@ -284,22 +452,85 @@ class Session:
         handle = QueryHandle(query_id=self._next_id, query=None, spec=None,
                              seed=0, sql=sql, status=QueryStatus.FAILED,
                              error=error)
+        handle._done_event.set()
         self._next_id += 1
         return handle
+
+    # -- execution core (shared by sync paths and runtime workers) ------------
+    def _cache_key(self, handle: QueryHandle):
+        # (structural signature, predicate constants, ErrorSpec, seed): the
+        # frozen Query embeds the first two (constants live in its plan) and
+        # additionally pins user-facing aggregate names.
+        return (handle.query, handle.spec, handle.seed)
+
+    def _serve_cached(self, handle: QueryHandle) -> bool:
+        """Answer ``handle`` from the result cache if possible.  A hit
+        returns the original ApproxAnswer — values and the error report that
+        was guaranteed when it was computed (still valid: register_table
+        would have evicted the entry if the data had changed)."""
+        if handle.query is None:
+            return False
+        answer = self.result_cache.get(self._cache_key(handle))
+        if answer is None:
+            return False
+        handle._mark_done(answer, cached=True)
+        return True
+
+    def _scan_generations(self, query: Query) -> Tuple[int, ...]:
+        with self._gen_lock:
+            return tuple(self._table_gen.get(s.table, 0)
+                         for s in query.child.scans())
+
+    def _complete_handle(self, handle: QueryHandle, answer: ApproxAnswer,
+                         gen_snapshot: Optional[tuple] = None) -> bool:
+        """Finish a handle, guarding against mid-flight table replacement.
+
+        If :meth:`register_table` replaced any scanned table after execution
+        started (``gen_snapshot`` mismatch), the answer may be *torn* —
+        e.g. pilot statistics from the old data scaling a final scan of the
+        new — so its error report is no longer a guarantee.  PilotDB never
+        returns an unguaranteed estimate: the handle fails with a retryable
+        error instead (a resubmission re-derives the same seed and runs
+        cleanly against the new data).  The result-cache insert is guarded
+        by the same generation check, under the cache lock.  Returns True
+        when the handle completed with the answer.
+        """
+        current = self._scan_generations(handle.query)
+        if gen_snapshot is not None and gen_snapshot != current:
+            handle._mark_failed(
+                "table replaced while the query was in flight "
+                f"({sorted({s.table for s in handle.query.child.scans()})}); "
+                "resubmit to run against the new data")
+            return False
+        self.result_cache.put(
+            self._cache_key(handle), answer,
+            (s.table for s in handle.query.child.scans()),
+            guard=None if gen_snapshot is None else
+            (lambda: gen_snapshot == self._scan_generations(handle.query)))
+        handle._mark_done(answer)
+        return True
 
     def _run_handle(self, handle: QueryHandle) -> QueryHandle:
         if handle.done:
             return handle
-        handle.status = QueryStatus.RUNNING
+        if self._serve_cached(handle):
+            return handle
+        handle._mark_running()
+        gen = self._scan_generations(handle.query)
         try:
             if handle.spec is None:
                 ans = self.db.exact(handle.query)
             else:
                 ans = self.db.query(handle.query, handle.spec,
-                                    seed=handle.seed)
-            handle._answer = ans
-            handle.status = QueryStatus.DONE
+                                    seed=handle.seed,
+                                    pilot_seed=self._pilot_seed_for(handle))
+            self._complete_handle(handle, ans, gen)
         except Exception as e:  # capture, don't raise through the client
-            handle.status = QueryStatus.FAILED
-            handle.error = f"{type(e).__name__}: {e}"
+            handle._mark_failed(f"{type(e).__name__}: {e}")
         return handle
+
+    def _execute_group(self, handles: List[QueryHandle]) -> None:
+        """Run one signature group (runtime workers land here): cached
+        members answer immediately, the rest share a pilot per
+        pilot-params subgroup and finish independently."""
+        _shared_pilot.execute_group(self, handles)

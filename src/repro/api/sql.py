@@ -3,9 +3,9 @@
 Grammar (case-insensitive keywords)::
 
     query   := SELECT item (',' item)*
-               FROM ident (JOIN ident ON ident '=' ident)*
+               FROM ident (JOIN ident ON column '=' column)*
                (WHERE pred)?
-               (GROUP BY ident (MAXGROUPS int)?)?
+               (GROUP BY column (MAXGROUPS int)?)?
                (ERROR num '%' CONFIDENCE num '%')?
     item    := composite (AS ident)?
     composite := wterm '+' wterm          -- addition rule (Table 2)
@@ -16,10 +16,20 @@ Grammar (case-insensitive keywords)::
     aggcall := SUM '(' expr ')' | AVG '(' expr ')' | COUNT '(' '*' ')'
     pred    := or-chain of AND-chains of comparisons / BETWEEN / NOT (...)
     expr    := arithmetic over columns and numeric literals (+ - * /)
+    column  := ident | ident '.' ident    -- optional table qualifier
+    string  := "'" chars "'"              -- '' escapes a quote; strings may
+                                          -- appear as comparison operands
 
 `MAXGROUPS n` is a dialect extension fixing the group-id domain
 (``Query.max_groups``); when omitted the caller may supply a resolver that
 infers it from catalog statistics (see :meth:`repro.api.Session.sql`).
+
+Column names are globally unique in this schema family (TPC-H style), so a
+``t.col`` qualifier is presentation sugar: the parser strips it, and
+:func:`render_sql` emits the canonical unqualified form.  String literals
+parse to :class:`repro.engine.expr.Str` nodes, which
+:func:`resolve_string_literals` lowers to dictionary codes before a plan
+reaches the engine (sessions call it with their registered dictionaries).
 
 Lowering targets the existing internal representation unchanged:
 :class:`repro.core.taqa.Query` (+ :class:`repro.core.spec.ErrorSpec`), i.e.
@@ -39,7 +49,7 @@ from repro.core.spec import CompositeAgg, ErrorSpec
 from repro.core.taqa import Query
 from repro.engine import logical as L
 from repro.engine.expr import (And, Between, BinOp, Cmp, Col, Const, Expr, Not,
-                               Or)
+                               Or, Str)
 
 
 class SqlSyntaxError(ValueError):
@@ -73,8 +83,9 @@ _KEYWORDS = {
 _TOKEN_RE = re.compile(
     r"\s*(?:"
     r"(?P<num>\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)"
+    r"|(?P<str>'(?:[^']|'')*')"
     r"|(?P<ident>[A-Za-z_][A-Za-z_0-9]*)"
-    r"|(?P<op><=|>=|<>|!=|==|[-+*/(),%=<>])"
+    r"|(?P<op><=|>=|<>|!=|==|[-+*/(),%=<>.])"
     r")")
 
 
@@ -91,6 +102,8 @@ def _tokenize(text: str) -> List[Tuple[str, object]]:
         pos = m.end()
         if m.lastgroup == "num":
             toks.append(("num", float(m.group("num"))))
+        elif m.lastgroup == "str":
+            toks.append(("str", m.group("str")[1:-1].replace("''", "'")))
         elif m.lastgroup == "ident":
             word = m.group("ident")
             if word.upper() in _KEYWORDS:
@@ -153,6 +166,14 @@ class _Parser:
             raise SqlSyntaxError(f"expected identifier, got {v!r}")
         return v  # type: ignore[return-value]
 
+    def expect_column(self) -> str:
+        """A column reference, optionally table-qualified (``t.col``).
+        Column names are globally unique, so the qualifier is stripped."""
+        name = self.expect_ident()
+        if self.accept_op("."):
+            return self.expect_ident()
+        return name
+
     def expect_num(self) -> float:
         k, v = self.advance()
         if k != "num":
@@ -194,6 +215,8 @@ class _Parser:
             return Const(float(v))  # type: ignore[arg-type]
         if k == "ident":
             self.advance()
+            if self.accept_op("."):  # qualified column: t.col -> col
+                return Col(self.expect_ident())
             return Col(v)  # type: ignore[arg-type]
         raise SqlSyntaxError(f"expected expression, got {v!r}")
 
@@ -233,14 +256,23 @@ class _Parser:
             except SqlSyntaxError:
                 pass
             self.pos = mark
-        left = self.parse_arith()
+        if self.peek()[0] == "str":
+            left: Expr = Str(self.advance()[1])  # type: ignore[arg-type]
+        else:
+            left = self.parse_arith()
         if self.accept_kw("BETWEEN"):
+            if isinstance(left, Str):
+                raise SqlSyntaxError(
+                    "string literals cannot be BETWEEN operands "
+                    "(dictionary order is not lexicographic)")
             lo = self.expect_signed_num()
             self.expect_kw("AND")
             hi = self.expect_signed_num()
             return Between(left, float(lo), float(hi))
         for tok, op in _CMP_OPS.items():
             if self.accept_op(tok):
+                if self.peek()[0] == "str":
+                    return Cmp(op, left, Str(self.advance()[1]))  # type: ignore[arg-type]
                 return Cmp(op, left, self.parse_arith())
         raise SqlSyntaxError(f"expected comparison, got {self.peek()[1]!r}")
 
@@ -318,9 +350,9 @@ class _Parser:
         while self.accept_kw("JOIN"):
             right = self.expect_ident()
             self.expect_kw("ON")
-            lk = self.expect_ident()
+            lk = self.expect_column()
             self.expect_op("=")
-            rk = self.expect_ident()
+            rk = self.expect_column()
             child = L.Join(child, L.Scan(right), lk, rk)
 
         if self.accept_kw("WHERE"):
@@ -329,7 +361,7 @@ class _Parser:
         group_by, max_groups = None, 1
         if self.accept_kw("GROUP"):
             self.expect_kw("BY")
-            group_by = self.expect_ident()
+            group_by = self.expect_column()
             if self.accept_kw("MAXGROUPS"):
                 n = self.expect_num()
                 if n != int(n):
@@ -386,6 +418,77 @@ def parse_sql(
 
 
 # ---------------------------------------------------------------------------
+# String-literal lowering (dictionary-encoded columns)
+# ---------------------------------------------------------------------------
+
+def _resolve_strings_expr(e: Expr, resolver) -> Expr:
+    if isinstance(e, Cmp):
+        ls, rs = isinstance(e.left, Str), isinstance(e.right, Str)
+        if not (ls or rs):
+            return e
+        if ls and rs:
+            raise UnsupportedSqlError(
+                "comparing two string literals is not a table predicate")
+        col, lit = (e.right, e.left) if ls else (e.left, e.right)
+        if not isinstance(col, Col):
+            raise UnsupportedSqlError(
+                f"string literal {lit.value!r} must compare against a "
+                "column, not an expression")
+        if e.op not in ("==", "!="):
+            raise UnsupportedSqlError(
+                f"dictionary-encoded columns support = and != only, "
+                f"got {e.op!r} (dictionary order is not lexicographic)")
+        code = Const(float(resolver(col.name, lit.value)))
+        return Cmp(e.op, code, col) if ls else Cmp(e.op, col, code)
+    if isinstance(e, And):
+        return And(_resolve_strings_expr(e.left, resolver),
+                   _resolve_strings_expr(e.right, resolver))
+    if isinstance(e, Or):
+        return Or(_resolve_strings_expr(e.left, resolver),
+                  _resolve_strings_expr(e.right, resolver))
+    if isinstance(e, Not):
+        return Not(_resolve_strings_expr(e.arg, resolver))
+    if isinstance(e, Between) and isinstance(e.arg, Str):
+        # unreachable from the parser (rejected there); guards hand-built
+        # plans so no Str survives to execution
+        raise UnsupportedSqlError(
+            "string literals cannot be BETWEEN operands")
+    return e
+
+
+def _resolve_strings_plan(p: L.Plan, resolver) -> L.Plan:
+    if isinstance(p, L.Filter):
+        return dataclasses.replace(
+            p, child=_resolve_strings_plan(p.child, resolver),
+            pred=_resolve_strings_expr(p.pred, resolver))
+    if isinstance(p, L.Join):
+        return dataclasses.replace(
+            p, left=_resolve_strings_plan(p.left, resolver),
+            right=_resolve_strings_plan(p.right, resolver))
+    if isinstance(p, L.Union):
+        return dataclasses.replace(
+            p, inputs=tuple(_resolve_strings_plan(c, resolver)
+                            for c in p.inputs))
+    return p
+
+
+def resolve_string_literals(query: Query, resolver) -> Query:
+    """Lower every ``col = 'literal'`` comparison to the column's integer
+    dictionary code via ``resolver(column, literal) -> int``.
+
+    The engine is numeric; this is the only path by which a :class:`Str`
+    node may reach execution, and it removes them all.  ``resolver`` raises
+    :class:`UnsupportedSqlError` for columns without a dictionary or
+    literals outside it (see :meth:`repro.api.Session.register_dictionary`).
+    Queries without string literals are returned unchanged.
+    """
+    child = _resolve_strings_plan(query.child, resolver)
+    if child == query.child:
+        return query
+    return dataclasses.replace(query, child=child)
+
+
+# ---------------------------------------------------------------------------
 # Renderer (the inverse direction, for round-trip tests and logging)
 # ---------------------------------------------------------------------------
 
@@ -416,6 +519,8 @@ def _render_arith(e: Expr, parent_prec: int = 0, right: bool = False) -> str:
         return e.name
     if isinstance(e, Const):
         return _num(e.value)
+    if isinstance(e, Str):
+        return "'" + e.value.replace("'", "''") + "'"
     if isinstance(e, BinOp):
         p = _PREC[e.op]
         s = (f"{_render_arith(e.left, p, False)} {e.op} "
@@ -429,6 +534,13 @@ def _render_arith(e: Expr, parent_prec: int = 0, right: bool = False) -> str:
 
 
 _SQL_CMP = {"==": "=", "!=": "!=", "<": "<", "<=": "<=", ">": ">", ">=": ">="}
+
+
+def _conjunction_terms(e: Expr) -> List[Expr]:
+    """Flatten a top-level AND chain (any association) into its terms."""
+    if isinstance(e, And):
+        return _conjunction_terms(e.left) + _conjunction_terms(e.right)
+    return [e]
 
 
 def _render_pred(e: Expr) -> str:
@@ -511,9 +623,15 @@ def render_sql(query: Query, spec: Optional[ErrorSpec] = None) -> str:
     for table, lk, rk in reversed(joins):
         parts.append(f"JOIN {table} ON {lk} = {rk}")
     if preds:
-        pred = preds[-1]
-        for p in reversed(preds[:-1]):  # nested filters AND together
-            pred = And(p, pred)
+        # Canonical WHERE: flatten every nested Filter's top-level AND chain
+        # into one deterministic term list — application order, i.e.
+        # innermost filter first, left-to-right within each chain — and
+        # re-fold RIGHT exactly as the parser folds, so render∘parse is a
+        # fixpoint and nested-Filter plans collapse to one stable clause.
+        terms = [t for p in reversed(preds) for t in _conjunction_terms(p)]
+        pred = terms[-1]
+        for t in reversed(terms[:-1]):
+            pred = And(t, pred)
         parts.append(f"WHERE {_render_pred(pred)}")
     if query.group_by is not None:
         clause = f"GROUP BY {query.group_by}"

@@ -54,6 +54,13 @@ class TaqaReport:
     exact_scanned_bytes: int = 0
     candidates: int = 0
     group_coverage_guaranteed: bool = True
+    # True when a pilot stage actually executed for this query (False for
+    # pre-pilot fallbacks: no large table, strict-coverage violation).
+    pilot_ran: bool = False
+    # True when this answer reused another structurally identical query's
+    # pilot statistics (the runtime's one-pilot-per-group fan-out); the
+    # pilot_* fields then describe that shared pilot stage.
+    pilot_shared: bool = False
 
 
 @dataclasses.dataclass
@@ -117,6 +124,40 @@ def structural_signature(q: Query) -> L.Aggregate:
     return L.strip_samples(plan)
 
 
+def pilot_params(spec: ErrorSpec) -> Tuple:
+    """The ErrorSpec fields that shape the *pilot* stage (and nothing else).
+
+    theta_p and the retry loop depend only on these — never on the error /
+    confidence targets, which enter at stage 2.  Two queries with equal
+    structural signatures and equal pilot params run byte-identical pilots,
+    which is the sharing key ``repro.runtime.shared_pilot`` groups by.
+    """
+    return (spec.theta_pilot, spec.min_pilot_blocks, spec.max_pilot_rate,
+            spec.group_min_size, spec.group_miss_prob,
+            spec.strict_group_coverage)
+
+
+@dataclasses.dataclass
+class PilotOutcome:
+    """Everything stage 1 produces, reusable across same-signature queries.
+
+    ``fallback`` records a pilot-stage reason to execute exactly (no large
+    table, pilot too small, no groups, strict-coverage violation); each
+    query finishing from this outcome then takes its own exact path.  The
+    ``report`` is a template — :meth:`PilotDB.finish_from_pilot` copies it
+    per query before filling stage-2 fields.
+    """
+
+    plan: "L.Aggregate"
+    comp_channels: List[Tuple[int, ...]]
+    report: TaqaReport
+    pilot: Optional[PilotStats] = None
+    pilot_table: Optional[str] = None
+    pair_tables: Tuple[str, ...] = ()
+    theta_p: float = 0.0
+    fallback: Optional[str] = None
+
+
 class PilotDB:
     """The middleware.  `query()` is the user entry point (Fig. 2 workflow).
 
@@ -151,7 +192,30 @@ class PilotDB:
         return ApproxAnswer([c.name for c in q.aggs], values, res.group_present, report)
 
     # -- the two-stage algorithm ----------------------------------------------
-    def query(self, q: Query, spec: ErrorSpec, seed: int = 0) -> ApproxAnswer:
+    def query(self, q: Query, spec: ErrorSpec, seed: int = 0,
+              pilot_seed: Optional[int] = None) -> ApproxAnswer:
+        """Full TAQA: pilot stage then final stage.
+
+        ``seed`` drives the *final* sampled scan; ``pilot_seed`` (defaulting
+        to ``seed``) drives the pilot sample.  Callers that share one pilot
+        across structurally identical queries (``repro.runtime``) derive
+        ``pilot_seed`` from the plan signature so a query answered from a
+        shared pilot is bit-identical to the same query run solo.
+        """
+        outcome = self.run_pilot(
+            q, spec, seed if pilot_seed is None else pilot_seed)
+        return self.finish_from_pilot(q, spec, outcome, seed)
+
+    def run_pilot(self, q: Query, spec: ErrorSpec,
+                  pilot_seed: int) -> "PilotOutcome":
+        """Stage 1: rewrite to Q_pilot, run it, collect per-block statistics.
+
+        The returned :class:`PilotOutcome` is spec-dependent only through the
+        pilot-stage tunables (theta_pilot / min_pilot_blocks / max_pilot_rate
+        / group coverage) — see :func:`pilot_params`.  Queries agreeing on
+        those fields and on the sampling-stripped plan signature can share
+        one outcome and finish independently via :meth:`finish_from_pilot`.
+        """
         plan, comp_channels = self._engine_plan(q)
         report = TaqaReport()
         report.exact_cost = cost_mod.exact_cost(plan, self.ex.catalog)
@@ -159,14 +223,17 @@ class PilotDB:
         # the samplers' scanned_bytes semantics (row-store physical reads)
         report.exact_scanned_bytes = sum(
             self.ex.table_bytes(s.table) for s in plan.scans())
+        outcome = PilotOutcome(plan=plan, comp_channels=comp_channels,
+                               report=report)
 
         large = self._large_tables(plan)
         if not large:
-            return self._exact(q, plan, comp_channels, report, "no large table to sample")
+            outcome.fallback = "no large table to sample"
+            return outcome
         pilot_table = large[0]
         report.pilot_table = pilot_table
+        outcome.pilot_table = pilot_table
 
-        # --- Stage 1: pilot ---------------------------------------------------
         n_blocks = self.ex.table_blocks(pilot_table)
         block_rows = self.ex.block_rows(pilot_table)
         # 1.5x margin over the minimum pilot size: Bernoulli undershoot
@@ -178,10 +245,10 @@ class PilotDB:
                 n_blocks, block_rows, spec.group_min_size, spec.group_miss_prob)
             if theta_cov > spec.max_pilot_rate:
                 if spec.strict_group_coverage:
-                    return self._exact(
-                        q, plan, comp_channels, report,
+                    outcome.fallback = (
                         f"group coverage for g={spec.group_min_size} needs "
                         f"theta_p={theta_cov:.3f} > pilot cap (strict mode)")
+                    return outcome
                 report.group_coverage_guaranteed = False
                 theta_p = max(theta_p, spec.max_pilot_rate)
             else:
@@ -191,11 +258,16 @@ class PilotDB:
         pair_tables: Tuple[str, ...] = ()
         if q.group_by is None and len(large) > 1:
             pair_tables = (large[1],)
+        outcome.pair_tables = pair_tables
 
         pilot: Optional[PilotStats] = None
+        # one pilot STAGE, however many undershoot retries it takes — the
+        # counter the runtime's sharing tests and benchmarks assert against
+        self.ex._count("pilots_run")
         t0 = time.perf_counter()
         for attempt in range(3):
-            pilot = self.ex.execute_pilot(plan, pilot_table, theta_p, seed + 101 * attempt,
+            pilot = self.ex.execute_pilot(plan, pilot_table, theta_p,
+                                          pilot_seed + 101 * attempt,
                                           pair_tables=pair_tables)
             if pilot.n_sampled_blocks >= min(spec.min_pilot_blocks, n_blocks):
                 break
@@ -204,14 +276,42 @@ class PilotDB:
         report.theta_pilot = theta_p
         report.n_pilot_blocks = pilot.n_sampled_blocks
         report.pilot_scanned_bytes = pilot.scanned_bytes
+        report.pilot_ran = True
+        outcome.pilot = pilot
+        outcome.theta_p = theta_p
         if pilot.n_sampled_blocks < 2:
-            return self._exact(q, plan, comp_channels, report, "pilot sample too small")
+            outcome.fallback = "pilot sample too small"
+            return outcome
+        if len(np.nonzero(pilot.group_present)[0]) == 0:
+            outcome.fallback = "no groups in pilot"
+        return outcome
+
+    def finish_from_pilot(self, q: Query, spec: ErrorSpec,
+                          outcome: "PilotOutcome", seed: int,
+                          shared: bool = False) -> ApproxAnswer:
+        """Stage 2 for one query, from a (possibly shared) pilot outcome.
+
+        Builds this query's own probabilistic constraints from ``spec``,
+        solves the sampling-plan optimization, and runs the final query with
+        this query's ``seed`` — so two queries finishing from the same pilot
+        still draw their final samples independently.  ``shared=True`` marks
+        the report as having reused another query's pilot stage.
+        """
+        plan, comp_channels = outcome.plan, outcome.comp_channels
+        # per-query copy: members finishing from one shared outcome must not
+        # see each other's plan/final timings or fallback reasons
+        report = dataclasses.replace(outcome.report)
+        report.pilot_shared = shared
+        if outcome.fallback is not None:
+            return self._exact(q, plan, comp_channels, report, outcome.fallback)
+        pilot = outcome.pilot
+        pilot_table = outcome.pilot_table
+        pair_tables = outcome.pair_tables
+        theta_p = outcome.theta_p
 
         # --- budgets & constraints -------------------------------------------
         t0 = time.perf_counter()
         present = np.nonzero(pilot.group_present)[0]
-        if len(present) == 0:
-            return self._exact(q, plan, comp_channels, report, "no groups in pilot")
 
         channel_budgets: List[Tuple[int, ChannelBudget]] = []
         n_constraints = 0

@@ -27,6 +27,7 @@ their exact-execution fallback path explicitly.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -101,6 +102,20 @@ class Executor:
         self.catalog = dict(catalog)
         self.use_compiled = use_compiled
         self.physical = PhysicalCompiler(self.catalog, kernel_mode=kernel_mode)
+        # Execution counters, lock-guarded: the concurrent runtime
+        # (repro.runtime) runs queries from a worker pool, and its tests /
+        # benchmarks assert pilot-sharing through exactly these numbers
+        # (`+= 1` on an attribute is not atomic under threads).
+        # pilots_run counts pilot STAGES (incremented by PilotDB.run_pilot,
+        # once per stage regardless of undershoot retries); queries_run
+        # counts execute() calls.
+        self._counter_lock = threading.Lock()
+        self.pilots_run = 0
+        self.queries_run = 0
+
+    def _count(self, attr: str) -> None:
+        with self._counter_lock:
+            setattr(self, attr, getattr(self, attr) + 1)
 
     # -- catalog management ---------------------------------------------------
     def register_table(self, name: str, table: BlockTable) -> None:
@@ -262,6 +277,7 @@ class Executor:
 
     # -- public API ----------------------------------------------------------
     def execute(self, plan: L.Aggregate) -> QueryResult:
+        self._count("queries_run")
         if self.use_compiled:
             return self._execute_compiled(plan)
         return self._execute_eager(plan)
@@ -327,6 +343,10 @@ class Executor:
     ) -> PilotStats:
         """Run the pilot query: block-sample ``pilot_table`` at theta_p and
         compute per-block (and per block-pair) sums of each simple aggregate.
+
+        Not counted here: ``pilots_run`` counts pilot *stages* and is
+        incremented by :meth:`repro.core.taqa.PilotDB.run_pilot` — a stage's
+        Bernoulli-undershoot retries re-enter this method but are one stage.
         """
         # The compiled lowering traces one pair table; the (currently unused
         # by TAQA) multi-pair shape takes the eager path so both paths return

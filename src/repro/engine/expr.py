@@ -76,6 +76,23 @@ class Const(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class Str(Expr):
+    """A string literal (dialect surface only).
+
+    Tables are numeric; a Str is meaningful only while it compares against a
+    dictionary-encoded column, and the session lowers it to the column's
+    integer code (:func:`repro.api.sql.resolve_string_literals`) before any
+    plan reaches the engine.  Evaluating an unresolved Str is a type error —
+    never a silent coercion.
+    """
+
+    value: str
+
+    def columns(self):
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
 class BinOp(Expr):
     op: str
     left: Expr
@@ -137,6 +154,11 @@ def eval_expr(expr: Expr, columns) -> jnp.ndarray:
         return columns[expr.name]
     if isinstance(expr, Const):
         return jnp.asarray(expr.value)
+    if isinstance(expr, Str):
+        raise TypeError(
+            f"unresolved string literal {expr.value!r}: string comparisons "
+            "must be lowered to dictionary codes before execution (register "
+            "a dictionary for the column on the Session)")
     if isinstance(expr, BinOp):
         l, r = eval_expr(expr.left, columns), eval_expr(expr.right, columns)
         if expr.op == "+":

@@ -47,6 +47,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
+from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -524,12 +526,23 @@ class PhysicalCompiler:
                 f"kernel_mode must be 'auto', 'pallas', or 'xla', got {kernel_mode!r}")
         self.catalog = catalog
         self.kernel_mode = kernel_mode
-        self._cache: Dict[tuple, _CompiledBase] = {}
+        # Values are compiled executables, or a pending Future while one
+        # worker builds that key.  The concurrent runtime compiles from
+        # worker threads: the lock covers only dict bookkeeping and the
+        # hit/miss counters (asserted by scheduler/runtime tests), while
+        # tracing/XLA compilation happens OUTSIDE it — distinct plan shapes
+        # compile in parallel, cache hits never stall behind a build, and a
+        # key still compiles at most once (waiters block on its Future).
+        self._cache: Dict[tuple, object] = {}
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def cache_info(self) -> CacheInfo:
-        return CacheInfo(self.hits, self.misses, len(self._cache))
+        with self._lock:
+            size = sum(1 for v in self._cache.values()
+                       if not isinstance(v, Future))
+            return CacheInfo(self.hits, self.misses, size)
 
     # -- route policy --------------------------------------------------------
     def _use_pallas(self) -> bool:
@@ -549,14 +562,30 @@ class PhysicalCompiler:
         return tuple(out)
 
     def _lookup(self, key, build):
-        hit = self._cache.get(key)
-        if hit is not None:
-            self.hits += 1
-            return hit
-        self.misses += 1
-        compiled = build()
-        self._cache[key] = compiled
-        return compiled
+        with self._lock:
+            entry = self._cache.get(key)
+            if entry is None:  # this thread builds; others wait on the Future
+                self.misses += 1
+                placeholder: Future = Future()
+                self._cache[key] = placeholder
+            else:
+                self.hits += 1  # a waiter did not build — that's a hit
+        if entry is None:
+            try:
+                compiled = build()
+            except BaseException as e:
+                with self._lock:  # let a later call retry the build
+                    if self._cache.get(key) is placeholder:
+                        del self._cache[key]
+                placeholder.set_exception(e)
+                raise
+            with self._lock:
+                self._cache[key] = compiled
+            placeholder.set_result(compiled)
+            return compiled
+        if isinstance(entry, Future):
+            return entry.result()  # blocks until built; re-raises its error
+        return entry
 
     # -- final / plain queries ----------------------------------------------
     def compile_query(self, plan: L.Aggregate,

@@ -1,0 +1,17 @@
+# The concurrent query runtime (serving-scale execution behind QueryHandle):
+# a worker pool overlapping host-side sampling decisions with device
+# execution across drain groups, one-pilot-per-group statistic sharing, and
+# a session-level LRU of finished answers.  The synchronous scheduler drain
+# is the degenerate case (workers=0, sharing off, cache size 0).
+from repro.runtime.pool import AsyncRuntime, BackpressureError
+from repro.runtime.result_cache import ResultCache, ResultCacheInfo
+from repro.runtime.shared_pilot import execute_group, subgroup_by_pilot
+
+__all__ = [
+    "AsyncRuntime",
+    "BackpressureError",
+    "ResultCache",
+    "ResultCacheInfo",
+    "execute_group",
+    "subgroup_by_pilot",
+]

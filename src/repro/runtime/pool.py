@@ -1,0 +1,129 @@
+"""Thread-pool execution of drain groups — async behind QueryHandle.
+
+JAX dispatch releases the GIL while the device executes, so a thread pool
+genuinely overlaps one group's host-side work (sampling decisions, plan
+optimization, tracing) with another group's device execution — the
+serving-scale step past the synchronous-cooperative ``drain()`` loop.
+Groups, not individual queries, are the unit of work: a group shares one
+pilot (see ``shared_pilot``) and must stay on one worker so its members
+finish from the same outcome without cross-thread hand-off.
+
+Every failure is captured on the affected handles (``shared_pilot`` per
+member, a last-resort net here for bugs in the group machinery itself) —
+nothing raises through ``run_groups`` and no worker death loses a handle.
+
+Backpressure is the admission side's job: :class:`BackpressureError` is
+raised by callers (the SQL gateway's bounded queue and per-client caps)
+when ``in_flight`` + queued work exceeds their bounds; the pool itself
+never drops or blocks submissions.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor, wait
+from typing import TYPE_CHECKING, List, Optional
+
+if TYPE_CHECKING:
+    from repro.api.session import QueryHandle, Session
+
+
+class BackpressureError(RuntimeError):
+    """Admission refused: the queue is full or a per-client cap is hit.
+
+    Deliberately NOT a query failure — the request was never admitted, so
+    no ticket exists and no seed was consumed; the client should retry
+    after draining results.
+    """
+
+
+class AsyncRuntime:
+    """Executes drain groups on a bounded worker pool for one session."""
+
+    def __init__(self, session: "Session", workers: int = 4):
+        if workers < 0:
+            raise ValueError(f"workers must be >= 0, got {workers}")
+        self._session = session
+        self.workers = workers
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+        self._in_flight = 0          # handles dispatched, not yet finished
+        self._futures: List[Future] = []
+        self.total_groups = 0
+
+    @property
+    def is_async(self) -> bool:
+        return self.workers > 0
+
+    @property
+    def in_flight(self) -> int:
+        """Handles currently dispatched to workers and not yet finished —
+        the admission-control signal gateways bound against."""
+        with self._lock:
+            return self._in_flight
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.workers,
+                    thread_name_prefix="pilotdb-runtime")
+            return self._pool
+
+    # -- execution -----------------------------------------------------------
+    def run_groups(self, groups: List[List["QueryHandle"]],
+                   block: bool = True) -> None:
+        """Execute signature groups; with ``block=False`` they run in the
+        background and callers observe completion via handle.poll()/wait()."""
+        groups = [g for g in groups if g]
+        if not groups:
+            return
+        self.total_groups += len(groups)
+        if not self.is_async:
+            for g in groups:
+                self._run_group_captured(g)
+            return
+        pool = self._ensure_pool()
+        futures = []
+        for g in groups:
+            with self._lock:
+                self._in_flight += len(g)
+            fut = pool.submit(self._worker, g)
+            futures.append(fut)
+        with self._lock:
+            self._futures = [f for f in self._futures if not f.done()]
+            self._futures.extend(futures)
+        if block:
+            wait(futures)
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until every dispatched group finished; False on timeout."""
+        with self._lock:
+            outstanding = list(self._futures)
+        done, not_done = wait(outstanding, timeout=timeout)
+        with self._lock:
+            self._futures = [f for f in self._futures if not f.done()]
+        return not not_done
+
+    def shutdown(self) -> None:
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    # -- worker side ---------------------------------------------------------
+    def _worker(self, group: List["QueryHandle"]) -> None:
+        try:
+            self._run_group_captured(group)
+        finally:
+            with self._lock:
+                self._in_flight -= len(group)
+
+    def _run_group_captured(self, group: List["QueryHandle"]) -> None:
+        try:
+            self._session._execute_group(group)
+        except Exception as e:  # group-machinery bug: fail handles, not pool
+            for h in group:
+                if not h.done:
+                    h._mark_failed(
+                        f"runtime worker error: {type(e).__name__}: {e}")

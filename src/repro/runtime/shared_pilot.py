@@ -1,0 +1,101 @@
+"""One pilot, many finals: group execution with shared pilot statistics.
+
+A drain group holds queries with equal structural signatures (sampling-
+stripped plan, predicate constants included).  Within such a group, the
+pilot stage — scan theta_p of the pilot table, per-block statistics — is
+identical for every member whose ErrorSpec agrees on the *pilot-stage*
+tunables (:func:`repro.core.taqa.pilot_params`); error/confidence targets
+only enter at stage 2.  So the group runs ONE pilot and fans its block
+statistics out: each member solves its own sampling-plan optimization from
+its own ErrorSpec and draws its own final sample from its own seed.
+
+Bit-identity.  The pilot seed derives from (session seed, structural
+signature, pilot params) — not from any member's per-query seed — and the
+session uses the *same* derivation when a query runs solo.  A query answered
+from a shared pilot is therefore bit-identical to the same query run alone
+on an equal-seed session: same pilot sample, same constraints, same chosen
+plan, same final sample.
+
+Failure capture.  A member whose stage 2 raises fails alone; a pilot-stage
+exception fails every member that would have used that pilot (each would
+have raised identically solo).  Nothing propagates out of the group — the
+worker pool relies on that.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List, Tuple
+
+from repro.core.taqa import pilot_params
+
+if TYPE_CHECKING:  # runtime layering: session owns the runtime
+    from repro.api.session import QueryHandle, Session
+
+
+def subgroup_by_pilot(handles: List["QueryHandle"]) -> List[List["QueryHandle"]]:
+    """Split a signature group into pilot-sharing subgroups.
+
+    Exact-mode members (no ErrorSpec) run no pilot and each form their own
+    singleton; approximate members subgroup by pilot params, keeping
+    submission order within and across subgroups (first-arrival order).
+    """
+    subgroups: Dict[Tuple, List["QueryHandle"]] = {}
+    for h in handles:
+        key = ("exact", h.query_id) if h.spec is None \
+            else ("pilot",) + pilot_params(h.spec)
+        subgroups.setdefault(key, []).append(h)
+    return list(subgroups.values())
+
+
+def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
+    """Run one signature group: cached members answer immediately, each
+    pilot-sharing subgroup runs one pilot, members finish independently."""
+    for members in subgroup_by_pilot(handles):
+        live = [h for h in members
+                if not h.done and not session._serve_cached(h)]
+        if not live:
+            continue
+        if (live[0].spec is None or len(live) == 1
+                or not session.config.share_pilots):
+            for h in live:
+                session._run_handle(h)
+            continue
+        _run_shared(session, live)
+
+
+def _run_shared(session: "Session", live: List["QueryHandle"]) -> None:
+    leader = live[0]
+    pilot_seed = session._pilot_seed_for(leader)
+    gen = session._scan_generations(leader.query)
+    for h in live:
+        h._mark_running()
+    try:
+        outcome = session.db.run_pilot(leader.query, leader.spec, pilot_seed)
+    except Exception as e:
+        # every member's solo pilot would have raised identically
+        for h in live:
+            h._mark_failed(f"{type(e).__name__}: {e}")
+        return
+    # the first member actually COMPUTED (not cache-served) owns the pilot
+    # stage in its report (pilot_shared=False) — drain stats count pilot
+    # stages by that flag, so it must land on a computed answer
+    owns_pilot = True
+    for h in live:
+        # an earlier member's completion may have populated the result
+        # cache with this member's exact (query, spec, seed) answer — the
+        # within-batch herd case — so re-check before paying a final stage
+        if session._serve_cached(h):
+            continue
+        try:
+            ans = session.db.finish_from_pilot(h.query, h.spec, outcome,
+                                               seed=h.seed,
+                                               shared=not owns_pilot)
+            # ownership sticks only to a COMPLETED answer: if completion
+            # fails (mid-flight table replacement), the next member carries
+            # the non-shared report so drain stats still see the stage.
+            # (If every member fails, the stage shows only in
+            # executor.pilots_run — drain stats count completed answers.)
+            if session._complete_handle(h, ans, gen):
+                owns_pilot = False
+        except Exception as e:  # a member failing alone must not sink peers
+            h._mark_failed(f"{type(e).__name__}: {e}")

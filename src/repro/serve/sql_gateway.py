@@ -3,11 +3,23 @@
 Mirrors :class:`repro.serve.engine.ServeEngine`'s submit/run idiom for the
 query side of the house: many clients post dialect SQL, the gateway parses
 each request immediately (a client's syntax error fails only that client's
-ticket, never the batch) and enqueues the rest on the session's
-:class:`QueryScheduler`.  ``run()`` drains in signature-grouped,
-submission-fair batches, so a thundering herd of structurally identical
-dashboard queries compiles once and runs warm — the paper's middleware
-stance (§2.4) at serving scale.
+ticket, never the batch) and enqueues the rest on its scheduler.  ``run()``
+drains in signature-grouped, submission-fair batches through the session's
+concurrent runtime — a thundering herd of structurally identical dashboard
+queries compiles once, runs ONE shared pilot, and repeated identical
+requests answer straight from the session result cache — the paper's
+middleware stance (§2.4) at serving scale.
+
+Backpressure.  Admission is bounded two ways, both raising
+:class:`repro.runtime.BackpressureError` *before* a ticket exists (the
+request is refused, not failed — the client retries after results drain):
+
+* ``max_pending`` caps this gateway's total unfinished admitted work —
+  queries still queued AND queries in flight on runtime workers (work
+  admitted by other gateways or direct session drains never consumes this
+  gateway's budget);
+* ``max_inflight_per_client`` caps one client's share of it, so a single
+  dashboard storm cannot monopolize the admission queue.
 """
 
 from __future__ import annotations
@@ -17,16 +29,20 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.api.scheduler import QueryScheduler
 from repro.api.session import QueryHandle, Session
+from repro.runtime import BackpressureError
 
 
 @dataclasses.dataclass
 class GatewayStats:
     requests: int = 0
     rejected: int = 0          # failed at parse, never scheduled
+    throttled: int = 0         # refused admission (backpressure), no ticket
     served: int = 0
     drains: int = 0
     compile_misses: int = 0
     compile_hits: int = 0
+    pilots_run: int = 0        # pilot stages executed on behalf of this gateway
+    result_hits: int = 0       # tickets answered from the session result cache
 
     @property
     def cache_hit_rate(self) -> float:
@@ -35,11 +51,20 @@ class GatewayStats:
 
 
 class SqlGateway:
-    def __init__(self, session: Session, *, batch_size: Optional[int] = None):
+    def __init__(self, session: Session, *, batch_size: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 max_inflight_per_client: Optional[int] = None):
         if batch_size is not None and batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if max_inflight_per_client is not None and max_inflight_per_client < 1:
+            raise ValueError(f"max_inflight_per_client must be >= 1, "
+                             f"got {max_inflight_per_client}")
         self.session = session
         self.batch_size = batch_size
+        self.max_pending = max_pending
+        self.max_inflight_per_client = max_inflight_per_client
         # A private scheduler over the shared session: draining this gateway
         # never executes (or counts) queries submitted elsewhere on the
         # session, and two gateways over one session keep separate stats.
@@ -47,9 +72,39 @@ class SqlGateway:
         self.stats = GatewayStats()
         self._tickets: Dict[int, Tuple[str, QueryHandle]] = {}
 
+    # -- admission control ----------------------------------------------------
+    def _admitted_load(self) -> int:
+        """THIS gateway's admitted work still queued or executing (tickets
+        whose handles are not done — queued requests are ticketed at
+        submission).  Other gateways / direct session drains sharing the
+        runtime never consume this gateway's admission budget."""
+        return sum(1 for _, h in self._tickets.values() if not h.done)
+
+    def _check_admission(self, client_id: str) -> None:
+        if (self.max_pending is not None
+                and self._admitted_load() >= self.max_pending):
+            self.stats.throttled += 1
+            raise BackpressureError(
+                f"admission queue full ({self.max_pending} pending); "
+                "drain results (run()) and retry")
+        if self.max_inflight_per_client is not None:
+            mine = sum(1 for cid, h in self._tickets.values()
+                       if cid == client_id and not h.done)
+            if mine >= self.max_inflight_per_client:
+                self.stats.throttled += 1
+                raise BackpressureError(
+                    f"client {client_id!r} has {mine} queries in flight "
+                    f"(cap {self.max_inflight_per_client}); collect results "
+                    "and retry")
+
     # -- client API -----------------------------------------------------------
     def submit(self, client_id: str, sql: str) -> int:
-        """Post one client request; returns a ticket (the query id)."""
+        """Post one client request; returns a ticket (the query id).
+
+        Raises :class:`BackpressureError` when admission bounds are hit —
+        the request was never admitted and no ticket exists.
+        """
+        self._check_admission(client_id)
         self.stats.requests += 1
         try:
             handle = self.scheduler.submit(self.session.prepare(sql))
@@ -79,6 +134,8 @@ class SqlGateway:
             drain = self.scheduler.last_drain
             self.stats.compile_misses += drain.compile_misses
             self.stats.compile_hits += drain.compile_hits
+            self.stats.pilots_run += drain.pilots_run
+            self.stats.result_hits += drain.result_hits
         delivered = {qid: h for qid, (_, h) in self._tickets.items()
                      if h.done}
         for qid in delivered:

@@ -1,0 +1,397 @@
+"""Concurrent query runtime: async execution, shared pilots, result cache.
+
+The load-bearing invariant everywhere: answers are a pure function of
+(session seed, query content) — never of worker count, pilot sharing,
+caching, or submission order.  Every test that turns a runtime feature on
+checks bit-identity against a session with it off.
+"""
+
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.api import BackpressureError, Session, SessionConfig
+from repro.core.taqa import PilotDB
+from repro.engine.datagen import make_lineitem, tpch_catalog
+from repro.runtime import ResultCache
+from repro.runtime.shared_pilot import subgroup_by_pilot
+
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+
+# the synchronous-cooperative baseline: no pool, no sharing, no cache
+SERIAL_CFG = SessionConfig(async_workers=0, share_pilots=False,
+                           result_cache_size=0)
+NOCACHE_CFG = SessionConfig(result_cache_size=0)  # runtime on, cache off
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(scale_rows=200_000, block_rows=32, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: one pilot, <= 1 compilation, bit-identical to solo
+# ---------------------------------------------------------------------------
+
+def test_herd_one_pilot_one_compile_bit_identical(catalog):
+    solo = Session(catalog, seed=11, config=SERIAL_CFG).sql(HERD_SQL)
+    assert solo.status == "done" and solo.fallback is None
+
+    rt = Session(catalog, seed=11, config=NOCACHE_CFG)
+    warm = rt.sql(HERD_SQL)  # pays the pilot + both compilations once
+    assert np.array_equal(warm.result().values, solo.result().values)
+    handles = [rt.submit(HERD_SQL) for _ in range(5)]
+    p0 = rt.executor.pilots_run
+    m0 = rt.compile_cache_info().misses
+    done = rt.drain()
+    # N structurally identical queries: exactly ONE pilot stage and at most
+    # one new physical compilation (a sample-size bucket boundary), asserted
+    # via the executor's counters.
+    assert rt.executor.pilots_run - p0 == 1
+    assert rt.compile_cache_info().misses - m0 <= 1
+    assert rt.scheduler.last_drain.pilots_run == 1
+    # every runtime answer is bit-identical to the solo equal-seed run
+    for h in done:
+        assert h.status == "done"
+        assert np.array_equal(h.result().values, solo.result().values)
+    rt.close()
+
+
+def test_shared_pilot_fans_out_to_member_specs(catalog):
+    """Same structure, different ErrorSpecs: one pilot, per-member plans,
+    each bit-identical to its own solo run."""
+    base = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+            "WHERE l_shipdate < 2000 ")
+    sql_a, sql_b = base + "ERROR 8% CONFIDENCE 95%", base + "ERROR 4% CONFIDENCE 95%"
+    serial = Session(catalog, seed=4, config=SERIAL_CFG)
+    solo_a, solo_b = serial.sql(sql_a), serial.sql(sql_b)
+
+    rt = Session(catalog, seed=4, config=NOCACHE_CFG)
+    rt.sql(sql_a)  # warm
+    ha = [rt.submit(sql_a) for _ in range(2)]
+    hb = [rt.submit(sql_b) for _ in range(2)]
+    p0 = rt.executor.pilots_run
+    rt.drain()
+    assert rt.executor.pilots_run - p0 == 1  # specs share the pilot stage
+    for h in ha:
+        assert np.array_equal(h.result().values, solo_a.result().values)
+    for h in hb:
+        assert np.array_equal(h.result().values, solo_b.result().values)
+    # the tighter spec buys a higher sampling rate, from the same pilot
+    rate = lambda h: list(h.report.plan.rates.values())[0]
+    assert rate(hb[0]) > rate(ha[0])
+    assert hb[1].report.pilot_shared and not ha[0].report.pilot_shared
+    rt.close()
+
+
+def test_share_pilots_off_is_bit_identical_but_pays_n_pilots(catalog):
+    rt_off = Session(catalog, seed=11, config=dc.replace(
+        NOCACHE_CFG, share_pilots=False))
+    handles = [rt_off.submit(HERD_SQL) for _ in range(3)]
+    p0 = rt_off.executor.pilots_run
+    rt_off.drain()
+    assert rt_off.executor.pilots_run - p0 == 3  # one pilot per member
+    solo = Session(catalog, seed=11, config=SERIAL_CFG).sql(HERD_SQL)
+    for h in handles:
+        assert np.array_equal(h.result().values, solo.result().values)
+    rt_off.close()
+
+
+# ---------------------------------------------------------------------------
+# Async execution: worker pool, poll/wait, ordering
+# ---------------------------------------------------------------------------
+
+def test_async_drain_matches_serial_across_groups(catalog):
+    sqls = [
+        "SELECT SUM(l_quantity) AS q FROM lineitem ERROR 10% CONFIDENCE 90%",
+        "SELECT COUNT(*) AS n FROM lineitem WHERE l_shipdate < 2000 "
+        "ERROR 10% CONFIDENCE 90%",
+        "SELECT AVG(l_extendedprice) AS p FROM lineitem "
+        "WHERE l_discount BETWEEN 0.02 AND 0.08 ERROR 10% CONFIDENCE 90%",
+        "SELECT SUM(l_quantity) AS q FROM lineitem",
+    ]
+    serial = Session(catalog, seed=2, config=SERIAL_CFG)
+    expected = [serial.sql(s) for s in sqls]
+    conc = Session(catalog, seed=2, config=dc.replace(NOCACHE_CFG,
+                                                      async_workers=4))
+    handles = [conc.submit(s) for s in sqls for _ in range(2)]
+    done = conc.drain()
+    assert len(done) == 8 and all(h.status == "done" for h in done)
+    for h in handles:
+        ref = expected[sqls.index(h.sql)]
+        assert np.array_equal(h.result().values, ref.result().values)
+    conc.close()
+
+
+def test_drain_async_poll_wait(catalog):
+    session = Session(catalog, seed=6, config=NOCACHE_CFG)
+    h = session.submit(HERD_SQL)
+    assert h.poll() == "pending"
+    dispatched = session.drain_async()  # returns without blocking
+    assert [x.query_id for x in dispatched] == [h.query_id]
+    assert session.scheduler.pending_count == 0
+    assert h.wait(timeout=120), "query did not finish in time"
+    assert h.poll() == "done" and h.scalar("rev") > 0
+    assert session.runtime.wait_idle(timeout=120)
+    assert session.runtime.in_flight == 0
+    session.close()
+
+
+def test_submission_fair_order_under_interleaved_submissions(catalog):
+    """Interleaved submissions across three signatures drain in earliest-
+    arrival group order with submission order inside each group — also under
+    the concurrent runtime, which must not let completion order leak into
+    the returned batch."""
+    session = Session(catalog, seed=1, config=NOCACHE_CFG)
+    sql_a = "SELECT SUM(l_quantity) AS qty FROM lineitem ERROR 10% CONFIDENCE 90%"
+    sql_b = ("SELECT COUNT(*) AS n FROM lineitem WHERE l_shipdate < 2000 "
+             "ERROR 10% CONFIDENCE 90%")
+    sql_c = "SELECT COUNT(*) AS n FROM orders"
+    order = [session.submit(s) for s in
+             (sql_a, sql_b, sql_c, sql_a, sql_b, sql_a)]
+    done = session.drain()
+    stats = session.scheduler.last_drain
+    assert stats.n_groups == 3 and sorted(stats.group_sizes) == [1, 2, 3]
+    ids = [h.query_id for h in done]
+    assert ids == [order[0].query_id, order[3].query_id, order[5].query_id,
+                   order[1].query_id, order[4].query_id, order[2].query_id]
+    # a second interleaved wave starts fresh: B arrives first this time
+    wave2 = [session.submit(s) for s in (sql_b, sql_a, sql_b)]
+    ids2 = [h.query_id for h in session.drain()]
+    assert ids2 == [wave2[0].query_id, wave2[2].query_id, wave2[1].query_id]
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Failure capture under the runtime
+# ---------------------------------------------------------------------------
+
+def test_member_failure_mid_group_captured_alone(catalog, monkeypatch):
+    """One member's stage 2 raising mid-group fails that handle only."""
+    base = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+            "WHERE l_shipdate < 2000 ")
+    sqls = [base + f"ERROR {e}% CONFIDENCE 95%" for e in (8, 7, 6)]
+    session = Session(catalog, seed=5, config=NOCACHE_CFG)
+    real = PilotDB.finish_from_pilot
+
+    def flaky(self, q, spec, outcome, seed, shared=False):
+        if abs(spec.error - 0.07) < 1e-12:  # the middle member only
+            raise RuntimeError("worker exploded mid-group")
+        return real(self, q, spec, outcome, seed, shared)
+
+    monkeypatch.setattr(PilotDB, "finish_from_pilot", flaky)
+    handles = [session.submit(s) for s in sqls]
+    done = session.drain()
+    assert len(done) == 3
+    assert handles[0].status == "done"
+    assert handles[2].status == "done"
+    assert handles[1].status == "failed"
+    assert "worker exploded mid-group" in handles[1].error
+    session.close()
+
+
+def test_pilot_failure_fails_every_member(catalog, monkeypatch):
+    session = Session(catalog, seed=5, config=NOCACHE_CFG)
+
+    def doomed(self, q, spec, pilot_seed):
+        raise RuntimeError("pilot scan died")
+
+    monkeypatch.setattr(PilotDB, "run_pilot", doomed)
+    handles = [session.submit(HERD_SQL) for _ in range(3)]
+    session.drain()
+    for h in handles:  # each member solo would have raised identically
+        assert h.status == "failed" and "pilot scan died" in h.error
+    session.close()
+
+
+def test_worker_pool_captures_group_machinery_crash(catalog, monkeypatch):
+    """A bug in the group runner itself must fail the handles, not lose
+    them or kill the pool."""
+    session = Session(catalog, seed=3, config=NOCACHE_CFG)
+
+    def crash(self, group):
+        raise RuntimeError("group machinery bug")
+
+    monkeypatch.setattr(Session, "_execute_group", crash)
+    h = session.submit("SELECT COUNT(*) AS n FROM lineitem")
+    done = session.drain()
+    assert done == [h]
+    assert h.status == "failed" and "runtime worker error" in h.error
+    monkeypatch.undo()
+    # the pool survives: the next drain runs normally
+    h2 = session.submit("SELECT COUNT(*) AS n FROM lineitem")
+    session.drain()
+    assert h2.status == "done"
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Result cache
+# ---------------------------------------------------------------------------
+
+def test_repeated_dashboard_answers_from_cache_with_original_report(catalog):
+    session = Session(catalog, seed=12)
+    first = session.sql(HERD_SQL)
+    assert not first.cached
+    q0 = session.executor.queries_run
+    again = session.sql(HERD_SQL)
+    assert again.cached
+    assert session.executor.queries_run == q0  # no execution at all
+    # the original answer object, values AND a-priori error report
+    assert again.answer is first.answer
+    assert again.report.theta_pilot == first.report.theta_pilot
+    info = session.result_cache_info()
+    assert info.hits >= 1 and info.size >= 1
+    session.close()
+
+
+def test_register_table_invalidates_only_that_tables_entries(catalog):
+    session = Session(dict(catalog), seed=8)
+    line_sql = "SELECT SUM(l_quantity) AS q FROM lineitem"
+    orders_sql = "SELECT COUNT(*) AS n FROM orders"
+    join_sql = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+                "JOIN orders ON l_orderkey = o_orderkey "
+                "WHERE o_orderdate < 1200")
+    v1 = session.sql(line_sql).scalar("q")
+    session.sql(orders_sql)
+    session.sql(join_sql)
+    # replace lineitem with different data: its entries (including the join,
+    # which merely scans it) must go; the orders entry must survive
+    session.register_table(
+        "lineitem", make_lineitem(200_000, 32, num_orders=50_000, seed=99))
+    h_orders = session.sql(orders_sql)
+    assert h_orders.cached
+    h_line = session.sql(line_sql)
+    assert not h_line.cached
+    assert h_line.scalar("q") != v1  # computed against the new data
+    h_join = session.sql(join_sql)
+    assert not h_join.cached
+    session.close()
+
+
+def test_register_table_mid_flight_fails_handle_and_skips_cache(
+        catalog, monkeypatch):
+    """A query in flight across a register_table() replacement may be torn
+    (old-data pilot scaling a new-data final): the handle must fail with a
+    retryable error, and nothing may enter the result cache."""
+    session = Session(dict(catalog), seed=14)
+    sql = "SELECT SUM(l_quantity) AS q FROM lineitem"
+    new_table = make_lineitem(200_000, 32, num_orders=50_000, seed=77)
+    real_exact = PilotDB.exact
+
+    def swapping_exact(self, q):
+        ans = real_exact(self, q)
+        session.register_table("lineitem", new_table)  # mid-flight swap
+        return ans
+
+    monkeypatch.setattr(PilotDB, "exact", swapping_exact)
+    h = session.sql(sql)
+    monkeypatch.undo()
+    assert h.status == "failed"
+    assert "replaced while the query was in flight" in h.error
+    # the resubmission executes cleanly against the new data, uncached
+    h2 = session.sql(sql)
+    assert h2.status == "done" and not h2.cached
+    session.close()
+
+
+def test_resubmit_during_async_execution_not_double_queued(catalog, monkeypatch):
+    """A retried submit() while a worker holds the handle must not re-queue
+    (and so double-execute) it."""
+    import threading
+    session = Session(catalog, seed=15, config=NOCACHE_CFG)
+    started, release = threading.Event(), threading.Event()
+    real = Session._execute_group
+
+    def gated(self, group):
+        started.set()
+        release.wait(timeout=60)
+        return real(self, group)
+
+    monkeypatch.setattr(Session, "_execute_group", gated)
+    h = session.submit("SELECT COUNT(*) AS n FROM lineitem")
+    session.drain_async()
+    assert started.wait(timeout=60)
+    session.scheduler.submit(h)  # retry while in flight: must be a no-op
+    assert session.scheduler.pending_count == 0
+    q0 = session.executor.queries_run
+    release.set()
+    assert h.wait(timeout=120) and h.status == "done"
+    session.runtime.wait_idle(timeout=120)
+    assert session.executor.queries_run - q0 == 1  # executed exactly once
+    session.close()
+
+
+def test_result_cache_lru_eviction():
+    cache = ResultCache(capacity=2)
+    cache.put("a", 1, ("t",))
+    cache.put("b", 2, ("t",))
+    assert cache.get("a") == 1       # refreshes "a" to most-recent
+    cache.put("c", 3, ("u",))        # evicts "b", the LRU entry
+    assert cache.get("b") is None
+    assert cache.get("a") == 1 and cache.get("c") == 3
+    info = cache.info()
+    assert info.evictions == 1 and info.size == 2
+    assert cache.invalidate_table("t") == 1  # only "a" scans t
+    assert cache.get("a") is None and cache.get("c") == 3
+
+
+def test_result_cache_session_capacity_and_exact_queries(catalog):
+    session = Session(catalog, seed=2, config=SessionConfig(
+        result_cache_size=2))
+    sqls = ["SELECT COUNT(*) AS n FROM orders",
+            "SELECT SUM(l_quantity) AS q FROM lineitem",
+            "SELECT COUNT(*) AS n FROM lineitem"]
+    for s in sqls:
+        assert not session.sql(s).cached  # exact-mode answers cache too
+    assert session.sql(sqls[2]).cached    # still resident
+    assert not session.sql(sqls[0]).cached  # evicted by capacity 2
+    assert session.result_cache_info().evictions >= 1
+    session.close()
+
+
+def test_equal_seed_sessions_replay_in_any_order(catalog):
+    """Content-derived seeds: replay is submission-order-independent."""
+    sql_a = "SELECT SUM(l_quantity) AS q FROM lineitem ERROR 10% CONFIDENCE 90%"
+    sql_b = ("SELECT COUNT(*) AS n FROM lineitem WHERE l_shipdate < 2000 "
+             "ERROR 10% CONFIDENCE 90%")
+    s1 = Session(catalog, seed=33)
+    a1, b1 = s1.sql(sql_a), s1.sql(sql_b)
+    s2 = Session(catalog, seed=33)
+    b2, a2 = s2.sql(sql_b), s2.sql(sql_a)  # reversed order
+    assert np.array_equal(a1.result().values, a2.result().values)
+    assert np.array_equal(b1.result().values, b2.result().values)
+    s1.close(), s2.close()
+
+
+# ---------------------------------------------------------------------------
+# Subgrouping / backpressure units
+# ---------------------------------------------------------------------------
+
+def test_subgroup_by_pilot_splits_exact_and_pilot_params(catalog):
+    session = Session(catalog, seed=0, config=NOCACHE_CFG)
+    base = "SELECT SUM(l_quantity) AS q FROM lineitem "
+    h1 = session.prepare(base + "ERROR 8% CONFIDENCE 95%")
+    h2 = session.prepare(base + "ERROR 5% CONFIDENCE 90%")  # same pilot params
+    h3 = session.prepare(base)                              # exact: no pilot
+    subs = subgroup_by_pilot([h1, h2, h3])
+    assert [len(s) for s in subs] == [2, 1]
+    assert subs[0] == [h1, h2]
+    session.close()
+
+
+def test_runtime_in_flight_tracks_dispatch(catalog):
+    session = Session(catalog, seed=0, config=NOCACHE_CFG)
+    assert session.runtime.in_flight == 0
+    handles = [session.submit(HERD_SQL) for _ in range(2)]
+    session.drain_async()
+    assert session.runtime.wait_idle(timeout=120)
+    assert session.runtime.in_flight == 0
+    assert all(h.status == "done" for h in handles)
+    session.close()
+
+
+def test_backpressure_error_is_exported():
+    assert issubclass(BackpressureError, RuntimeError)
