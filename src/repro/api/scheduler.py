@@ -1,20 +1,25 @@
 """Concurrent query scheduler: signature-grouped, submission-fair draining.
 
 The millions-of-users scenario sends streams of structurally identical
-queries (the same dashboard refreshed by many users — same plan *including
-predicate constants*: the kernels bake constants in as compile-time bounds,
-so queries differing in a WHERE constant compile separately, exactly as
-``engine/physical.plan_signature`` keys them).  The physical layer already
-compiles one executable per plan signature; this scheduler makes the
-serving side exploit it:
+queries — the same dashboard refreshed by many users, often with *shifted
+predicate constants* (a sliding date range).  Constants are hoisted out of
+the physical layer's compile keys (``engine/physical.plan_signature``) and
+ride as runtime operands, so constant-varied queries share one executable;
+this scheduler groups by the same constant-stripped *template* signature so
+those queries also drain as one group and their finals can launch as one
+batched dispatch:
 
 * submissions queue as :class:`QueryHandle`\\ s (seeds derive from query
   content at submission, so scheduling order never changes sampling),
-* draining groups pending handles by their structural signature (computed
-  once at submission, carried on the handle) and hands the groups to the
-  session's :class:`repro.runtime.AsyncRuntime` — groups run concurrently
-  on the worker pool, one pilot is shared within each group's pilot-params
-  subgroup, and cached answers short-circuit execution entirely,
+* draining groups pending handles by their template signature
+  (``core.taqa.template_signature``, computed once at submission and
+  carried on the handle) and hands the groups to the session's
+  :class:`repro.runtime.AsyncRuntime` — groups run concurrently on the
+  worker pool, one pilot is shared within each group's (full
+  constant-bearing signature, pilot-params) subgroup — pilot statistics
+  depend on predicate selectivity, so sharing across constants would void
+  the error guarantees — cached answers short-circuit execution entirely,
+  and same-bucket finals stack into one device launch,
 * groups are *admitted* in order of their earliest submission and members
   in submission order, so no query starves behind an unrelated hot group
   (submission-fair batches); ``max_queries`` caps one drain call.
@@ -31,7 +36,7 @@ import dataclasses
 import time
 from typing import TYPE_CHECKING, Dict, List, Optional
 
-from repro.core.taqa import structural_signature
+from repro.core.taqa import structural_signature, template_signature
 
 if TYPE_CHECKING:  # circular at runtime: session owns the scheduler
     from repro.api.session import QueryHandle, Session
@@ -89,6 +94,8 @@ class QueryScheduler:
                            # or double-execute one already on a worker)
         if handle.signature is None:  # hand-built handles from older callers
             handle.signature = structural_signature(handle.query)
+        if handle.group_key is None:
+            handle.group_key = template_signature(handle.query)
         self._queued.add(handle.query_id)
         self._pending.append(handle)
         return handle
@@ -100,7 +107,10 @@ class QueryScheduler:
     def _grouped(self) -> List[List["QueryHandle"]]:
         groups: Dict[object, List["QueryHandle"]] = {}
         for h in self._pending:
-            groups.setdefault(h.signature, []).append(h)
+            # Constant-stripped template: constant-varied herds drain as one
+            # group (shared compilations, batched finals); pilot sharing
+            # re-splits on the full signature inside the group.
+            groups.setdefault(h.group_key or h.signature, []).append(h)
         # Submission-fair: a group runs no earlier than its first member's
         # arrival; members keep submission order within the group.
         return sorted(groups.values(), key=lambda g: g[0].query_id)

@@ -40,8 +40,10 @@ of the async runtime never need to block on a drain.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import hashlib
+import os
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -55,8 +57,10 @@ from repro.core.spec import ErrorSpec
 from repro.core.taqa import (ApproxAnswer, PilotDB, Query, TaqaReport,
                              pilot_params, structural_signature)
 from repro.engine.executor import Executor
+from repro.engine.physical import plan_template
 from repro.engine.table import BlockTable
-from repro.runtime import AsyncRuntime, ResultCache, ResultCacheInfo
+from repro.runtime import (AsyncRuntime, CachedAnswer, ResultCache,
+                           ResultCacheInfo)
 from repro.runtime import shared_pilot as _shared_pilot
 
 
@@ -69,6 +73,15 @@ class QueryStatus:
 
 class QueryFailedError(RuntimeError):
     """Raised by :meth:`QueryHandle.result` when execution failed."""
+
+
+@dataclasses.dataclass
+class _Dictionary:
+    """A column's string dictionary: code lookup plus order metadata."""
+
+    codes: Dict[str, int]       # value -> integer code
+    values: List[str]           # code -> value (registration order)
+    is_sorted: bool             # strictly ascending => code order == lex order
 
 
 def _content_hash(*parts) -> int:
@@ -91,9 +104,14 @@ class QueryHandle:
     error: Optional[str] = None
     cached: bool = False              # answered from the session result cache
     _answer: Optional[ApproxAnswer] = None
-    # structural signature, computed once at submission (scheduler grouping,
-    # pilot-seed derivation, compile-cache affinity all key off it)
+    # full constant-bearing structural signature, computed once at
+    # submission (pilot-seed derivation and pilot-sharing subgroups key off
+    # it — pilot statistics depend on predicate constants)
     signature: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # constant-stripped template signature: the scheduler's grouping key —
+    # constant-varied queries share compilations and batched final launches
+    group_key: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False)
     _done_event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
@@ -176,14 +194,45 @@ class SessionConfig:
     # -- concurrent runtime (repro.runtime) ----------------------------------
     # Worker threads draining signature groups concurrently; 0 restores the
     # synchronous-cooperative loop (groups run inline on the draining
-    # thread).  Answers never depend on this — only wall-clock does.
-    async_workers: int = 4
-    # One pilot per (signature, pilot-params) subgroup, statistics fanned
-    # out to every member (off: each query runs its own — bit-identical —
-    # pilot; the switch trades pilot scans for nothing else).
+    # thread).  None sizes the pool from os.cpu_count(): capped at the core
+    # count (a pool wider than the machine only contends on jit dispatch —
+    # the BENCH_runtime.json async regression was 4 workers on 2 cores) with
+    # a serial fallback on single-core hosts where no overlap exists to
+    # win.  Answers never depend on this — only wall-clock does.
+    async_workers: Optional[int] = None
+    # One pilot per (full signature, pilot-params) subgroup, statistics
+    # fanned out to every member (off: each query runs its own —
+    # bit-identical — pilot; the switch trades pilot scans for nothing
+    # else).  Never shared across predicate constants: selectivity shapes
+    # the pilot statistics the §4 guarantees are computed from.
     share_pilots: bool = True
+    # Stack a drain group's same-bucket final scans into ONE batched device
+    # dispatch (lax.map over member lanes — bit-identical to solo runs).
+    # Rides the shared-pilot group path, so share_pilots=False also
+    # disables it.
+    batch_finals: bool = True
     # Session result-cache capacity in answers; 0 disables caching.
     result_cache_size: int = 128
+    # Optional byte budget for the result cache: entries are stored compact
+    # (values + error report + packed group-present bitmap, never the full
+    # ApproxAnswer graph) and evicted LRU-first once the budget is hit.
+    # None = entry-count bound only.
+    result_cache_bytes: Optional[int] = None
+
+    def resolve_workers(self) -> int:
+        """The worker count ``async_workers=None`` auto-sizes to.
+
+        On <= 2 cores the pool measurably LOSES to the serial loop (GIL-bound
+        planning + jit-dispatch contention — the BENCH_runtime.json `async`
+        regression), so toy hosts fall back to serial; larger machines get a
+        pool one narrower than the core count, capped at 8.
+        """
+        if self.async_workers is not None:
+            return self.async_workers
+        cpus = os.cpu_count() or 1
+        if cpus <= 2:
+            return 0
+        return min(8, cpus - 1)  # leave a core for the draining thread
 
 
 class Session:
@@ -215,7 +264,7 @@ class Session:
         self._entropy = int(seed)
         self._next_id = 0
         self._max_groups_cache: Dict[tuple, int] = {}
-        self._dictionaries: Dict[str, Dict[str, int]] = {}
+        self._dictionaries: Dict[str, "_Dictionary"] = {}
         # Bumped by register_table; snapshotted when a query starts
         # executing so an answer computed against since-replaced data can
         # never be delivered or (re-)enter the result cache.  The lock makes
@@ -224,8 +273,9 @@ class Session:
         # the bump) or wholly after (the query runs on the new data).
         self._table_gen: Dict[str, int] = {}
         self._gen_lock = threading.Lock()
-        self.result_cache = ResultCache(config.result_cache_size)
-        self.runtime = AsyncRuntime(self, workers=config.async_workers)
+        self.result_cache = ResultCache(config.result_cache_size,
+                                        max_bytes=config.result_cache_bytes)
+        self.runtime = AsyncRuntime(self, workers=config.resolve_workers())
         self.scheduler = QueryScheduler(self)
 
     def close(self) -> None:
@@ -274,9 +324,20 @@ class Session:
 
     def register_dictionary(self, column: str, values: Sequence[str]) -> None:
         """Declare ``column`` as dictionary-encoded: ``values[i]`` is the
-        string for integer code ``i``.  String literals comparing against
-        ``column`` then lower to the code (see ``api/sql.py``)."""
-        self._dictionaries[column] = {v: i for i, v in enumerate(values)}
+        string for integer code ``i``.  String equality literals comparing
+        against ``column`` then lower to the code (see ``api/sql.py``).
+
+        When ``values`` is lexicographically sorted (a *sorted dictionary*
+        encoding: code order == string order), order comparisons
+        (``WHERE col < 'N'``) lower too, via the bisection boundary — even
+        for literals outside the dictionary.  Unsorted dictionaries keep
+        rejecting order comparisons: their code order is meaningless.
+        """
+        values = list(values)
+        self._dictionaries[column] = _Dictionary(
+            codes={v: i for i, v in enumerate(values)},
+            values=values,
+            is_sorted=all(a < b for a, b in zip(values, values[1:])))
 
     def tables(self) -> List[str]:
         return sorted(self.executor.catalog)
@@ -401,17 +462,47 @@ class Session:
         return self._make_handle(parsed.query, parsed.spec, sql=text)
 
     def _resolve_dictionary(self, column: str, literal: str) -> int:
-        codes = self._dictionaries.get(column)
-        if codes is None:
+        d = self._dictionaries.get(column)
+        if d is None:
             raise UnsupportedSqlError(
                 f"string literal {literal!r} compares against {column!r}, "
                 "which has no registered dictionary (see "
                 "Session.register_dictionary)")
-        if literal not in codes:
+        if literal not in d.codes:
             raise UnsupportedSqlError(
                 f"{literal!r} is not in the dictionary of {column!r} "
-                f"(values: {sorted(codes)})")
-        return codes[literal]
+                f"(values: {sorted(d.codes)})")
+        return d.codes[literal]
+
+    def _resolve_dictionary_order(self, column: str, literal: str,
+                                  op: str) -> Tuple[str, int]:
+        """Lower an order comparison ``column <op> literal`` against a
+        SORTED dictionary to an integer-code comparison.
+
+        Sortedness makes code order equal string order, so the comparison
+        becomes a bisection boundary — valid even for literals not in the
+        dictionary: ``col < 'N'`` holds exactly for codes below
+        ``bisect_left(values, 'N')``.  Returns the lowered ``(op, code)``
+        with the column on the left.
+        """
+        d = self._dictionaries.get(column)
+        if d is None:
+            raise UnsupportedSqlError(
+                f"string literal {literal!r} compares against {column!r}, "
+                "which has no registered dictionary (see "
+                "Session.register_dictionary)")
+        if not d.is_sorted:
+            raise UnsupportedSqlError(
+                f"dictionary-encoded column {column!r} supports = and != "
+                f"only, got {op!r}: its dictionary is not lexicographically "
+                "sorted, so code order does not reflect string order "
+                "(register a sorted dictionary to enable order comparisons)")
+        if op in ("<", ">="):
+            boundary = bisect.bisect_left(d.values, literal)
+        else:  # "<=", ">": strict/inclusive flip at the right bisection
+            boundary = bisect.bisect_right(d.values, literal)
+        lowered = {"<": "<", "<=": "<", ">": ">=", ">=": ">="}[op]
+        return lowered, boundary
 
     def _validate_group_domain(self, query: Query) -> None:
         """Reject GROUP BY shapes that would silently misbehave: a
@@ -438,11 +529,16 @@ class Session:
                      sql: Optional[str] = None) -> QueryHandle:
         # resolve + validate before deriving a seed: rejected queries never
         # enter the seed/cache keyspace
-        query = resolve_string_literals(query, self._resolve_dictionary)
+        query = resolve_string_literals(query, self._resolve_dictionary,
+                                        self._resolve_dictionary_order)
         self._validate_group_domain(query)
+        # one lowering: the group key is the (memoized) constant-stripped
+        # template of the signature just computed, not a second lowering
+        signature = structural_signature(query)
         handle = QueryHandle(query_id=self._next_id, query=query, spec=spec,
                              seed=self._derive_seed(query, spec), sql=sql,
-                             signature=structural_signature(query))
+                             signature=signature,
+                             group_key=plan_template(signature))
         self._next_id += 1
         return handle
 
@@ -465,14 +561,16 @@ class Session:
 
     def _serve_cached(self, handle: QueryHandle) -> bool:
         """Answer ``handle`` from the result cache if possible.  A hit
-        returns the original ApproxAnswer — values and the error report that
-        was guaranteed when it was computed (still valid: register_table
-        would have evicted the entry if the data had changed)."""
+        rebuilds the answer from the compact cached record — values and the
+        error report that was guaranteed when it was computed (still valid:
+        register_table would have evicted the entry if the data had
+        changed)."""
         if handle.query is None:
             return False
-        answer = self.result_cache.get(self._cache_key(handle))
-        if answer is None:
+        entry = self.result_cache.get(self._cache_key(handle))
+        if entry is None:
             return False
+        answer = entry.to_answer() if isinstance(entry, CachedAnswer) else entry
         handle._mark_done(answer, cached=True)
         return True
 
@@ -503,7 +601,7 @@ class Session:
                 "resubmit to run against the new data")
             return False
         self.result_cache.put(
-            self._cache_key(handle), answer,
+            self._cache_key(handle), CachedAnswer.from_answer(answer),
             (s.table for s in handle.query.child.scans()),
             guard=None if gen_snapshot is None else
             (lambda: gen_snapshot == self._scan_generations(handle.query)))

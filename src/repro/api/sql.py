@@ -421,7 +421,11 @@ def parse_sql(
 # String-literal lowering (dictionary-encoded columns)
 # ---------------------------------------------------------------------------
 
-def _resolve_strings_expr(e: Expr, resolver) -> Expr:
+# Mirrored comparison for literal-on-the-left spellings: 'N' < col == col > 'N'
+_MIRROR_CMP = {"<": ">", "<=": ">=", ">": "<", ">=": "<="}
+
+
+def _resolve_strings_expr(e: Expr, resolver, order_resolver=None) -> Expr:
     if isinstance(e, Cmp):
         ls, rs = isinstance(e.left, Str), isinstance(e.right, Str)
         if not (ls or rs):
@@ -434,20 +438,27 @@ def _resolve_strings_expr(e: Expr, resolver) -> Expr:
             raise UnsupportedSqlError(
                 f"string literal {lit.value!r} must compare against a "
                 "column, not an expression")
-        if e.op not in ("==", "!="):
+        if e.op in ("==", "!="):
+            code = Const(float(resolver(col.name, lit.value)))
+            return Cmp(e.op, code, col) if ls else Cmp(e.op, col, code)
+        # Order comparison: valid only against a SORTED dictionary (code
+        # order == string order); the order resolver owns that check and
+        # returns the bisection boundary as the lowered (op, code).
+        if order_resolver is None:
             raise UnsupportedSqlError(
                 f"dictionary-encoded columns support = and != only, "
-                f"got {e.op!r} (dictionary order is not lexicographic)")
-        code = Const(float(resolver(col.name, lit.value)))
-        return Cmp(e.op, code, col) if ls else Cmp(e.op, col, code)
+                f"got {e.op!r} (no sorted-dictionary order resolver)")
+        op = _MIRROR_CMP[e.op] if ls else e.op
+        lowered_op, code = order_resolver(col.name, lit.value, op)
+        return Cmp(lowered_op, col, Const(float(code)))
     if isinstance(e, And):
-        return And(_resolve_strings_expr(e.left, resolver),
-                   _resolve_strings_expr(e.right, resolver))
+        return And(_resolve_strings_expr(e.left, resolver, order_resolver),
+                   _resolve_strings_expr(e.right, resolver, order_resolver))
     if isinstance(e, Or):
-        return Or(_resolve_strings_expr(e.left, resolver),
-                  _resolve_strings_expr(e.right, resolver))
+        return Or(_resolve_strings_expr(e.left, resolver, order_resolver),
+                  _resolve_strings_expr(e.right, resolver, order_resolver))
     if isinstance(e, Not):
-        return Not(_resolve_strings_expr(e.arg, resolver))
+        return Not(_resolve_strings_expr(e.arg, resolver, order_resolver))
     if isinstance(e, Between) and isinstance(e.arg, Str):
         # unreachable from the parser (rejected there); guards hand-built
         # plans so no Str survives to execution
@@ -456,33 +467,40 @@ def _resolve_strings_expr(e: Expr, resolver) -> Expr:
     return e
 
 
-def _resolve_strings_plan(p: L.Plan, resolver) -> L.Plan:
+def _resolve_strings_plan(p: L.Plan, resolver, order_resolver=None) -> L.Plan:
     if isinstance(p, L.Filter):
         return dataclasses.replace(
-            p, child=_resolve_strings_plan(p.child, resolver),
-            pred=_resolve_strings_expr(p.pred, resolver))
+            p, child=_resolve_strings_plan(p.child, resolver, order_resolver),
+            pred=_resolve_strings_expr(p.pred, resolver, order_resolver))
     if isinstance(p, L.Join):
         return dataclasses.replace(
-            p, left=_resolve_strings_plan(p.left, resolver),
-            right=_resolve_strings_plan(p.right, resolver))
+            p, left=_resolve_strings_plan(p.left, resolver, order_resolver),
+            right=_resolve_strings_plan(p.right, resolver, order_resolver))
     if isinstance(p, L.Union):
         return dataclasses.replace(
-            p, inputs=tuple(_resolve_strings_plan(c, resolver)
+            p, inputs=tuple(_resolve_strings_plan(c, resolver, order_resolver)
                             for c in p.inputs))
     return p
 
 
-def resolve_string_literals(query: Query, resolver) -> Query:
-    """Lower every ``col = 'literal'`` comparison to the column's integer
-    dictionary code via ``resolver(column, literal) -> int``.
+def resolve_string_literals(query: Query, resolver,
+                            order_resolver=None) -> Query:
+    """Lower every string-literal comparison to integer dictionary codes.
+
+    ``resolver(column, literal) -> int`` handles equality (``=`` / ``!=``);
+    ``order_resolver(column, literal, op) -> (op, code)`` handles order
+    comparisons over *sorted* dictionaries, returning the bisection-boundary
+    code and the (possibly strictness-adjusted) operator — omit it to keep
+    the historical equality-only behaviour.
 
     The engine is numeric; this is the only path by which a :class:`Str`
-    node may reach execution, and it removes them all.  ``resolver`` raises
-    :class:`UnsupportedSqlError` for columns without a dictionary or
-    literals outside it (see :meth:`repro.api.Session.register_dictionary`).
-    Queries without string literals are returned unchanged.
+    node may reach execution, and it removes them all.  Resolvers raise
+    :class:`UnsupportedSqlError` for columns without a dictionary, literals
+    outside it, or order comparisons against unsorted dictionaries (see
+    :meth:`repro.api.Session.register_dictionary`).  Queries without string
+    literals are returned unchanged.
     """
-    child = _resolve_strings_plan(query.child, resolver)
+    child = _resolve_strings_plan(query.child, resolver, order_resolver)
     if child == query.child:
         return query
     return dataclasses.replace(query, child=child)

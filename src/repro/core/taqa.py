@@ -112,16 +112,35 @@ def build_engine_plan(q: Query) -> Tuple[L.Aggregate, List[Tuple[int, ...]]]:
 
 
 def structural_signature(q: Query) -> L.Aggregate:
-    """Hashable structural identity of a query's physical shape.
+    """Hashable structural identity of a query's physical shape, predicate
+    constants INCLUDED.
 
     Two queries with equal signatures lower to the same engine plan modulo
-    TABLESAMPLE clauses, i.e. they share every compile-cache entry the
-    physical layer creates (`engine.physical.plan_signature` strips sampling
-    the same way).  The scheduler groups submissions by this key so
-    structurally identical pilots compile once and run back-to-back warm.
+    TABLESAMPLE clauses.  This constant-bearing key is what pilot *sharing*
+    and pilot-seed derivation must use: pilot block statistics depend on
+    predicate selectivity, so sharing a pilot across different constants
+    would silently break the §4 error guarantees even though the queries
+    compile to one executable.
     """
     plan, _ = build_engine_plan(q)
     return L.strip_samples(plan)
+
+
+def template_signature(q: Query) -> L.Plan:
+    """The constant-STRIPPED structural signature (the compile-cache key
+    modulo shapes): :func:`structural_signature` with every predicate/
+    expression constant hoisted into a Param slot.
+
+    Queries agreeing on this template share every executable the physical
+    layer compiles — constants enter at runtime as the params operand — so
+    the scheduler groups submissions by it: a herd of dashboard queries
+    differing only in a WHERE constant drains as ONE group, compiles at most
+    once, and its finals can launch as one batched dispatch.  (Pilot sharing
+    inside the group still sub-keys on the full constant-bearing
+    signature — see :func:`structural_signature`.)
+    """
+    from repro.engine.physical import plan_template  # memoized extraction
+    return plan_template(structural_signature(q))
 
 
 def pilot_params(spec: ErrorSpec) -> Tuple:
@@ -135,6 +154,29 @@ def pilot_params(spec: ErrorSpec) -> Tuple:
     return (spec.theta_pilot, spec.min_pilot_blocks, spec.max_pilot_rate,
             spec.group_min_size, spec.group_miss_prob,
             spec.strict_group_coverage)
+
+
+@dataclasses.dataclass
+class FinalStage:
+    """One query's stage 2, planned but (possibly) not yet executed.
+
+    :meth:`PilotDB.prepare_final` runs the planning half — constraints,
+    sampling-plan optimization, the final-plan rewrite — and returns this.
+    When planning short-circuits (pilot fallback, infeasible constraints, no
+    plan cheaper than exact), ``answer`` is already set; otherwise
+    ``final_plan`` awaits execution via :meth:`PilotDB.run_final` (solo) or
+    :meth:`PilotDB.run_finals_batched` (one stacked dispatch per drain-group
+    bucket).  Splitting planning from execution is what lets the runtime
+    batch N members' final scans into a single launch.
+    """
+
+    q: Query
+    spec: ErrorSpec
+    plan: "L.Aggregate"
+    comp_channels: List[Tuple[int, ...]]
+    report: TaqaReport
+    final_plan: Optional["L.Aggregate"] = None
+    answer: Optional[ApproxAnswer] = None
 
 
 @dataclasses.dataclass
@@ -296,14 +338,29 @@ class PilotDB:
         this query's ``seed`` — so two queries finishing from the same pilot
         still draw their final samples independently.  ``shared=True`` marks
         the report as having reused another query's pilot stage.
+
+        This is ``prepare_final`` + ``run_final``; the runtime calls the two
+        halves separately so same-bucket finals batch into one dispatch.
         """
+        return self.run_final(self.prepare_final(q, spec, outcome, seed,
+                                                 shared=shared))
+
+    def prepare_final(self, q: Query, spec: ErrorSpec,
+                      outcome: "PilotOutcome", seed: int,
+                      shared: bool = False) -> FinalStage:
+        """The planning half of stage 2: constraints, plan optimization, and
+        the final-plan rewrite — everything except the final scan itself."""
         plan, comp_channels = outcome.plan, outcome.comp_channels
         # per-query copy: members finishing from one shared outcome must not
         # see each other's plan/final timings or fallback reasons
         report = dataclasses.replace(outcome.report)
         report.pilot_shared = shared
+        stage = FinalStage(q=q, spec=spec, plan=plan,
+                           comp_channels=comp_channels, report=report)
         if outcome.fallback is not None:
-            return self._exact(q, plan, comp_channels, report, outcome.fallback)
+            stage.answer = self._exact(q, plan, comp_channels, report,
+                                       outcome.fallback)
+            return stage
         pilot = outcome.pilot
         pilot_table = outcome.pilot_table
         pair_tables = outcome.pair_tables
@@ -345,7 +402,9 @@ class PilotDB:
                 break
         if infeasible_reason:
             report.plan_time_s = time.perf_counter() - t0
-            return self._exact(q, plan, comp_channels, report, infeasible_reason)
+            stage.answer = self._exact(q, plan, comp_channels, report,
+                                       infeasible_reason)
+            return stage
 
         # --- Stage 2: plan optimization ----------------------------------------
         sampleable = [pilot_table] + [t for t in pair_tables]
@@ -359,30 +418,67 @@ class PilotDB:
         )
         report.plan_time_s = time.perf_counter() - t0
         if chosen is None:
-            return self._exact(q, plan, comp_channels, report,
-                               "no feasible plan cheaper than exact")
+            stage.answer = self._exact(q, plan, comp_channels, report,
+                                       "no feasible plan cheaper than exact")
+            return stage
         report.plan = chosen
 
-        # --- final query --------------------------------------------------------
-        t0 = time.perf_counter()
+        # --- final-plan rewrite (execution is run_final's / the batch's) ------
         samples = {t: L.SampleClause("block", r, seed + 977)
                    for t, r in chosen.rates.items() if r < 1.0}
-        final_plan = L.rewrite_scans(plan, samples)
+        stage.final_plan = L.rewrite_scans(plan, samples)
+        return stage
+
+    def run_final(self, stage: FinalStage) -> ApproxAnswer:
+        """The execution half of stage 2 for one query, solo."""
+        if stage.answer is not None:
+            return stage.answer
+        t0 = time.perf_counter()
         try:
-            res = self.ex.execute(final_plan)
+            res = self.ex.execute(stage.final_plan)
         except EmptySampleError as e:
             # The planner's rate drew zero blocks — no unbiased upscale
             # exists, so PilotDB's "never return an unguaranteed estimate"
             # contract forces the exact path (explicitly, not via a
             # fabricated scale).
-            report.final_time_s = time.perf_counter() - t0
-            return self._exact(q, plan, comp_channels, report,
-                               f"final sample empty ({e.table})")
-        report.final_time_s = time.perf_counter() - t0
-        report.final_scanned_bytes = res.scanned_bytes
+            stage.report.final_time_s = time.perf_counter() - t0
+            return self._exact(stage.q, stage.plan, stage.comp_channels,
+                               stage.report, f"final sample empty ({e.table})")
+        return self._finish_result(stage, res, time.perf_counter() - t0)
 
-        values = _combine(q, comp_channels, res.values)
-        return ApproxAnswer([c.name for c in q.aggs], values, res.group_present, report)
+    def run_finals_batched(self, stages: List[FinalStage]) -> None:
+        """Execute many prepared finals, one stacked device dispatch per
+        same-signature bucket (``Executor.execute_batch``), filling each
+        stage's ``answer``.
+
+        Lane k of a batch runs member k's solo XLA graph (``lax.map``), so
+        answers are bit-identical to :meth:`run_final`; a member whose
+        sampled scan comes back empty takes its own exact fallback, exactly
+        as it would solo.
+        """
+        pend = [s for s in stages if s.answer is None]
+        if not pend:
+            return
+        t0 = time.perf_counter()
+        outs = self.ex.execute_batch([s.final_plan for s in pend])
+        wall = time.perf_counter() - t0
+        for stage, res in zip(pend, outs):
+            if isinstance(res, EmptySampleError):
+                stage.report.final_time_s = wall
+                stage.answer = self._exact(
+                    stage.q, stage.plan, stage.comp_channels, stage.report,
+                    f"final sample empty ({res.table})")
+            else:
+                # the batch shares one launch; each member reports its wall
+                stage.answer = self._finish_result(stage, res, wall)
+
+    def _finish_result(self, stage: FinalStage, res,
+                       elapsed_s: float) -> ApproxAnswer:
+        stage.report.final_time_s = elapsed_s
+        stage.report.final_scanned_bytes = res.scanned_bytes
+        values = _combine(stage.q, stage.comp_channels, res.values)
+        return ApproxAnswer([c.name for c in stage.q.aggs], values,
+                            res.group_present, stage.report)
 
     # -- variance-bound factory ------------------------------------------------
     def _make_var_fn(self, pilot: PilotStats, pilot_table: str,

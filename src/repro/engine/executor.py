@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.engine import logical as L
 from repro.engine import ops
-from repro.engine.physical import PhysicalCompiler, ScanRuntime, scan_cost_bytes
+from repro.engine.physical import (PhysicalCompiler, ScanRuntime,
+                                   plan_constants, scan_cost_bytes)
 from repro.engine.sampling import (SampleInfo, block_sample, draw_block_ids,
                                    pad_block_ids, row_sample)
 from repro.engine.table import BlockTable
@@ -287,7 +288,9 @@ class Executor:
         runtimes, infos = self._scan_runtimes(plan)
         self._check_empty(infos)
         compiled = self.physical.compile_query(plan, runtimes)
-        sums_d, counts_d = compiled(runtimes)
+        # Predicate/expression constants ride as a runtime operand: the
+        # compiled executable is shared across every constant variant.
+        sums_d, counts_d = compiled(runtimes, plan_constants(plan))
         # Single device→host boundary: the whole scan→aggregate pipeline ran
         # as one executable.
         sums = np.asarray(sums_d, dtype=np.float64)
@@ -332,6 +335,109 @@ class Executor:
             sample_infos=infos,
             wall_time_s=time.perf_counter() - t0,
         )
+
+    # -- batched execution (drain-group finals) ------------------------------
+    def _execute_captured(self, plan: L.Aggregate):
+        """execute(), with EmptySampleError returned instead of raised (the
+        per-member contract of :meth:`execute_batch`)."""
+        try:
+            return self.execute(plan)
+        except EmptySampleError as e:
+            return e
+
+    def execute_batch(self, plans: List[L.Aggregate]) -> List[object]:
+        """Execute several plans, batching same-signature members into ONE
+        device dispatch each (see ``physical.compile_batched_query``).
+
+        Members are grouped by their solo compile key — the constant-hoisted
+        plan signature including sampling methods and bucketed shapes — and
+        every group of two or more runs as one ``lax.map`` executable over
+        stacked block-id matrices and params rows; lanes are bit-identical
+        to solo runs.  Groups are padded to a power-of-two batch size
+        (duplicating the last member; padded lanes are discarded) so batch
+        executables recur in log-many sizes.
+
+        Returns one entry per plan, position-aligned: a
+        :class:`QueryResult`, or the :class:`EmptySampleError` that member's
+        sampled scan raised — callers take their per-member exact fallback,
+        matching the serial path's semantics.  Singleton groups, the eager
+        executor, and Pallas kernel routes fall back to per-member
+        execution.
+
+        Buckets split greedily into power-of-two chunks (11 members → 8+2+1)
+        rather than padding up: batch executables recur in log-many sizes
+        with ZERO wasted lanes — padding would recompute up to 2x of the
+        device work, which at CPU scale costs more than the dispatches it
+        saves.
+        """
+        results: List[object] = [None] * len(plans)
+        if (not self.use_compiled or self.physical._use_pallas()
+                or len(plans) < 2):
+            for i, p in enumerate(plans):
+                results[i] = self._execute_captured(p)
+            return results
+
+        drawn: Dict[int, tuple] = {}
+        buckets: Dict[tuple, List[int]] = {}
+        for i, plan in enumerate(plans):
+            runtimes, infos = self._scan_runtimes(plan)
+            try:
+                self._check_empty(infos)
+            except EmptySampleError as e:
+                self._count("queries_run")
+                results[i] = e
+                continue
+            drawn[i] = (runtimes, infos)
+            key = self.physical.query_signature(plan, runtimes)
+            buckets.setdefault(key, []).append(i)
+
+        for idxs in buckets.values():
+            while idxs:
+                take = min(1 << (len(idxs).bit_length() - 1), len(idxs))
+                chunk, idxs = idxs[:take], idxs[take:]
+                if len(chunk) == 1:
+                    # the solo path redraws the same content-derived sample
+                    results[chunk[0]] = self._execute_captured(plans[chunk[0]])
+                    continue
+                try:
+                    self._run_bucket(plans, chunk, drawn, results)
+                except Exception:
+                    # a batch-level failure (e.g. the batched executable
+                    # failing to compile) must not sink the other buckets —
+                    # nor these members, who would succeed solo: fall back
+                    # to per-member dispatches, bit-identical by design
+                    for i in chunk:
+                        if results[i] is None:
+                            results[i] = self._execute_captured(plans[i])
+        return results
+
+    def _run_bucket(self, plans, idxs, drawn, results) -> None:
+        t0 = time.perf_counter()
+        compiled = self.physical.compile_batched_query(
+            plans[idxs[0]], drawn[idxs[0]][0], len(idxs))
+        sums_b, counts_b = compiled.call_batch(
+            [drawn[i][0] for i in idxs],
+            [plan_constants(plans[i]) for i in idxs])
+        # one device→host boundary for the whole bucket
+        sums_b = np.asarray(sums_b, dtype=np.float64)
+        counts_b = np.asarray(counts_b, dtype=np.float64)
+        wall = time.perf_counter() - t0
+        for k, i in enumerate(idxs):
+            self._count("queries_run")
+            runtimes, infos = drawn[i]
+            sums, counts = sums_b[k], counts_b[k]
+            values = self._compose_values(plans[i], sums, counts,
+                                          self._upscale(infos))
+            results[i] = QueryResult(
+                agg_names=[a.name for a in plans[i].aggs],
+                values=values,
+                raw_sums=sums,
+                group_counts=counts,
+                group_present=counts > 0,
+                scanned_bytes=compiled.scanned_bytes(runtimes),
+                sample_infos=infos,
+                wall_time_s=wall,
+            )
 
     def execute_pilot(
         self,
@@ -384,7 +490,8 @@ class Executor:
                                                pair_table)
         # One executable from sampled scan to per-block statistics — zero
         # host syncs in between; the conversions below are the boundary.
-        bs_d, present_d, pair_d = compiled({pilot_table: runtime})
+        bs_d, present_d, pair_d = compiled({pilot_table: runtime},
+                                           plan_constants(plan))
         block_sums = np.asarray(bs_d, dtype=np.float64)[:n_real]
         present = np.asarray(present_d, dtype=bool)
         pair_sums: Dict[str, np.ndarray] = {}

@@ -76,6 +76,25 @@ class Const(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class Param(Expr):
+    """A hoisted constant: slot ``index`` of the runtime parameter vector.
+
+    Produced by :func:`repro.engine.logical.extract_constants`, which rewrites
+    every :class:`Const` (and :class:`Between` bound) in a plan into a Param
+    so the *template* plan is constant-free.  The physical layer keys its
+    compile cache on templates and feeds the constants back in as a device
+    operand at call time — one jitted executable serves every constant
+    variant of a shape.  Evaluating a Param therefore requires ``params``
+    (see :func:`eval_expr`); user-built plans never contain one.
+    """
+
+    index: int
+
+    def columns(self):
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
 class Str(Expr):
     """A string literal (dialect surface only).
 
@@ -114,9 +133,13 @@ class Cmp(Expr):
 
 @dataclasses.dataclass(frozen=True)
 class Between(Expr):
+    """Two-sided range test.  ``lo``/``hi`` are floats in user plans; the
+    constant-hoisting pass replaces them with :class:`Param` slots in
+    template plans, so both spellings must evaluate."""
+
     arg: Expr
-    lo: float
-    hi: float
+    lo: Union[float, Expr]
+    hi: Union[float, Expr]
 
     def columns(self):
         return self.arg.columns()
@@ -148,19 +171,31 @@ class Not(Expr):
         return self.arg.columns()
 
 
-def eval_expr(expr: Expr, columns) -> jnp.ndarray:
-    """Evaluate ``expr`` against a mapping name -> 1-D array."""
+def eval_expr(expr: Expr, columns, params=None) -> jnp.ndarray:
+    """Evaluate ``expr`` against a mapping name -> 1-D array.
+
+    ``params`` is the runtime constant vector :class:`Param` slots index
+    into; it is only needed for template plans (user plans carry their
+    constants inline as :class:`Const` nodes).
+    """
     if isinstance(expr, Col):
         return columns[expr.name]
     if isinstance(expr, Const):
         return jnp.asarray(expr.value)
+    if isinstance(expr, Param):
+        if params is None:
+            raise TypeError(
+                f"Param({expr.index}) outside a parametrized execution: "
+                "template plans need the runtime constant vector")
+        return params[expr.index]
     if isinstance(expr, Str):
         raise TypeError(
             f"unresolved string literal {expr.value!r}: string comparisons "
             "must be lowered to dictionary codes before execution (register "
             "a dictionary for the column on the Session)")
     if isinstance(expr, BinOp):
-        l, r = eval_expr(expr.left, columns), eval_expr(expr.right, columns)
+        l = eval_expr(expr.left, columns, params)
+        r = eval_expr(expr.right, columns, params)
         if expr.op == "+":
             return l + r
         if expr.op == "-":
@@ -171,7 +206,8 @@ def eval_expr(expr: Expr, columns) -> jnp.ndarray:
             return l / r
         raise ValueError(expr.op)
     if isinstance(expr, Cmp):
-        l, r = eval_expr(expr.left, columns), eval_expr(expr.right, columns)
+        l = eval_expr(expr.left, columns, params)
+        r = eval_expr(expr.right, columns, params)
         if expr.op == "<":
             return l < r
         if expr.op == "<=":
@@ -186,12 +222,18 @@ def eval_expr(expr: Expr, columns) -> jnp.ndarray:
             return l != r
         raise ValueError(expr.op)
     if isinstance(expr, Between):
-        v = eval_expr(expr.arg, columns)
-        return (v >= expr.lo) & (v <= expr.hi)
+        v = eval_expr(expr.arg, columns, params)
+        lo = (eval_expr(expr.lo, columns, params)
+              if isinstance(expr.lo, Expr) else expr.lo)
+        hi = (eval_expr(expr.hi, columns, params)
+              if isinstance(expr.hi, Expr) else expr.hi)
+        return (v >= lo) & (v <= hi)
     if isinstance(expr, And):
-        return eval_expr(expr.left, columns) & eval_expr(expr.right, columns)
+        return (eval_expr(expr.left, columns, params)
+                & eval_expr(expr.right, columns, params))
     if isinstance(expr, Or):
-        return eval_expr(expr.left, columns) | eval_expr(expr.right, columns)
+        return (eval_expr(expr.left, columns, params)
+                | eval_expr(expr.right, columns, params))
     if isinstance(expr, Not):
-        return ~eval_expr(expr.arg, columns)
+        return ~eval_expr(expr.arg, columns, params)
     raise TypeError(f"not an Expr: {expr!r}")

@@ -13,7 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-from repro.engine.expr import Expr
+from repro.engine.expr import (And, Between, BinOp, Cmp, Const, Expr, Not, Or,
+                               Param)
 
 LINEAR_AGG_OPS = ("sum", "count", "avg")
 
@@ -141,3 +142,78 @@ def rewrite_scans(plan: Plan, samples: dict) -> Plan:
 def strip_samples(plan: Plan) -> Plan:
     scans = plan.scans()
     return rewrite_scans(plan, {s.table: None for s in scans})
+
+
+# ---------------------------------------------------------------------------
+# Constant hoisting (template plans for the compile cache)
+# ---------------------------------------------------------------------------
+
+def _hoist_expr(e: Expr, out: List[float]) -> Expr:
+    if isinstance(e, Const):
+        out.append(float(e.value))
+        return Param(len(out) - 1)
+    if isinstance(e, Param):
+        return e  # already a template
+    if isinstance(e, BinOp):
+        return BinOp(e.op, _hoist_expr(e.left, out), _hoist_expr(e.right, out))
+    if isinstance(e, Cmp):
+        return Cmp(e.op, _hoist_expr(e.left, out), _hoist_expr(e.right, out))
+    if isinstance(e, Between):
+        arg = _hoist_expr(e.arg, out)
+        if isinstance(e.lo, Expr):
+            lo: object = _hoist_expr(e.lo, out)
+        else:
+            out.append(float(e.lo))
+            lo = Param(len(out) - 1)
+        if isinstance(e.hi, Expr):
+            hi: object = _hoist_expr(e.hi, out)
+        else:
+            out.append(float(e.hi))
+            hi = Param(len(out) - 1)
+        return Between(arg, lo, hi)
+    if isinstance(e, And):
+        return And(_hoist_expr(e.left, out), _hoist_expr(e.right, out))
+    if isinstance(e, Or):
+        return Or(_hoist_expr(e.left, out), _hoist_expr(e.right, out))
+    if isinstance(e, Not):
+        return Not(_hoist_expr(e.arg, out))
+    return e  # Col, Str: no constants underneath
+
+
+def _hoist_plan(p: Plan, out: List[float]) -> Plan:
+    if isinstance(p, Scan):
+        return p
+    if isinstance(p, Filter):
+        child = _hoist_plan(p.child, out)
+        return Filter(child, _hoist_expr(p.pred, out))
+    if isinstance(p, Join):
+        return dataclasses.replace(p, left=_hoist_plan(p.left, out),
+                                   right=_hoist_plan(p.right, out))
+    if isinstance(p, Union):
+        return Union(tuple(_hoist_plan(c, out) for c in p.inputs))
+    if isinstance(p, Aggregate):
+        child = _hoist_plan(p.child, out)
+        aggs = tuple(
+            a if a.expr is None
+            else dataclasses.replace(a, expr=_hoist_expr(a.expr, out))
+            for a in p.aggs)
+        return dataclasses.replace(p, child=child, aggs=aggs)
+    raise TypeError(p)
+
+
+def extract_constants(plan: Plan) -> Tuple[Plan, Tuple[float, ...]]:
+    """Split ``plan`` into a constant-free *template* and its constants.
+
+    Every :class:`~repro.engine.expr.Const` value (and ``Between`` bound) is
+    replaced by a :class:`~repro.engine.expr.Param` slot, in a fixed
+    deterministic traversal order (children before predicates/aggregates,
+    left to right), and collected into the returned tuple.  Two plans that
+    differ only in predicate/expression constants therefore share one
+    template with position-aligned constant vectors — the physical layer
+    keys its compile cache on the template and feeds the constants in as a
+    runtime operand, so a dashboard sweeping a date range reuses one
+    executable instead of recompiling per constant.
+    """
+    out: List[float] = []
+    template = _hoist_plan(plan, out)
+    return template, tuple(out)

@@ -9,11 +9,22 @@ The engine is layered as::
 
 ``PhysicalCompiler`` lowers a :class:`logical.Aggregate` tree into a single
 jit-compiled executable and caches it under a *plan signature* — the operator
-tree shape with sampling rates/seeds stripped, the referenced column set and
-dtypes, ``block_rows``, ``max_groups``, and the bucketed sampled-block count.
+tree shape with sampling rates/seeds stripped AND predicate/expression
+constants hoisted (:func:`logical.extract_constants`), the referenced column
+set and dtypes, ``block_rows``, ``max_groups``, and the bucketed
+sampled-block count.  Constants enter executables as a runtime operand (the
+``params`` vector, device scalars / scalar prefetch), so ONE executable
+serves every constant variant of a shape: compile misses are O(distinct
+shapes), not O(queries) — a dashboard sweeping its date range runs warm.
 Repeated pilot/final queries (and many concurrent users issuing structurally
 identical queries, the serve-layer scenario) therefore skip recompilation;
 ``cache_info()`` exposes the hit/miss counters.
+
+``compile_batched_query`` additionally stacks N same-signature members
+(block-id matrices + bounds/params matrix) into ONE executable dispatch via
+``lax.map`` — the drain-group batching path: N finals cost one launch, and
+each member's lane runs the identical per-member HLO, so batched answers are
+bit-identical to solo runs.
 
 Kernel routing.  Block-sampled scans and their downstream aggregations are
 routed through the Pallas kernels in ``repro.kernels`` when the plan shape
@@ -114,18 +125,37 @@ class ScanRuntime:
 # Plan signatures
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=1024)
+def _template_of(plan: L.Plan) -> Tuple[L.Plan, Tuple[float, ...]]:
+    """Memoized constant hoisting (plans are frozen/hashable)."""
+    return L.extract_constants(plan)
+
+
+def plan_template(plan: L.Plan) -> L.Plan:
+    """The constant-free template of ``plan`` (Params in constant slots)."""
+    return _template_of(plan)[0]
+
+
+def plan_constants(plan: L.Plan) -> np.ndarray:
+    """The runtime constant vector of ``plan``, position-aligned with its
+    template's Param slots — the ``params`` operand of compiled executables."""
+    return np.asarray(_template_of(plan)[1], np.float32)
+
+
 def plan_signature(plan: L.Plan, runtimes: Optional[Dict[str, ScanRuntime]] = None,
                    extra: tuple = ()) -> tuple:
     """Hashable structural key for the compile cache.
 
     Sampling rates and seeds are stripped (they are runtime data); which
     tables are sampled, by which method, and at which bucketed size is kept
-    (those are shapes).  Predicate/expression *constants* stay in the key:
-    the filtered_agg kernel bakes them as compile-time bounds, exactly as a
-    DBMS compiles parametrized scans per constant set.
+    (those are shapes).  Predicate/expression *constants* are hoisted out of
+    the key too: they reach executables as the runtime ``params`` operand
+    (device scalars / kernel scalar prefetch), exactly as a DBMS binds
+    placeholders into one prepared plan — so constant-varied re-issues of a
+    shape share one compilation.
     """
     rsig = tuple(sorted((t, r.sig()) for t, r in (runtimes or {}).items()))
-    return (L.strip_samples(plan), rsig, tuple(extra))
+    return (plan_template(L.strip_samples(plan)), rsig, tuple(extra))
 
 
 def _referenced_columns(plan: L.Plan) -> set:
@@ -178,12 +208,15 @@ def _needed_by_table(plan: L.Plan, catalog: Dict[str, BlockTable]) -> Dict[str, 
 # ---------------------------------------------------------------------------
 
 def channel_matrix(columns: Dict[str, jnp.ndarray], valid: jnp.ndarray,
-                   exprs: Sequence[Optional[Expr]]) -> jnp.ndarray:
+                   exprs: Sequence[Optional[Expr]],
+                   params=None) -> jnp.ndarray:
     """Stack every aggregate channel's per-row values: (num_channels, rows).
 
     ``None`` channels are COUNT (ones).  Invalid rows contribute zeros, so a
     single scatter-add over the stacked matrix replaces the legacy
-    per-expression Python loop.
+    per-expression Python loop.  ``params`` resolves hoisted-constant Param
+    slots in template expressions (compiled lowerings); eager callers pass
+    constant-bearing exprs and omit it.
     """
     rows = valid.shape[0]
     outs = []
@@ -191,7 +224,8 @@ def channel_matrix(columns: Dict[str, jnp.ndarray], valid: jnp.ndarray,
         if e is None:
             v = jnp.ones(rows, jnp.float32)
         else:
-            v = jnp.broadcast_to(eval_expr(e, columns).astype(jnp.float32), (rows,))
+            v = jnp.broadcast_to(
+                eval_expr(e, columns, params).astype(jnp.float32), (rows,))
         outs.append(jnp.where(valid, v, 0.0))
     return jnp.stack(outs)
 
@@ -312,7 +346,7 @@ class _Tracer:
             return self._trace_scan(plan, rt)
         if isinstance(plan, L.Filter):
             child = self.trace(plan.child, rt)
-            mask = eval_expr(plan.pred, child.columns)
+            mask = eval_expr(plan.pred, child.columns, rt.get("params"))
             return dataclasses.replace(child, valid=child.valid & mask)
         if isinstance(plan, L.Join):
             return self._trace_join(plan, rt)
@@ -395,21 +429,24 @@ def _match_q6_bounds(preds: List[Expr]) -> Optional[Tuple[Tuple[str, str, str], 
     """Map a conjunctive range predicate onto filtered_agg's fixed slots.
 
     The kernel evaluates ``lo1<=f1<=hi1 AND lo2<=f2<=hi2 AND f3<c3`` with
-    compile-time bounds.  Two-sided/non-strict conditions fill the f1/f2
-    slots, a single strict upper bound fills f3; unused slots are padded with
-    ±3e38 (never binding for f32 data).  Returns ((f1,f2,f3) column names,
-    bounds) or None when the predicate doesn't fit.
+    *runtime* bounds (scalar prefetch).  Two-sided/non-strict conditions
+    fill the f1/f2 slots, a single strict upper bound fills f3; unused slots
+    are padded with ±3e38 (never binding for f32 data).  Bound slots are
+    either a plain float (the sentinels) or a constant-free :class:`Expr`
+    (Param slots of a template plan) evaluated against the params vector at
+    trace time.  Returns ((f1,f2,f3) column names, 5 bound slots) or None
+    when the predicate doesn't fit.
     """
     conjuncts: List[Expr] = []
     for p in preds:
         conjuncts.extend(_flatten_conjuncts(p))
-    two_sided: List[Tuple[str, float, float]] = []
-    strict: List[Tuple[str, float]] = []
+    two_sided: List[Tuple[str, object, object]] = []
+    strict: List[Tuple[str, object]] = []
     for c in conjuncts:
         if isinstance(c, Between) and isinstance(c.arg, Col):
-            two_sided.append((c.arg.name, float(c.lo), float(c.hi)))
+            two_sided.append((c.arg.name, c.lo, c.hi))
         elif isinstance(c, Cmp) and isinstance(c.left, Col) and not c.right.columns():
-            v = float(eval_expr(c.right, {}))
+            v = c.right
             if c.op == "<":
                 strict.append((c.left.name, v))
             elif c.op == "<=":
@@ -432,6 +469,17 @@ def _match_q6_bounds(preds: List[Expr]) -> Optional[Tuple[Tuple[str, str, str], 
     (f1, lo1, hi1), (f2, lo2, hi2) = two_sided
     f3, c3 = strict[0]
     return (f1, f2, f3), (lo1, hi1, lo2, hi2, c3)
+
+
+def _bounds_vector(slots: tuple, params) -> jnp.ndarray:
+    """Materialize the 5 kernel bound slots as a (5,) runtime f32 vector."""
+    vals = []
+    for s in slots:
+        if isinstance(s, Expr):
+            vals.append(jnp.asarray(eval_expr(s, {}, params), jnp.float32))
+        else:
+            vals.append(jnp.float32(s))
+    return jnp.stack(vals)
 
 
 def _match_channels(exprs: Sequence[Optional[Expr]], *, products: bool):
@@ -467,13 +515,21 @@ class _CompiledBase:
     methods: Dict[str, str]
     route: str
 
-    def _runtime_args(self, runtimes: Dict[str, ScanRuntime]) -> dict:
+    def _shared_args(self) -> dict:
+        """Per-table inputs that do not vary across a batch: column data,
+        validity, block ids (the catalog side of the runtime dict)."""
         rt = {"cols": {}, "valid": {}, "bid": {}, "ids": {}, "nreal": {}, "mask": {}}
         for name in self.needed:
             tab = self.catalog[name]
             rt["cols"][name] = {c: tab.columns[c] for c in self.needed[name]}
             rt["valid"][name] = tab.valid
             rt["bid"][name] = tab.block_id
+        return rt
+
+    def _runtime_args(self, runtimes: Dict[str, ScanRuntime],
+                      params=()) -> dict:
+        rt = self._shared_args()
+        for name in self.needed:
             r = runtimes.get(name)
             method = self.methods.get(name, "none")
             if method == "block":
@@ -481,10 +537,11 @@ class _CompiledBase:
                 rt["nreal"][name] = jnp.asarray(r.n_real, jnp.int32)
             elif method == "row":
                 rt["mask"][name] = jnp.asarray(r.keep_mask)
+        rt["params"] = jnp.asarray(np.asarray(params, np.float32))
         return rt
 
-    def __call__(self, runtimes: Dict[str, ScanRuntime]):
-        return self.fn(self._runtime_args(runtimes))
+    def __call__(self, runtimes: Dict[str, ScanRuntime], params=()):
+        return self.fn(self._runtime_args(runtimes, params))
 
     def scanned_bytes(self, runtimes: Dict[str, ScanRuntime]) -> int:
         """Total scan cost of one run (see :func:`scan_cost_bytes`)."""
@@ -508,6 +565,43 @@ class CompiledPilot(_CompiledBase):
                   pair (n_phys, n_right, num_channels) or None)."""
 
     has_pair: bool = False
+
+
+@dataclasses.dataclass
+class CompiledBatch(_CompiledBase):
+    """A drain-group batch executable: ``lax.map`` over B same-signature
+    members inside ONE jitted dispatch.
+
+    Member lanes differ only in their sampled block ids / row masks and
+    their hoisted-constant params row; the per-lane computation is the
+    member's solo XLA graph, so lane k of the batch is bit-identical to
+    running member k alone.  ``call_batch`` stacks the member runtimes
+    (block-id matrix, nreal vector, params matrix) and returns
+    (sums (B, num_channels, max_groups), counts (B, max_groups)).
+    """
+
+    batch: int = 0
+
+    def call_batch(self, runtimes_list: Sequence[Dict[str, ScanRuntime]],
+                   params_list: Sequence[np.ndarray]):
+        if len(runtimes_list) != self.batch or len(params_list) != self.batch:
+            raise ValueError(
+                f"batch executable compiled for {self.batch} members, "
+                f"got {len(runtimes_list)}")
+        rt = self._shared_args()
+        for name in self.needed:
+            method = self.methods.get(name, "none")
+            if method == "block":
+                rt["ids"][name] = jnp.stack(
+                    [jnp.asarray(r[name].ids, jnp.int32) for r in runtimes_list])
+                rt["nreal"][name] = jnp.asarray(
+                    [r[name].n_real for r in runtimes_list], jnp.int32)
+            elif method == "row":
+                rt["mask"][name] = jnp.stack(
+                    [jnp.asarray(r[name].keep_mask) for r in runtimes_list])
+        rt["params"] = jnp.asarray(
+            np.asarray(params_list, np.float32).reshape(self.batch, -1))
+        return self.fn(rt)
 
 
 @dataclasses.dataclass
@@ -588,39 +682,99 @@ class PhysicalCompiler:
         return entry
 
     # -- final / plain queries ----------------------------------------------
+    def query_signature(self, plan: L.Aggregate,
+                        runtimes: Dict[str, ScanRuntime]) -> tuple:
+        """The solo compile key of ``plan`` (constants hoisted) — also the
+        bucketing key of the drain-group batch path: members agreeing on it
+        share one executable and may share one batched dispatch."""
+        needed = _needed_by_table(plan, self.catalog)
+        return ("query", self._use_pallas(),
+                plan_signature(plan, runtimes, self._geometry_sig(plan, needed)))
+
     def compile_query(self, plan: L.Aggregate,
                       runtimes: Dict[str, ScanRuntime]) -> CompiledQuery:
         needed = _needed_by_table(plan, self.catalog)
         key = ("query", self._use_pallas(),
                plan_signature(plan, runtimes, self._geometry_sig(plan, needed)))
-        return self._lookup(key, lambda: self._build_query(plan, runtimes, needed))
+        return self._lookup(key, lambda: self._build_query(
+            plan_template(plan), runtimes, needed))
 
-    def _build_query(self, plan, runtimes, needed) -> CompiledQuery:
+    def _query_run_fn(self, template, runtimes, needed, allow_kernel=True):
+        """The per-member XLA lowering of a (template) query plan: either a
+        whole-query Pallas kernel route or the traced gather pipeline.
+        Returns (run, route); ``run(rt)`` expects ``rt["params"]``."""
         methods = {t: r.method for t, r in runtimes.items()}
-        exprs = tuple(None if a.op == "count" else a.expr for a in plan.aggs)
-        mg = plan.max_groups
+        exprs = tuple(None if a.op == "count" else a.expr for a in template.aggs)
+        mg = template.max_groups
 
-        kernel = self._match_query_kernel(plan, runtimes, exprs) if self._use_pallas() else None
+        kernel = (self._match_query_kernel(template, runtimes, exprs)
+                  if allow_kernel and self._use_pallas() else None)
         if kernel is not None:
-            return CompiledQuery(fn=jax.jit(kernel[0]), catalog=self.catalog,
-                                 needed=needed, methods=methods, route=kernel[1])
+            return kernel
 
         tracer = _Tracer(self.catalog, needed, methods)
 
         def run(rt):
-            tt = tracer.trace(plan.child, rt)
+            tt = tracer.trace(template.child, rt)
             rows = tt.valid.shape[0]
-            if plan.group_by is None:
+            if template.group_by is None:
                 gid = jnp.zeros(rows, jnp.int32)
             else:
-                gid = jnp.clip(tt.columns[plan.group_by].astype(jnp.int32), 0, mg - 1)
-            vals = channel_matrix(tt.columns, tt.valid, exprs)
+                gid = jnp.clip(tt.columns[template.group_by].astype(jnp.int32),
+                               0, mg - 1)
+            vals = channel_matrix(tt.columns, tt.valid, exprs, rt["params"])
             sums = jnp.zeros((len(exprs), mg), jnp.float32).at[:, gid].add(vals)
             counts = jnp.zeros(mg, jnp.float32).at[gid].add(tt.valid.astype(jnp.float32))
             return sums, counts
 
+        return run, "xla_gather"
+
+    def _build_query(self, template, runtimes, needed) -> CompiledQuery:
+        methods = {t: r.method for t, r in runtimes.items()}
+        run, route = self._query_run_fn(template, runtimes, needed)
         return CompiledQuery(fn=jax.jit(run), catalog=self.catalog, needed=needed,
-                             methods=methods, route="xla_gather")
+                             methods=methods, route=route)
+
+    # -- batched drain-group queries -----------------------------------------
+    def compile_batched_query(self, plan: L.Aggregate,
+                              runtimes: Dict[str, ScanRuntime],
+                              batch: int) -> CompiledBatch:
+        """One executable running ``batch`` same-signature members per
+        dispatch.  Only the XLA route is batched: the Pallas kernel routes
+        own their grids, and off-TPU (where batching matters most — per-call
+        dispatch overhead) ``auto`` lowers to XLA anyway.  Callers bucket
+        ``batch`` (powers of two) so compile misses stay O(log N)."""
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        needed = _needed_by_table(plan, self.catalog)
+        key = ("batched", batch,
+               plan_signature(plan, runtimes, self._geometry_sig(plan, needed)))
+        return self._lookup(key, lambda: self._build_batched(
+            plan_template(plan), runtimes, needed, batch))
+
+    def _build_batched(self, template, runtimes, needed, batch) -> CompiledBatch:
+        methods = {t: r.method for t, r in runtimes.items()}
+        # lax.map over a Pallas grid is not a supported lowering; the batch
+        # path always maps the member's XLA graph.
+        run, _ = self._query_run_fn(template, runtimes, needed,
+                                    allow_kernel=False)
+
+        def run_batched(rt):
+            member = {"ids": rt["ids"], "nreal": rt["nreal"],
+                      "mask": rt["mask"], "params": rt["params"]}
+            shared = {"cols": rt["cols"], "valid": rt["valid"], "bid": rt["bid"]}
+
+            def one(m):
+                return run({**shared, **m})
+
+            # lax.map, not vmap: each lane executes the member's own solo
+            # graph sequentially inside ONE dispatch, so lane outputs are
+            # bit-identical to solo runs (same f32 reduction order).
+            return jax.lax.map(one, member)
+
+        return CompiledBatch(fn=jax.jit(run_batched), catalog=self.catalog,
+                             needed=needed, methods=methods,
+                             route="xla_batched", batch=batch)
 
     def _match_query_kernel(self, plan, runtimes, exprs):
         """Whole-query kernel route: one block-sampled table, no groups.
@@ -657,7 +811,8 @@ class PhysicalCompiler:
                plan_signature(plan, {pilot_table: runtime},
                               self._geometry_sig(plan, needed)))
         return self._lookup(key, lambda: self._build_pilot(
-            plan, pilot_table, runtime.n_phys, pair_table, needed))
+            plan_template(plan), pilot_table, runtime.n_phys, pair_table,
+            needed))
 
     def _build_pilot(self, plan, pilot_table, n_phys, pair_table, needed) -> CompiledPilot:
         methods = {pilot_table: "block"}
@@ -699,7 +854,7 @@ class PhysicalCompiler:
                 gid = jnp.zeros(rows, jnp.int32)
             else:
                 gid = jnp.clip(tt.columns[plan.group_by].astype(jnp.int32), 0, mg - 1)
-            vals = channel_matrix(tt.columns, tt.valid, exprs)
+            vals = channel_matrix(tt.columns, tt.valid, exprs, rt["params"])
             seg = tt.pblock * mg + gid
             dense = jnp.zeros((len(exprs), (n_phys + 1) * mg),
                               jnp.float32).at[:, seg].add(vals)
@@ -727,8 +882,9 @@ class PhysicalCompiler:
         Returns (stats_fn, route) where ``stats_fn(rt)`` yields
         ``(channel_sums (n_phys, n_ch), counts (n_phys,))`` with padding rows
         (beyond n_real) zeroed, or None when the shape doesn't fit a kernel.
-        The sampled block ids reach the kernels via scalar prefetch — the
-        unsampled slabs never move.
+        The sampled block ids reach the kernels via scalar prefetch — and so
+        do the predicate bounds, resolved from ``rt["params"]`` at trace
+        time, so constant-varied queries share this one kernel compilation.
         """
         tab = self.catalog[table]
         br = tab.block_rows
@@ -737,7 +893,7 @@ class PhysicalCompiler:
             specs = _match_channels(exprs, products=True)
             if q6 is None or specs is None:
                 return None
-            (f1, f2, f3), bounds = q6
+            (f1, f2, f3), slots = q6
 
             def stats_fn(rt):
                 cols = rt["cols"][table]
@@ -745,6 +901,7 @@ class PhysicalCompiler:
                 ids = rt["ids"][table]
                 nreal = rt["nreal"][table]
                 n_phys = ids.shape[0]
+                bounds = _bounds_vector(slots, rt["params"])
                 ones = jnp.ones(tab.padded_rows, jnp.float32)
                 outs = {}
                 for spec in specs:

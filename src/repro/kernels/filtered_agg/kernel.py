@@ -9,8 +9,11 @@ predicate evaluates in VREGs, and only 8 lanes per block are stored.  This is
 the paper's "data scanning is the latency bottleneck" (§1) case: fusing the
 filter avoids materializing a mask column and a second pass.
 
-Predicate bounds are compile-time constants (queries are compiled per plan,
-as a DBMS compiles parametrized scans).
+Predicate bounds are *runtime scalars* riding the same scalar-prefetch path
+as the sampled block ids (SMEM, available before the grid body runs).  One
+compiled kernel therefore serves every constant variant of the shape — the
+serve-layer case of a dashboard sweeping its date range — instead of
+recompiling per constant set as the earlier static-bounds lowering did.
 """
 
 from __future__ import annotations
@@ -23,44 +26,48 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 STATS = 8  # count, sum(x*y), sum((x*y)^2), pad...
+BOUNDS = 5  # lo1, hi1, lo2, hi2, c3
 
 
-def _make_kernel(lo1, hi1, lo2, hi2, c3):
-    def kernel(ids_ref, x_ref, y_ref, f1_ref, f2_ref, f3_ref, valid_ref, out_ref):
-        x = x_ref[0, :].astype(jnp.float32)
-        y = y_ref[0, :].astype(jnp.float32)
-        f1 = f1_ref[0, :].astype(jnp.float32)
-        f2 = f2_ref[0, :].astype(jnp.float32)
-        f3 = f3_ref[0, :].astype(jnp.float32)
-        m = valid_ref[0, :].astype(jnp.float32)
-        keep = ((f1 >= lo1) & (f1 <= hi1) & (f2 >= lo2) & (f2 <= hi2)
-                & (f3 < c3)).astype(jnp.float32) * m
-        prod = x * y
-        cnt = jnp.sum(keep)
-        s = jnp.sum(prod * keep)
-        ss = jnp.sum(prod * prod * keep)
-        zero = jnp.float32(0.0)
-        out_ref[0, :] = jnp.stack([cnt, s, ss, zero, zero, zero, zero, zero])
-
-    return kernel
+def _kernel(ids_ref, bounds_ref, x_ref, y_ref, f1_ref, f2_ref, f3_ref,
+            valid_ref, out_ref):
+    lo1 = bounds_ref[0]
+    hi1 = bounds_ref[1]
+    lo2 = bounds_ref[2]
+    hi2 = bounds_ref[3]
+    c3 = bounds_ref[4]
+    x = x_ref[0, :].astype(jnp.float32)
+    y = y_ref[0, :].astype(jnp.float32)
+    f1 = f1_ref[0, :].astype(jnp.float32)
+    f2 = f2_ref[0, :].astype(jnp.float32)
+    f3 = f3_ref[0, :].astype(jnp.float32)
+    m = valid_ref[0, :].astype(jnp.float32)
+    keep = ((f1 >= lo1) & (f1 <= hi1) & (f2 >= lo2) & (f2 <= hi2)
+            & (f3 < c3)).astype(jnp.float32) * m
+    prod = x * y
+    cnt = jnp.sum(keep)
+    s = jnp.sum(prod * keep)
+    ss = jnp.sum(prod * prod * keep)
+    zero = jnp.float32(0.0)
+    out_ref[0, :] = jnp.stack([cnt, s, ss, zero, zero, zero, zero, zero])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_rows", "bounds", "interpret"))
-def filtered_agg_kernel(x, y, f1, f2, f3, valid, ids, *, block_rows: int,
-                        bounds: tuple, interpret: bool = False) -> jax.Array:
+    static_argnames=("block_rows", "interpret"))
+def filtered_agg_kernel(x, y, f1, f2, f3, valid, ids, bounds, *,
+                        block_rows: int, interpret: bool = False) -> jax.Array:
     n_sampled = ids.shape[0]
-    col_spec = pl.BlockSpec((1, block_rows), lambda i, ids: (ids[i], 0))
+    col_spec = pl.BlockSpec((1, block_rows), lambda i, ids, bounds: (ids[i], 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,  # sampled block ids + predicate bounds
         grid=(n_sampled,),
         in_specs=[col_spec] * 6,
-        out_specs=pl.BlockSpec((1, STATS), lambda i, ids: (i, 0)),
+        out_specs=pl.BlockSpec((1, STATS), lambda i, ids, bounds: (i, 0)),
     )
     return pl.pallas_call(
-        _make_kernel(*[float(b) for b in bounds]),  # static Python floats
+        _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_sampled, STATS), jnp.float32),
         interpret=interpret,
-    )(ids, x, y, f1, f2, f3, valid)
+    )(ids, jnp.asarray(bounds, jnp.float32), x, y, f1, f2, f3, valid)

@@ -25,8 +25,11 @@ def filtered_agg(x, y, f1, f2, f3, valid, block_rows: int, ids: np.ndarray,
                  use_ref: bool = False) -> jax.Array:
     """Fused Q6 scan over sampled blocks of 1-D columns.
 
-    bounds = (lo1, hi1, lo2, hi2, c3); returns (n_sampled, 3) cnt/sum/sumsq.
-    Rows failing the predicate are excluded; padding rows are invalid.
+    bounds = (lo1, hi1, lo2, hi2, c3) — a tuple or a (5,) device array;
+    either way it reaches the kernel as a *runtime* scalar operand (scalar
+    prefetch), so constant-varied calls share one compiled kernel.  Returns
+    (n_sampled, 3) cnt/sum/sumsq.  Rows failing the predicate are excluded;
+    padding rows are invalid.
     """
     n_blocks = x.shape[0] // block_rows
     pad = (-block_rows) % LANE
@@ -37,9 +40,10 @@ def filtered_agg(x, y, f1, f2, f3, valid, block_rows: int, ids: np.ndarray,
 
     cols = [prep(c) for c in (x, y, f1, f2, f3, valid)]
     ids = jnp.asarray(ids, dtype=jnp.int32)
+    bounds = jnp.asarray(bounds, jnp.float32)
     if use_ref:
-        return filtered_agg_ref(*cols[:5], cols[5], ids, bounds=tuple(bounds))
-    out = filtered_agg_kernel(*cols, ids, block_rows=block_rows + pad,
-                              bounds=tuple(float(b) for b in bounds),
+        return filtered_agg_ref(*cols[:5], cols[5], ids, bounds=bounds)
+    out = filtered_agg_kernel(*cols, ids, bounds,
+                              block_rows=block_rows + pad,
                               interpret=_auto_interpret(interpret))
     return out[:, :3]

@@ -6,8 +6,11 @@ import jax.numpy as jnp
 
 
 def filtered_agg_ref(x, y, f1, f2, f3, valid, ids, *, bounds):
-    """All columns (num_blocks, block_rows); returns (n, 3): cnt, sum, sumsq."""
-    lo1, hi1, lo2, hi2, c3 = [jnp.float32(b) for b in bounds]
+    """All columns (num_blocks, block_rows); returns (n, 3): cnt, sum, sumsq.
+
+    ``bounds`` may be a tuple of floats or a (5,) runtime array."""
+    b = jnp.asarray(bounds, jnp.float32)
+    lo1, hi1, lo2, hi2, c3 = b[0], b[1], b[2], b[3], b[4]
     xs, ys = x[ids], y[ids]
     keep = ((f1[ids] >= lo1) & (f1[ids] <= hi1)
             & (f2[ids] >= lo2) & (f2[ids] <= hi2)

@@ -4,12 +4,14 @@
 # a session-level LRU of finished answers.  The synchronous scheduler drain
 # is the degenerate case (workers=0, sharing off, cache size 0).
 from repro.runtime.pool import AsyncRuntime, BackpressureError
-from repro.runtime.result_cache import ResultCache, ResultCacheInfo
+from repro.runtime.result_cache import (CachedAnswer, ResultCache,
+                                        ResultCacheInfo)
 from repro.runtime.shared_pilot import execute_group, subgroup_by_pilot
 
 __all__ = [
     "AsyncRuntime",
     "BackpressureError",
+    "CachedAnswer",
     "ResultCache",
     "ResultCacheInfo",
     "execute_group",

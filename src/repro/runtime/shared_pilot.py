@@ -1,20 +1,31 @@
-"""One pilot, many finals: group execution with shared pilot statistics.
+"""One pilot, many finals: group execution with shared pilot statistics and
+batched final launches.
 
-A drain group holds queries with equal structural signatures (sampling-
-stripped plan, predicate constants included).  Within such a group, the
-pilot stage — scan theta_p of the pilot table, per-block statistics — is
-identical for every member whose ErrorSpec agrees on the *pilot-stage*
-tunables (:func:`repro.core.taqa.pilot_params`); error/confidence targets
-only enter at stage 2.  So the group runs ONE pilot and fans its block
-statistics out: each member solves its own sampling-plan optimization from
-its own ErrorSpec and draws its own final sample from its own seed.
+A drain group holds queries with equal *template* signatures (sampling- and
+constant-stripped plan — the compile-cache grouping key).  Within it, pilot
+work re-splits on the FULL constant-bearing structural signature plus the
+pilot-stage tunables (:func:`repro.core.taqa.pilot_params`): pilot block
+statistics depend on predicate selectivity, so two queries differing in a
+WHERE constant must never share a pilot — sharing across constants would
+silently break the §4 error guarantees.  Members agreeing on both run ONE
+pilot and fan its block statistics out: each solves its own sampling-plan
+optimization from its own ErrorSpec and draws its own final sample from its
+own seed.
+
+Batched finals.  Stage 2 is split into planning (``PilotDB.prepare_final``)
+and execution: every subgroup first plans its members' finals, then the
+whole drain group's pending final scans run through
+``PilotDB.run_finals_batched`` — same-signature buckets stack their block-id
+matrices and hoisted-constant params rows into ONE ``lax.map`` dispatch, so
+N finals cost one launch instead of N.  Lanes execute each member's solo XLA
+graph, keeping batched answers bit-identical to solo runs.
 
 Bit-identity.  The pilot seed derives from (session seed, structural
 signature, pilot params) — not from any member's per-query seed — and the
 session uses the *same* derivation when a query runs solo.  A query answered
-from a shared pilot is therefore bit-identical to the same query run alone
-on an equal-seed session: same pilot sample, same constraints, same chosen
-plan, same final sample.
+from a shared pilot and/or a batched final is therefore bit-identical to the
+same query run alone on an equal-seed session: same pilot sample, same
+constraints, same chosen plan, same final sample, same f32 reduction order.
 
 Failure capture.  A member whose stage 2 raises fails alone; a pilot-stage
 exception fails every member that would have used that pilot (each would
@@ -24,46 +35,86 @@ worker pool relies on that.
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, List, Tuple
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
-from repro.core.taqa import pilot_params
+from repro.core.taqa import FinalStage, PilotOutcome, pilot_params
 
 if TYPE_CHECKING:  # runtime layering: session owns the runtime
     from repro.api.session import QueryHandle, Session
 
 
 def subgroup_by_pilot(handles: List["QueryHandle"]) -> List[List["QueryHandle"]]:
-    """Split a signature group into pilot-sharing subgroups.
+    """Split a drain group into pilot-sharing subgroups.
 
     Exact-mode members (no ErrorSpec) run no pilot and each form their own
-    singleton; approximate members subgroup by pilot params, keeping
-    submission order within and across subgroups (first-arrival order).
+    singleton; approximate members subgroup by (full constant-bearing
+    signature, pilot params) — the template-grouped scheduler may put
+    constant-varied queries in one drain group, and those must NOT share
+    pilot statistics.  Submission order is kept within and across subgroups
+    (first-arrival order).
     """
     subgroups: Dict[Tuple, List["QueryHandle"]] = {}
     for h in handles:
         key = ("exact", h.query_id) if h.spec is None \
-            else ("pilot",) + pilot_params(h.spec)
+            else ("pilot", h.signature) + pilot_params(h.spec)
         subgroups.setdefault(key, []).append(h)
     return list(subgroups.values())
 
 
+@dataclasses.dataclass
+class _Pending:
+    """One group member between stage-2 planning and completion."""
+
+    handle: "QueryHandle"
+    gen: tuple                              # table-generation snapshot
+    outcome: PilotOutcome
+    stage: Optional[FinalStage] = None      # None: deferred duplicate
+    failed: Optional[str] = None
+
+
 def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
-    """Run one signature group: cached members answer immediately, each
-    pilot-sharing subgroup runs one pilot, members finish independently."""
+    """Run one drain group: cached members answer immediately, each
+    pilot-sharing subgroup runs one pilot, pending finals batch into
+    per-bucket single dispatches, members complete independently in
+    submission order."""
+    subgroups: List[List[_Pending]] = []
     for members in subgroup_by_pilot(handles):
         live = [h for h in members
                 if not h.done and not session._serve_cached(h)]
         if not live:
             continue
-        if (live[0].spec is None or len(live) == 1
-                or not session.config.share_pilots):
+        if live[0].spec is None or not session.config.share_pilots:
+            # exact members, or sharing disabled: the legacy solo path
+            # (its own pilot, its own final dispatch)
             for h in live:
                 session._run_handle(h)
             continue
-        _run_shared(session, live)
+        pend = _pilot_and_prepare(session, live)
+        if pend:
+            subgroups.append(pend)
+
+    # one batched launch per same-signature bucket across the WHOLE group
+    if session.config.batch_finals:
+        stages = [p.stage for sp in subgroups for p in sp
+                  if p.stage is not None and p.failed is None
+                  and p.stage.answer is None]
+        if len(stages) >= 2:
+            try:
+                session.db.run_finals_batched(stages)
+            except Exception:
+                # batching is an optimization, never a failure mode: stages
+                # left unanswered execute solo in the completion loop below
+                # (run_final), under its per-member exception capture
+                pass
+
+    for pend in subgroups:
+        _complete_subgroup(session, pend)
 
 
-def _run_shared(session: "Session", live: List["QueryHandle"]) -> None:
+def _pilot_and_prepare(session: "Session",
+                       live: List["QueryHandle"]) -> List[_Pending]:
+    """Run the subgroup's one pilot stage and plan every member's final."""
     leader = live[0]
     pilot_seed = session._pilot_seed_for(leader)
     gen = session._scan_generations(leader.query)
@@ -75,27 +126,57 @@ def _run_shared(session: "Session", live: List["QueryHandle"]) -> None:
         # every member's solo pilot would have raised identically
         for h in live:
             h._mark_failed(f"{type(e).__name__}: {e}")
-        return
-    # the first member actually COMPUTED (not cache-served) owns the pilot
-    # stage in its report (pilot_shared=False) — drain stats count pilot
-    # stages by that flag, so it must land on a computed answer
-    owns_pilot = True
+        return []
+    pend: List[_Pending] = []
+    seen_keys = set()
     for h in live:
-        # an earlier member's completion may have populated the result
-        # cache with this member's exact (query, spec, seed) answer — the
-        # within-batch herd case — so re-check before paying a final stage
+        # an earlier drain's completion may have populated the result cache
+        # with this member's exact (query, spec, seed) answer
+        if session._serve_cached(h):
+            continue
+        p = _Pending(handle=h, gen=gen, outcome=outcome)
+        key = session._cache_key(h)
+        if session.result_cache.enabled and key in seen_keys:
+            # identical re-issue inside one drain: the earlier member's
+            # completion will cache the answer — defer instead of paying a
+            # duplicate final execution
+            pend.append(p)
+            continue
+        seen_keys.add(key)
+        try:
+            p.stage = session.db.prepare_final(h.query, h.spec, outcome,
+                                               seed=h.seed)
+        except Exception as e:  # a member failing alone must not sink peers
+            p.failed = f"{type(e).__name__}: {e}"
+        pend.append(p)
+    return pend
+
+
+def _complete_subgroup(session: "Session", pend: List[_Pending]) -> None:
+    # the first member that actually COMPUTES (not cache-serves) a completed
+    # answer owns the pilot stage in its report (pilot_shared=False) — drain
+    # stats count pilot stages by that flag
+    owns_pilot = True
+    for p in pend:
+        h = p.handle
+        if p.failed is not None:
+            h._mark_failed(p.failed)
+            continue
+        # a peer's completion above may have cached this member's answer
         if session._serve_cached(h):
             continue
         try:
-            ans = session.db.finish_from_pilot(h.query, h.spec, outcome,
-                                               seed=h.seed,
-                                               shared=not owns_pilot)
+            if p.stage is None:  # deferred duplicate whose peer failed
+                p.stage = session.db.prepare_final(h.query, h.spec,
+                                                   p.outcome, seed=h.seed)
+            ans = session.db.run_final(p.stage)
+            ans.report.pilot_shared = not owns_pilot
             # ownership sticks only to a COMPLETED answer: if completion
             # fails (mid-flight table replacement), the next member carries
             # the non-shared report so drain stats still see the stage.
             # (If every member fails, the stage shows only in
             # executor.pilots_run — drain stats count completed answers.)
-            if session._complete_handle(h, ans, gen):
+            if session._complete_handle(h, ans, p.gen):
                 owns_pilot = False
         except Exception as e:  # a member failing alone must not sink peers
             h._mark_failed(f"{type(e).__name__}: {e}")

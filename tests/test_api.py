@@ -205,12 +205,37 @@ def test_string_literal_rejections(catalog):
     with pytest.raises(UnsupportedSqlError, match="not in the dictionary"):
         session.sql("SELECT COUNT(*) AS n FROM lineitem "
                     "WHERE l_returnflag = 'Z'")
-    with pytest.raises(UnsupportedSqlError, match="= and !="):
+    # order comparisons need a SORTED dictionary (code order == lex order);
+    # an unsorted registration keeps the historical rejection
+    session.register_dictionary("l_linestatus", ("O", "F"))
+    with pytest.raises(UnsupportedSqlError, match="not lexicographically"):
         session.sql("SELECT COUNT(*) AS n FROM lineitem "
-                    "WHERE l_returnflag < 'N'")
+                    "WHERE l_linestatus < 'O'")
     with pytest.raises(UnsupportedSqlError, match="column"):
         session.sql("SELECT COUNT(*) AS n FROM lineitem "
                     "WHERE l_returnflag + 1 = 'A'")
+
+
+def test_sorted_dictionary_order_comparisons(catalog):
+    """A sorted dictionary lowers string ORDER comparisons to code-boundary
+    comparisons — including literals outside the dictionary — and matches
+    the integer-coded spelling exactly."""
+    session = Session(dict(catalog), seed=0)
+    session.register_dictionary("l_returnflag", ("A", "N", "R"))  # sorted
+    count = lambda pred: session.sql(
+        f"SELECT COUNT(*) AS n FROM lineitem WHERE {pred}").scalar("n")
+    # col < 'N'  <=>  code < 1;  col <= 'N'  <=>  code < 2
+    assert count("l_returnflag < 'N'") == count("l_returnflag < 1") > 0
+    assert count("l_returnflag <= 'N'") == count("l_returnflag < 2")
+    assert count("l_returnflag > 'A'") == count("l_returnflag >= 1")
+    assert count("l_returnflag >= 'R'") == count("l_returnflag >= 2")
+    # literal on the left mirrors the comparison:  'N' > col  <=>  col < 'N'
+    assert count("'N' > l_returnflag") == count("l_returnflag < 'N'")
+    # literals OUTSIDE the dictionary still order correctly via bisection
+    assert count("l_returnflag < 'B'") == count("l_returnflag < 1")  # only 'A'
+    assert count("l_returnflag < 'Z'") == count("l_returnflag < 3")  # all
+    assert count("l_returnflag > 'Z'") == 0
+    session.close()
 
 
 def test_nested_filters_render_one_canonical_where():

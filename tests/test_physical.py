@@ -171,14 +171,23 @@ def test_compile_cache_hits_on_repeated_plan(catalog):
     assert info2.hits == info1.hits + 1
 
 
-def test_plan_signature_strips_rates_and_seeds():
+def test_plan_signature_strips_rates_seeds_and_constants():
     p1 = L.rewrite_scans(_plan(), {"lineitem": L.SampleClause("block", 0.1, 0)})
     p2 = L.rewrite_scans(_plan(), {"lineitem": L.SampleClause("block", 0.7, 42)})
     rt = {"lineitem": ScanRuntime("block", 10, 64, np.zeros(64, np.int32))}
     assert plan_signature(p1, rt) == plan_signature(p2, rt)
-    # but predicate constants are part of the key (kernel bounds are static)
-    p3 = _plan(SELECTIVITY_PREDS["50%"])
-    assert plan_signature(p3, rt) != plan_signature(_plan(), rt)
+    # predicate constants are hoisted out of the key too: they enter
+    # executables as the runtime params operand, so constant variants of one
+    # shape share one compilation
+    assert plan_signature(_plan(SELECTIVITY_PREDS["50%"]), rt) == \
+        plan_signature(_plan(SELECTIVITY_PREDS["100%"]), rt)
+    # ...while structural differences (Filter present vs absent) still key apart
+    assert plan_signature(_plan(SELECTIVITY_PREDS["50%"]), rt) != \
+        plan_signature(_plan(), rt)
+    # the hoisted constants come back position-aligned with the template
+    from repro.engine.physical import plan_constants
+    assert plan_constants(_plan(SELECTIVITY_PREDS["50%"])).tolist() != \
+        plan_constants(_plan(SELECTIVITY_PREDS["100%"])).tolist()
 
 
 # -- empty-sample surfacing ----------------------------------------------------

@@ -23,7 +23,9 @@ HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
 # the synchronous-cooperative baseline: no pool, no sharing, no cache
 SERIAL_CFG = SessionConfig(async_workers=0, share_pilots=False,
                            result_cache_size=0)
-NOCACHE_CFG = SessionConfig(result_cache_size=0)  # runtime on, cache off
+# runtime on, cache off; workers pinned (async_workers=None auto-sizes to 0
+# on <= 2-core hosts, and these tests exercise real async mechanics)
+NOCACHE_CFG = SessionConfig(async_workers=4, result_cache_size=0)
 
 
 @pytest.fixture(scope="module")
@@ -174,14 +176,14 @@ def test_member_failure_mid_group_captured_alone(catalog, monkeypatch):
             "WHERE l_shipdate < 2000 ")
     sqls = [base + f"ERROR {e}% CONFIDENCE 95%" for e in (8, 7, 6)]
     session = Session(catalog, seed=5, config=NOCACHE_CFG)
-    real = PilotDB.finish_from_pilot
+    real = PilotDB.prepare_final
 
     def flaky(self, q, spec, outcome, seed, shared=False):
         if abs(spec.error - 0.07) < 1e-12:  # the middle member only
             raise RuntimeError("worker exploded mid-group")
-        return real(self, q, spec, outcome, seed, shared)
+        return real(self, q, spec, outcome, seed, shared=shared)
 
-    monkeypatch.setattr(PilotDB, "finish_from_pilot", flaky)
+    monkeypatch.setattr(PilotDB, "prepare_final", flaky)
     handles = [session.submit(s) for s in sqls]
     done = session.drain()
     assert len(done) == 3
@@ -239,11 +241,17 @@ def test_repeated_dashboard_answers_from_cache_with_original_report(catalog):
     again = session.sql(HERD_SQL)
     assert again.cached
     assert session.executor.queries_run == q0  # no execution at all
-    # the original answer object, values AND a-priori error report
-    assert again.answer is first.answer
-    assert again.report.theta_pilot == first.report.theta_pilot
+    # the cache stores a compact record (values + report + packed bitmap),
+    # not the ApproxAnswer graph: the rebuilt answer shares the original
+    # values and the ORIGINAL a-priori error report
+    assert again.answer is not first.answer
+    assert again.answer.values is first.answer.values
+    assert again.report is first.report
+    assert np.array_equal(again.answer.group_present,
+                          first.answer.group_present)
     info = session.result_cache_info()
     assert info.hits >= 1 and info.size >= 1
+    assert info.bytes_used > 0
     session.close()
 
 
@@ -336,6 +344,60 @@ def test_result_cache_lru_eviction():
     assert info.evictions == 1 and info.size == 2
     assert cache.invalidate_table("t") == 1  # only "a" scans t
     assert cache.get("a") is None and cache.get("c") == 3
+
+
+def test_result_cache_byte_budget_evicts_lru_first():
+    from repro.core.taqa import ApproxAnswer, TaqaReport
+    from repro.runtime import CachedAnswer
+
+    def entry(n_groups):
+        ans = ApproxAnswer(names=["a"], values=np.zeros((1, n_groups)),
+                           group_present=np.ones(n_groups, bool),
+                           report=TaqaReport())
+        return CachedAnswer.from_answer(ans)
+
+    small = entry(8)
+    # budget fits two small entries but not three
+    cache = ResultCache(capacity=100, max_bytes=2 * small.nbytes() + 10)
+    cache.put("a", entry(8), ("t",))
+    cache.put("b", entry(8), ("t",))
+    assert cache.get("a") is not None     # refresh: "b" becomes LRU
+    cache.put("c", entry(8), ("t",))      # over budget: evicts "b"
+    assert cache.get("b") is None
+    assert cache.get("a") is not None and cache.get("c") is not None
+    info = cache.info()
+    assert info.evictions == 1 and info.bytes_used <= info.max_bytes
+    # an entry larger than the whole budget is never admitted
+    cache.put("huge", entry(100_000), ("t",))
+    assert cache.get("huge") is None
+
+
+def test_cached_answer_packs_group_present_bitmap():
+    from repro.core.taqa import ApproxAnswer, TaqaReport
+    from repro.runtime import CachedAnswer
+    present = np.array([True, False, True] * 30 + [False])
+    ans = ApproxAnswer(names=["x"], values=np.arange(91.0).reshape(1, 91),
+                       group_present=present, report=TaqaReport())
+    compact = CachedAnswer.from_answer(ans)
+    assert compact.present_bits.nbytes == (91 + 7) // 8  # 8 groups per byte
+    rebuilt = compact.to_answer()
+    assert np.array_equal(rebuilt.group_present, present)
+    assert rebuilt.values is compact.values
+    assert rebuilt.report is ans.report
+
+
+def test_session_result_cache_byte_budget(catalog):
+    session = Session(catalog, seed=3, config=SessionConfig(
+        result_cache_size=64, result_cache_bytes=2_000))
+    sqls = [f"SELECT COUNT(*) AS n FROM lineitem WHERE l_shipdate < {c}"
+            for c in (500, 1000, 1500, 2000)]
+    for s in sqls:
+        session.sql(s)
+    info = session.result_cache_info()
+    assert info.max_bytes == 2_000
+    assert info.bytes_used <= 2_000
+    assert info.size < len(sqls)  # the budget, not capacity, bounded it
+    session.close()
 
 
 def test_result_cache_session_capacity_and_exact_queries(catalog):
