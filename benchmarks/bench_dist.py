@@ -1,0 +1,230 @@
+"""Shard-parallel distributed execution benchmark (repro.dist).
+
+For 1/2/4-shard registrations of the fact table, measures
+
+* the raw sampled SCAN+aggregate dispatch (one dispatch per shard, merged
+  per-block statistics),
+* the PILOT stage (per-shard pilot dispatches, merged block statistics),
+* a full serving drain: a constant-varied dashboard herd (one pilot
+  subgroup per constant, fanned out concurrently on the runtime's pilot
+  pool) plus verbatim re-issues (shared pilot) and a cache re-issue —
+
+and asserts the dist layer's contracts hard (the CI smoke gate):
+
+* every answer is BIT-IDENTICAL across shard counts (sampled finals,
+  shared pilots, cached results),
+* per-shard scanned-bytes attribution sums to the single-shard total,
+* the multi-shard drain executed its pilot subgroups CONCURRENTLY:
+  pilot wall-clock < the serial sum of the per-subgroup stage times
+  (the previously-serialized per-constant pilot stages of one template
+  group).
+
+Emits the machine-readable ``BENCH_dist.json`` at the repo root.
+
+  BENCH_ROWS=200000 PYTHONPATH=src python -m benchmarks.run --only dist
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE_ROWS, catalog, csv_row, save_results
+from repro.api import Session, SessionConfig
+from repro.engine import logical as L
+from repro.engine.expr import And, Col
+
+BENCH_DIST_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_dist.json")
+
+SHARD_COUNTS = (1, 2, 4)
+HERD_K = int(os.environ.get("BENCH_DIST_HERD_K", 4))   # constant-varied pilots
+REPS = int(os.environ.get("BENCH_DIST_REPS", 3))
+
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < {cap} ERROR 5% CONFIDENCE 95%")
+EXTRA_SQLS = [
+    "SELECT COUNT(*) AS n, AVG(l_quantity) AS aq FROM lineitem "
+    "GROUP BY l_returnflag ERROR 6% CONFIDENCE 90%",
+    "SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+    "JOIN orders ON l_orderkey = o_orderkey WHERE o_orderdate < 1200 "
+    "ERROR 8% CONFIDENCE 90%",
+]
+
+
+def _workload():
+    sqls = [HERD_SQL.format(cap=24)] * 3                       # verbatim herd
+    sqls += [HERD_SQL.format(cap=18 + 2 * i) for i in range(HERD_K - 1)]
+    sqls += EXTRA_SQLS
+    return sqls
+
+
+def _scan_plan(seed, rate=0.1):
+    pred = And(Col("l_shipdate").between(100, 1500), Col("l_quantity") < 24)
+    plan = L.Aggregate(
+        child=L.Filter(L.Scan("lineitem"), pred),
+        aggs=(L.AggSpec("sum", Col("l_extendedprice") * Col("l_discount"),
+                        "rev"),
+              L.AggSpec("count", None, "cnt")))
+    return L.rewrite_scans(plan,
+                           {"lineitem": L.SampleClause("block", rate, seed)})
+
+
+def _median_time(fn, reps=REPS):
+    fn()  # warm (compiles)
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls))
+
+
+def _run_shards(tables, n_shards: int) -> dict:
+    # measurement session: result cache OFF so every measured drain really
+    # executes its pilot subgroups (the fan-out under test) and finals
+    session = Session(seed=29,
+                      config=SessionConfig(large_table_rows=100_000,
+                                           result_cache_size=0))
+    session.register_table("orders", tables["orders"])
+    session.register_table("lineitem", tables["lineitem"], shards=n_shards)
+    ex = session.executor
+
+    # raw dispatch timings: sampled scan+aggregate, and the pilot stage
+    scan_s = _median_time(lambda: ex.execute(_scan_plan(seed=41)))
+    pilot_plan = L.strip_samples(_scan_plan(0))
+    pilot_s = _median_time(
+        lambda: ex.execute_pilot(pilot_plan, "lineitem", 0.02, 43))
+    scan_res = ex.execute(_scan_plan(seed=41))
+
+    # serving drain: warm every unique query's compilations, then measure
+    for s in dict.fromkeys(_workload()):
+        session.sql(s)
+    fan = []
+    walls = []
+    for _ in range(REPS):
+        handles = [session.submit(s) for s in _workload()]
+        t0 = time.perf_counter()
+        session.drain()
+        walls.append(time.perf_counter() - t0)
+        d = session.scheduler.last_drain
+        if d.pilot_fanouts:
+            fan.append((d.pilot_fanout_wall_s, d.pilot_fanout_serial_s))
+    shard_bytes = ex.shard_scan_info()["lineitem"]
+    values = {h.query_id: np.asarray(h.result().values) for h in handles}
+    failed = sum(h.status != "done" for h in handles)
+    pilots_run = ex.pilots_run
+    session.close()
+
+    # cache-contract session (cache ON): an identical re-issue answers from
+    # the result cache, bit-identically at every shard count
+    cached_session = Session(seed=29,
+                             config=SessionConfig(large_table_rows=100_000))
+    cached_session.register_table("orders", tables["orders"])
+    cached_session.register_table("lineitem", tables["lineitem"],
+                                  shards=n_shards)
+    for s in _workload():
+        cached_session.submit(s)
+    cached_session.drain()
+    reissue = cached_session.submit(_workload()[0])
+    cached_session.drain()
+    reissue_values = np.asarray(reissue.result().values)
+    reissue_cached = reissue.cached
+    cached_session.close()
+
+    best = int(np.argmin([w for w, _ in fan])) if fan else -1
+    return {
+        "shards": n_shards,
+        "scan_dispatch_s": scan_s,
+        "pilot_dispatch_s": pilot_s,
+        "drain_wall_s": float(np.median(walls)),
+        "pilots_run": pilots_run,
+        "queries": len(handles),
+        "failed": failed,
+        "reissue_cached": reissue_cached,
+        "shard_scanned_bytes": list(shard_bytes),
+        "scan_scanned_bytes": scan_res.scanned_bytes,
+        "pilot_fanout_wall_s": fan[best][0] if fan else None,
+        "pilot_fanout_serial_s": fan[best][1] if fan else None,
+        "pilot_workers": session.config.resolve_pilot_workers(),
+        "values": values,
+        "reissue_values": reissue_values,
+    }
+
+
+def run() -> dict:
+    tables = {k: v for k, v in catalog().items() if k != "skewed"}
+    results = {n: _run_shards(tables, n) for n in SHARD_COUNTS}
+
+    # contract 1: bit-identity across shard counts, cached re-issue included
+    base = results[SHARD_COUNTS[0]]
+    identical = True
+    for n in SHARD_COUNTS[1:]:
+        for qid, v in results[n]["values"].items():
+            if not np.array_equal(v, base["values"][qid]):
+                identical = False
+        if not np.array_equal(results[n]["reissue_values"],
+                              base["reissue_values"]):
+            identical = False
+    for res in results.values():
+        res.pop("values"), res.pop("reissue_values")
+
+    # contract 2: per-shard attribution sums to the single-shard total
+    attribution_ok = all(
+        sum(results[n]["shard_scanned_bytes"])
+        == sum(base["shard_scanned_bytes"]) for n in SHARD_COUNTS)
+
+    # contract 3: the multi-shard drain fanned its pilot subgroups out
+    # concurrently — wall < serial sum of the per-subgroup stages
+    multi = results[SHARD_COUNTS[-1]]
+    fan_wall, fan_serial = (multi["pilot_fanout_wall_s"],
+                            multi["pilot_fanout_serial_s"])
+    concurrent = (fan_wall is not None and fan_serial is not None
+                  and fan_wall < fan_serial)
+
+    doc = {"bench": "dist", "rows": SCALE_ROWS, "herd_k": HERD_K,
+           "cpu_count": os.cpu_count(),
+           "bit_identical_across_shards": identical,
+           "shard_bytes_attribution_ok": attribution_ok,
+           "pilot_subgroups_concurrent": concurrent,
+           "pilot_fanout_speedup": (fan_serial / fan_wall
+                                    if concurrent else None)}
+    for n in SHARD_COUNTS:
+        doc[f"shards_{n}"] = results[n]
+
+    with open(BENCH_DIST_PATH, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# wrote {os.path.normpath(BENCH_DIST_PATH)}", file=sys.stderr)
+    save_results("dist", doc)
+
+    for n in SHARD_COUNTS:
+        res = results[n]
+        print(csv_row(
+            f"dist_{n}shard", res["scan_dispatch_s"] * 1e6,
+            f"pilot_us={res['pilot_dispatch_s'] * 1e6:.0f};"
+            f"drain_s={res['drain_wall_s']:.3f};"
+            f"pilots={res['pilots_run']}"))
+    print(csv_row(
+        "dist_pilot_fanout",
+        (fan_wall or 0.0) * 1e6,
+        f"serial_us={(fan_serial or 0.0) * 1e6:.0f};"
+        f"concurrent={concurrent}"))
+
+    assert identical, "dist answers must be bit-identical across shard counts"
+    assert attribution_ok, \
+        "per-shard scanned bytes must sum to the single-shard total"
+    assert all(res["failed"] == 0 for res in results.values())
+    assert all(res["reissue_cached"] for res in results.values())
+    if (os.cpu_count() or 1) >= 2 and multi["pilot_workers"] >= 2:
+        assert concurrent, (
+            "multi-shard drain must fan pilot subgroups out concurrently "
+            f"(wall {fan_wall}s vs serial {fan_serial}s)")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -48,12 +48,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single bench: guarantees|naive_clt|scan|"
-                         "speedup|quickr|ablation|kernels|compiled|runtime")
+                         "speedup|quickr|ablation|kernels|compiled|runtime|"
+                         "dist")
     args = ap.parse_args()
 
-    from benchmarks import (bench_ablation, bench_compiled, bench_guarantees,
-                            bench_kernels, bench_naive_clt, bench_quickr,
-                            bench_runtime, bench_scan, bench_speedup)
+    from benchmarks import (bench_ablation, bench_compiled, bench_dist,
+                            bench_guarantees, bench_kernels, bench_naive_clt,
+                            bench_quickr, bench_runtime, bench_scan,
+                            bench_speedup)
 
     benches = {
         "scan": bench_scan.run,              # Fig. 4
@@ -65,6 +67,7 @@ def main() -> None:
         "kernels": bench_kernels.run,        # kernel-layer system model
         "compiled": bench_compiled.run,      # eager vs compiled physical layer
         "runtime": bench_runtime.run,        # serving herd: async/share/cache
+        "dist": bench_dist.run,              # shard-parallel execution
     }
     todo = [args.only] if args.only else list(benches)
     print("name,us_per_call,derived")

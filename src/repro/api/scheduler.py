@@ -61,6 +61,13 @@ class DrainStats:
     result_hits: int = 0      # batch answers served from the result cache
     wall_time_s: float = 0.0
     group_sizes: List[int] = dataclasses.field(default_factory=list)
+    # pilot-subgroup fan-outs this drain (groups with >= 2 pilot
+    # subgroups): concurrent span vs the sum of the per-subgroup stage
+    # durations it overlapped — wall < serial means the previously
+    # serialized per-constant pilot stages genuinely ran concurrently
+    pilot_fanouts: int = 0
+    pilot_fanout_wall_s: float = 0.0
+    pilot_fanout_serial_s: float = 0.0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -145,6 +152,7 @@ class QueryScheduler:
             raise ValueError(f"max_queries must be >= 1, got {max_queries}")
         t0 = time.perf_counter()
         info0 = self._session.compile_cache_info()
+        fan0 = self._session.runtime.pilot_fanout_totals()
         batches = self._take_batch(max_queries)
         self._session.runtime.run_groups(batches, block=True)
         completed = [h for b in batches for h in b]
@@ -163,6 +171,10 @@ class QueryScheduler:
             1 for h in completed
             if not h.cached and h.report is not None
             and h.report.pilot_ran and not h.report.pilot_shared)
+        fan1 = self._session.runtime.pilot_fanout_totals()
+        stats.pilot_fanouts = fan1[0] - fan0[0]
+        stats.pilot_fanout_wall_s = fan1[1] - fan0[1]
+        stats.pilot_fanout_serial_s = fan1[2] - fan0[2]
         stats.wall_time_s = time.perf_counter() - t0
         self.last_drain = stats
         self.total_drained += len(completed)

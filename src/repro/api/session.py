@@ -51,9 +51,10 @@ import numpy as np
 
 from repro.api.builder import QueryBuilder
 from repro.api.scheduler import QueryScheduler
-from repro.api.sql import (UnsupportedSqlError, parse_sql,
+from repro.api.sql import (HavingClause, UnsupportedSqlError, parse_sql,
                            resolve_string_literals)
 from repro.core.spec import ErrorSpec
+from repro.dist import DistExecutor
 from repro.core.taqa import (ApproxAnswer, PilotDB, Query, TaqaReport,
                              pilot_params, structural_signature)
 from repro.engine.executor import Executor
@@ -100,6 +101,10 @@ class QueryHandle:
     spec: Optional[ErrorSpec]         # None -> exact execution was requested
     seed: int
     sql: Optional[str] = None
+    # post-aggregation HAVING filter: applied to every delivered answer
+    # (fresh or cache-served) but never part of the plan, the seed, or the
+    # cache key — the cache stores the unfiltered base answer
+    having: Optional[HavingClause] = None
     status: str = QueryStatus.PENDING
     error: Optional[str] = None
     cached: bool = False              # answered from the session result cache
@@ -211,6 +216,13 @@ class SessionConfig:
     # Rides the shared-pilot group path, so share_pilots=False also
     # disables it.
     batch_finals: bool = True
+    # Worker threads fanning a drain group's pilot SUBGROUPS out (the
+    # constant-varied herd whose N per-constant pilot stages previously ran
+    # serially on the group's one worker — see runtime/shared_pilot.py).
+    # The pilot pool is separate from the group pool, so group workers
+    # blocking on pilot futures can never deadlock it.  None auto-sizes
+    # (min(4, cores), serial on one core); 0 restores serial pilot stages.
+    pilot_workers: Optional[int] = None
     # Session result-cache capacity in answers; 0 disables caching.
     result_cache_size: int = 128
     # Optional byte budget for the result cache: entries are stored compact
@@ -234,6 +246,18 @@ class SessionConfig:
             return 0
         return min(8, cpus - 1)  # leave a core for the draining thread
 
+    def resolve_pilot_workers(self) -> int:
+        """Pilot-stage fan-out width (``pilot_workers=None`` auto-size).
+
+        Unlike the group pool, pilot stages are device-execution-heavy
+        (the scan releases the GIL), so even 2-core hosts profit from a
+        2-wide pilot pool; single-core hosts stay serial.
+        """
+        if self.pilot_workers is not None:
+            return self.pilot_workers
+        cpus = os.cpu_count() or 1
+        return 0 if cpus <= 1 else min(4, cpus)
+
 
 class Session:
     """A client session against a catalog of block tables."""
@@ -256,9 +280,11 @@ class Session:
                     "argument would be silently ignored")
             self.executor = executor
         else:
-            self.executor = Executor(catalog or {},
-                                     use_compiled=config.use_compiled,
-                                     kernel_mode=config.kernel_mode)
+            # DistExecutor behaves exactly like Executor until a table is
+            # registered with shards= (see register_table)
+            self.executor = DistExecutor(catalog or {},
+                                         use_compiled=config.use_compiled,
+                                         kernel_mode=config.kernel_mode)
         self.db = PilotDB(self.executor,
                           large_table_rows=config.large_table_rows)
         self._entropy = int(seed)
@@ -275,7 +301,8 @@ class Session:
         self._gen_lock = threading.Lock()
         self.result_cache = ResultCache(config.result_cache_size,
                                         max_bytes=config.result_cache_bytes)
-        self.runtime = AsyncRuntime(self, workers=config.resolve_workers())
+        self.runtime = AsyncRuntime(self, workers=config.resolve_workers(),
+                                    pilot_workers=config.resolve_pilot_workers())
         self.scheduler = QueryScheduler(self)
 
     def close(self) -> None:
@@ -285,8 +312,21 @@ class Session:
     # -- catalog -------------------------------------------------------------
     def register_table(self, name: str, table: BlockTable, *,
                        dictionaries: Optional[Dict[str, Sequence[str]]] = None,
+                       shards: Optional[int] = None,
                        ) -> None:
         """Add (or replace) a catalog table.
+
+        ``shards=N`` registers the table *partitioned* into N disjoint
+        block ranges (placed round-robin across JAX devices when more than
+        one is available): block-sampled scans then execute one dispatch
+        per shard, merged through per-block statistics (:mod:`repro.dist`)
+        — and answers are bit-identical for EVERY shard count, so
+        re-sharding never perturbs equal-seed replay, shared pilots, or the
+        result cache.  ``shards=None`` (default) registers monolithic.
+        Memory cost: a sharded registration keeps the monolithic arrays
+        (exact / row-sample / multi-table fallback paths run on them) AND
+        materializes every shard's slices — about 2x the table's bytes
+        resident until the plain registration is dropped.
 
         Cache-invalidation contract: registering ``name`` synchronously
         evicts (a) the cached MAXGROUPS statistics of its columns and
@@ -305,11 +345,27 @@ class Session:
         columns in WHERE clauses: ``WHERE l_returnflag = 'A'`` lowers to the
         integer code before planning.
         """
+        if shards is not None:
+            if not hasattr(self.executor, "register_sharded"):
+                raise ValueError(
+                    "shards= needs a dist-capable executor (repro.dist."
+                    "DistExecutor — the session default); the explicit "
+                    "executor passed to this session does not support "
+                    "sharding")
+            # validate BEFORE the generation bump: a rejected registration
+            # must not fail in-flight queries over unchanged data
+            if not 1 <= shards <= table.num_blocks:
+                raise ValueError(
+                    f"shards must be in [1, {table.num_blocks}] (blocks are "
+                    f"the atomic placement unit), got {shards}")
         # bump+swap under the generation lock: no snapshot can interleave
         # between the new generation and the new data (see _gen_lock above)
         with self._gen_lock:
             self._table_gen[name] = self._table_gen.get(name, 0) + 1
-            self.executor.register_table(name, table)
+            if shards is None:
+                self.executor.register_table(name, table)
+            else:
+                self.executor.register_sharded(name, table, shards)
         # replacing a table invalidates its cached statistics
         self._max_groups_cache = {k: v for k, v in
                                   self._max_groups_cache.items()
@@ -459,7 +515,8 @@ class Session:
     def _parse_to_handle(self, text: str) -> QueryHandle:
         parsed = parse_sql(text, max_groups_resolver=self.infer_max_groups,
                            spec_kwargs=self.config.spec_kwargs)
-        return self._make_handle(parsed.query, parsed.spec, sql=text)
+        return self._make_handle(parsed.query, parsed.spec, sql=text,
+                                 having=parsed.having)
 
     def _resolve_dictionary(self, column: str, literal: str) -> int:
         d = self._dictionaries.get(column)
@@ -526,18 +583,23 @@ class Session:
                 "groups would be silently merged into the last group")
 
     def _make_handle(self, query: Query, spec: Optional[ErrorSpec],
-                     sql: Optional[str] = None) -> QueryHandle:
+                     sql: Optional[str] = None,
+                     having: Optional[HavingClause] = None) -> QueryHandle:
         # resolve + validate before deriving a seed: rejected queries never
         # enter the seed/cache keyspace
         query = resolve_string_literals(query, self._resolve_dictionary,
                                         self._resolve_dictionary_order)
         self._validate_group_domain(query)
+        if having is not None and having.agg not in {c.name for c in query.aggs}:
+            raise UnsupportedSqlError(
+                f"HAVING references unknown aggregate {having.agg!r} "
+                f"(outputs: {[c.name for c in query.aggs]})")
         # one lowering: the group key is the (memoized) constant-stripped
         # template of the signature just computed, not a second lowering
         signature = structural_signature(query)
         handle = QueryHandle(query_id=self._next_id, query=query, spec=spec,
                              seed=self._derive_seed(query, spec), sql=sql,
-                             signature=signature,
+                             having=having, signature=signature,
                              group_key=plan_template(signature))
         self._next_id += 1
         return handle
@@ -571,6 +633,10 @@ class Session:
         if entry is None:
             return False
         answer = entry.to_answer() if isinstance(entry, CachedAnswer) else entry
+        if handle.having is not None:
+            # the cache holds the unfiltered base answer (HAVING is not in
+            # the key), so HAVING-varied re-issues all hit one entry
+            answer = handle.having.apply(answer)
         handle._mark_done(answer, cached=True)
         return True
 
@@ -605,6 +671,8 @@ class Session:
             (s.table for s in handle.query.child.scans()),
             guard=None if gen_snapshot is None else
             (lambda: gen_snapshot == self._scan_generations(handle.query)))
+        if handle.having is not None:  # cache keeps the unfiltered answer
+            answer = handle.having.apply(answer)
         handle._mark_done(answer)
         return True
 

@@ -61,9 +61,54 @@ class UnsupportedSqlError(ValueError):
 
 
 @dataclasses.dataclass(frozen=True)
+class HavingClause:
+    """``HAVING <agg> <cmp> <number>``: a post-aggregation filter.
+
+    The comparison references an output aggregate by its SELECT alias and
+    is applied AFTER the approximate aggregation, to the returned groups of
+    an :class:`repro.core.taqa.ApproxAnswer` (or one rebuilt from a cached
+    record): groups whose estimated value fails the comparison are cleared
+    from ``group_present``.  It never reaches the engine plan — the plan
+    signature, pilot sharing, seeds, and the result-cache key are all
+    HAVING-agnostic, so HAVING-varied re-issues of one query share the same
+    pilot, compilation, and cached base answer.
+    """
+
+    agg: str
+    op: str       # normalized: == != < <= > >=
+    value: float
+
+    def apply(self, answer):
+        """A copy of ``answer`` with failing groups cleared (the values
+        array is untouched — HAVING filters group membership, not
+        estimates).  NaN estimates (absent groups) never pass."""
+        import numpy as np
+        if self.agg not in answer.names:
+            raise UnsupportedSqlError(
+                f"HAVING references unknown aggregate {self.agg!r} "
+                f"(outputs: {answer.names})")
+        vals = np.asarray(answer.values[answer.names.index(self.agg)])
+        with np.errstate(invalid="ignore"):
+            ok = _HAVING_OPS[self.op](vals, self.value)
+        present = np.asarray(answer.group_present, dtype=bool) & ok
+        return dataclasses.replace(answer, group_present=present)
+
+
+_HAVING_OPS = {
+    "==": lambda v, c: v == c,
+    "!=": lambda v, c: v != c,
+    "<": lambda v, c: v < c,
+    "<=": lambda v, c: v <= c,
+    ">": lambda v, c: v > c,
+    ">=": lambda v, c: v >= c,
+}
+
+
+@dataclasses.dataclass(frozen=True)
 class ParsedQuery:
     query: Query
     spec: Optional[ErrorSpec]   # None: no ERROR clause -> exact execution
+    having: Optional[HavingClause] = None
 
     @property
     def is_approximate(self) -> bool:
@@ -77,7 +122,7 @@ class ParsedQuery:
 _KEYWORDS = {
     "SELECT", "FROM", "WHERE", "GROUP", "BY", "JOIN", "ON", "AS", "AND",
     "OR", "NOT", "BETWEEN", "SUM", "COUNT", "AVG", "ERROR", "CONFIDENCE",
-    "MAXGROUPS",
+    "MAXGROUPS", "HAVING",
 }
 
 _TOKEN_RE = re.compile(
@@ -374,6 +419,23 @@ class _Parser:
             if max_groups < 1:
                 raise SqlSyntaxError("MAXGROUPS must be >= 1")
 
+        having = None
+        if self.accept_kw("HAVING"):
+            name = self.expect_ident()
+            if name not in {a.name for a in aggs}:
+                raise SqlSyntaxError(
+                    f"HAVING references {name!r}, which is not a SELECT "
+                    f"output (outputs: {[a.name for a in aggs]}); HAVING "
+                    "compares an aggregate alias against a number")
+            for tok, op in _CMP_OPS.items():
+                if self.accept_op(tok):
+                    having = HavingClause(name, op, self.expect_signed_num())
+                    break
+            if having is None:
+                raise SqlSyntaxError(
+                    f"expected comparison after HAVING {name}, got "
+                    f"{self.peek()[1]!r}")
+
         spec = None
         if self.accept_kw("ERROR"):
             err = self.expect_num()
@@ -397,7 +459,7 @@ class _Parser:
             raise SqlSyntaxError(f"trailing input at {self.peek()[1]!r}")
         q = Query(child=child, aggs=tuple(aggs), group_by=group_by,
                   max_groups=max_groups)
-        return ParsedQuery(query=q, spec=spec)
+        return ParsedQuery(query=q, spec=spec, having=having)
 
 
 def parse_sql(
@@ -610,13 +672,16 @@ def _render_agg(a: CompositeAgg) -> str:
     return f"{body} AS {a.name}"
 
 
-def render_sql(query: Query, spec: Optional[ErrorSpec] = None) -> str:
+def render_sql(query: Query, spec: Optional[ErrorSpec] = None,
+               having: Optional[HavingClause] = None) -> str:
     """Render the internal representation back to dialect SQL.
 
     Only the dialect surface is expressible: a single optional Filter over a
     left-deep Join chain over plain Scans.  TABLESAMPLE clauses and Unions
     raise :class:`UnsupportedSqlError` — those are TAQA's rewriting
-    intermediates, not user queries.
+    intermediates, not user queries.  ``having`` re-emits the
+    post-aggregation :class:`HavingClause` (round-trips through
+    :func:`parse_sql`).
     """
     preds: List[Expr] = []
     node: L.Plan = query.child
@@ -656,6 +721,12 @@ def render_sql(query: Query, spec: Optional[ErrorSpec] = None) -> str:
         if query.max_groups != 1:
             clause += f" MAXGROUPS {query.max_groups}"
         parts.append(clause)
+    if having is not None:
+        if having.agg not in {a.name for a in query.aggs}:
+            raise UnsupportedSqlError(
+                f"HAVING references {having.agg!r}, not a query output")
+        parts.append(f"HAVING {having.agg} {_SQL_CMP[having.op]} "
+                     f"{_num(having.value)}")
     if spec is not None:
         parts.append(f"ERROR {_pct(spec.error)}% "
                      f"CONFIDENCE {_pct(spec.confidence)}%")

@@ -1,0 +1,20 @@
+# Partitioned tables + shard-parallel distributed execution: block-range
+# ShardedTables (device round-robin placement), restriction-based per-shard
+# Bernoulli sub-draws of the one content-derived realization, per-shard
+# dispatches merged through per-block BSAP statistics — bit-identical for
+# every shard count by construction.
+from repro.dist.executor import DistExecutor
+from repro.dist.merge import (ShardPart, merge_block_stats, merge_pilot_stats,
+                              reduce_group_totals)
+from repro.dist.shard import Shard, ShardedTable, shard_block_ids
+
+__all__ = [
+    "DistExecutor",
+    "ShardedTable",
+    "Shard",
+    "shard_block_ids",
+    "ShardPart",
+    "merge_block_stats",
+    "merge_pilot_stats",
+    "reduce_group_totals",
+]

@@ -63,6 +63,21 @@ def draw_block_ids(num_blocks: int, rate: float, seed: int) -> np.ndarray:
     return np.nonzero(keep)[0].astype(np.int32)
 
 
+def restrict_block_ids(ids: np.ndarray, lo: int, hi: int) -> np.ndarray:
+    """Restrict a drawn block-id set to the range ``[lo, hi)``, re-based.
+
+    This is the distributed TABLESAMPLE sub-draw (``repro.dist``): every
+    shard computes the SAME global realization from the shared
+    content-derived seed and keeps its own block range, so the union of
+    the per-shard sub-draws equals the monolithic draw bit-for-bit — a
+    property independent per-shard seeds could not provide (they would
+    yield a different realization per shard count, breaking equal-seed
+    replay).
+    """
+    ids = np.asarray(ids)
+    return (ids[(ids >= lo) & (ids < hi)] - lo).astype(np.int32)
+
+
 def pad_block_ids(ids: np.ndarray, num_blocks: int) -> tuple[np.ndarray, int, int]:
     """Zero-pad sampled ids to the bucketed physical count.
 

@@ -38,18 +38,41 @@ class BackpressureError(RuntimeError):
 
 
 class AsyncRuntime:
-    """Executes drain groups on a bounded worker pool for one session."""
+    """Executes drain groups on a bounded worker pool for one session.
 
-    def __init__(self, session: "Session", workers: int = 4):
+    Two pools, deliberately separate: the GROUP pool runs whole drain
+    groups (a group stays on one worker so its members finish from one
+    shared pilot outcome), and the PILOT pool fans a single group's
+    pilot-sharing *subgroups* out concurrently — the constant-varied herd
+    whose N per-constant pilot stages would otherwise serialize on the
+    group's one worker.  Group workers block on pilot futures; the pilot
+    pool never submits back to the group pool, so the fan-out cannot
+    deadlock however saturated either pool is (the failure mode that ruled
+    out nested submission into one shared ThreadPoolExecutor).
+    """
+
+    def __init__(self, session: "Session", workers: int = 4,
+                 pilot_workers: int = 0):
         if workers < 0:
             raise ValueError(f"workers must be >= 0, got {workers}")
+        if pilot_workers < 0:
+            raise ValueError(
+                f"pilot_workers must be >= 0, got {pilot_workers}")
         self._session = session
         self.workers = workers
+        self.pilot_workers = pilot_workers
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._pilot_pool: Optional[ThreadPoolExecutor] = None
         self._lock = threading.Lock()
         self._in_flight = 0          # handles dispatched, not yet finished
         self._futures: List[Future] = []
         self.total_groups = 0
+        # pilot fan-out accounting (scheduler drains diff these): wall is
+        # the concurrent span, serial the sum of the per-subgroup stage
+        # durations it overlapped — wall < serial is the concurrency win
+        self.pilot_fanouts = 0
+        self.pilot_fanout_wall_s = 0.0
+        self.pilot_fanout_serial_s = 0.0
 
     @property
     def is_async(self) -> bool:
@@ -69,6 +92,39 @@ class AsyncRuntime:
                     max_workers=self.workers,
                     thread_name_prefix="pilotdb-runtime")
             return self._pool
+
+    def _ensure_pilot_pool(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pilot_pool is None:
+                self._pilot_pool = ThreadPoolExecutor(
+                    max_workers=self.pilot_workers,
+                    thread_name_prefix="pilotdb-pilot")
+            return self._pilot_pool
+
+    # -- pilot-subgroup fan-out ----------------------------------------------
+    def map_pilot_subgroups(self, fn, items: list) -> list:
+        """Run ``fn`` over a drain group's pilot subgroups, concurrently on
+        the pilot pool when it exists, and return results in input order.
+
+        ``fn`` must capture per-member failures itself (shared_pilot does);
+        an escaping exception propagates to the caller exactly as it would
+        on the serial path.
+        """
+        if self.pilot_workers <= 1 or len(items) <= 1:
+            return [fn(x) for x in items]
+        pool = self._ensure_pilot_pool()
+        return [f.result() for f in [pool.submit(fn, x) for x in items]]
+
+    def record_pilot_fanout(self, wall_s: float, serial_s: float) -> None:
+        with self._lock:
+            self.pilot_fanouts += 1
+            self.pilot_fanout_wall_s += wall_s
+            self.pilot_fanout_serial_s += serial_s
+
+    def pilot_fanout_totals(self):
+        with self._lock:
+            return (self.pilot_fanouts, self.pilot_fanout_wall_s,
+                    self.pilot_fanout_serial_s)
 
     # -- execution -----------------------------------------------------------
     def run_groups(self, groups: List[List["QueryHandle"]],
@@ -108,8 +164,11 @@ class AsyncRuntime:
     def shutdown(self) -> None:
         with self._lock:
             pool, self._pool = self._pool, None
+            pilot_pool, self._pilot_pool = self._pilot_pool, None
         if pool is not None:
             pool.shutdown(wait=True)
+        if pilot_pool is not None:
+            pilot_pool.shutdown(wait=True)
 
     # -- worker side ---------------------------------------------------------
     def _worker(self, group: List["QueryHandle"]) -> None:

@@ -12,6 +12,15 @@ pilot and fan its block statistics out: each solves its own sampling-plan
 optimization from its own ErrorSpec and draws its own final sample from its
 own seed.
 
+Pilot fan-out.  A template group's pilot subgroups are mutually independent
+(one per constant/pilot-params combination), so their stage-1 pilots run
+concurrently on the runtime's dedicated pilot pool
+(:meth:`repro.runtime.AsyncRuntime.map_pilot_subgroups`) and re-join here
+before any final launches — a constant-varied herd no longer serializes its
+N pilot stages on the group's single worker.  The pool records (wall,
+serial-sum) pairs per fan-out; scheduler drains surface them as
+``DrainStats.pilot_fanout_*``.
+
 Batched finals.  Stage 2 is split into planning (``PilotDB.prepare_final``)
 and execution: every subgroup first plans its members' finals, then the
 whole drain group's pending final scans run through
@@ -36,6 +45,7 @@ worker pool relies on that.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 from repro.core.taqa import FinalStage, PilotOutcome, pilot_params
@@ -75,10 +85,11 @@ class _Pending:
 
 def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
     """Run one drain group: cached members answer immediately, each
-    pilot-sharing subgroup runs one pilot, pending finals batch into
-    per-bucket single dispatches, members complete independently in
+    pilot-sharing subgroup runs one pilot — subgroups fan out concurrently
+    on the runtime's pilot pool and re-join here — pending finals batch
+    into per-bucket single dispatches, members complete independently in
     submission order."""
-    subgroups: List[List[_Pending]] = []
+    shared: List[List["QueryHandle"]] = []
     for members in subgroup_by_pilot(handles):
         live = [h for h in members
                 if not h.done and not session._serve_cached(h)]
@@ -90,9 +101,30 @@ def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
             for h in live:
                 session._run_handle(h)
             continue
-        pend = _pilot_and_prepare(session, live)
-        if pend:
-            subgroups.append(pend)
+        shared.append(live)
+
+    # Stage-1 fan-out: a template group may hold MANY pilot subgroups (a
+    # constant-varied herd runs one pilot per constant — selectivity shapes
+    # the §4 bounds), and those stages are independent: fan them out across
+    # the pilot pool and re-join before the group-wide batched final
+    # launch.  Results come back in submission order, completions below run
+    # in submission order, and every subgroup's pilot seed is
+    # content-derived — concurrency changes wall-clock, never answers.
+    durations: List[float] = []
+
+    def _stage1(live: List["QueryHandle"]) -> List[_Pending]:
+        t0 = time.perf_counter()
+        try:
+            return _pilot_and_prepare(session, live)
+        finally:
+            durations.append(time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    pend_lists = session.runtime.map_pilot_subgroups(_stage1, shared)
+    if len(shared) >= 2:
+        session.runtime.record_pilot_fanout(
+            time.perf_counter() - t0, sum(durations))
+    subgroups = [p for p in pend_lists if p]
 
     # one batched launch per same-signature bucket across the WHOLE group
     if session.config.batch_finals:

@@ -49,6 +49,11 @@ class GatewayStats:
         total = self.compile_hits + self.compile_misses
         return self.compile_hits / total if total else 0.0
 
+    def as_dict(self) -> Dict[str, object]:
+        out = dataclasses.asdict(self)
+        out["cache_hit_rate"] = self.cache_hit_rate
+        return out
+
 
 class SqlGateway:
     def __init__(self, session: Session, *, batch_size: Optional[int] = None,
@@ -141,6 +146,45 @@ class SqlGateway:
         for qid in delivered:
             del self._tickets[qid]
         return delivered
+
+    def stats_payload(self) -> Dict[str, object]:
+        """One serving-stats payload: this gateway's request counters plus
+        the session-level caches and distribution state callers previously
+        had to assemble from session internals.
+
+        * ``gateway``       — the per-gateway :class:`GatewayStats` counters;
+        * ``compile_cache`` — :meth:`repro.engine.Executor.compile_cache_info`
+          (hits / misses / resident executables, session-global);
+        * ``result_cache``  — result-cache hit/miss/eviction AND byte
+          counters (``bytes_used`` / ``max_bytes``, session-global);
+        * ``shard_scanned_bytes`` — per-shard sampled-slab attribution per
+          partitioned table (``repro.dist``), empty when nothing is sharded.
+        """
+        compile_info = self.session.compile_cache_info()
+        result_info = self.session.result_cache_info()
+        shard_info = getattr(self.session.executor, "shard_scan_info",
+                             lambda: {})()
+        return {
+            "gateway": self.stats.as_dict(),
+            "compile_cache": {
+                "hits": compile_info.hits,
+                "misses": compile_info.misses,
+                "size": compile_info.size,
+            },
+            "result_cache": {
+                "hits": result_info.hits,
+                "misses": result_info.misses,
+                "evictions": result_info.evictions,
+                "invalidations": result_info.invalidations,
+                "size": result_info.size,
+                "capacity": result_info.capacity,
+                "bytes_used": result_info.bytes_used,
+                "max_bytes": result_info.max_bytes,
+                "hit_rate": result_info.hit_rate,
+            },
+            "shard_scanned_bytes": {t: list(v)
+                                    for t, v in shard_info.items()},
+        }
 
     def results_for(self, client_id: str) -> List[QueryHandle]:
         """This client's not-yet-delivered handles (pending or undelivered

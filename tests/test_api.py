@@ -238,6 +238,124 @@ def test_sorted_dictionary_order_comparisons(catalog):
     session.close()
 
 
+def test_sorted_dictionary_order_extremes_below_first_and_above_last(catalog):
+    """Bisection boundaries at the dictionary's edges: literals ordering
+    BELOW the first entry lower to the 0 boundary (nothing is smaller,
+    everything is >=), literals ABOVE the last entry to the N boundary
+    (everything is smaller, nothing is >) — for in- and out-of-dictionary
+    spellings alike."""
+    session = Session(dict(catalog), seed=0)
+    session.register_dictionary("l_returnflag", ("A", "N", "R"))  # sorted
+    count = lambda pred: session.sql(
+        f"SELECT COUNT(*) AS n FROM lineitem WHERE {pred}").scalar("n")
+    total = session.sql("SELECT COUNT(*) AS n FROM lineitem "
+                        "WHERE l_returnflag >= 0").scalar("n")
+    # below the first entry ('0' < 'A'): empty/full halves at boundary 0
+    assert count("l_returnflag < '0'") == 0
+    assert count("l_returnflag <= '0'") == 0
+    assert count("l_returnflag > '0'") == total
+    assert count("l_returnflag >= '0'") == total
+    # at the first entry: strict below is empty, inclusive above is full
+    assert count("l_returnflag < 'A'") == 0
+    assert count("l_returnflag >= 'A'") == total
+    # above the last entry ('Z' > 'R'): full/empty halves at boundary 3
+    assert count("l_returnflag < 'Z'") == total
+    assert count("l_returnflag <= 'Z'") == total
+    assert count("l_returnflag > 'Z'") == 0
+    assert count("l_returnflag >= 'Z'") == 0
+    # at the last entry: inclusive below is full, strict above is empty
+    assert count("l_returnflag <= 'R'") == total
+    assert count("l_returnflag > 'R'") == 0
+    session.close()
+
+
+def test_dictionary_equality_against_absent_literal_rejected(catalog):
+    """Equality against a literal OUTSIDE the dictionary is rejected for
+    sorted and unsorted dictionaries alike — unlike order comparisons,
+    equality has no bisection-boundary lowering (an absent value can match
+    no code, and silently returning zero rows would mask typos)."""
+    from repro.api import UnsupportedSqlError
+    session = Session(dict(catalog), seed=0)
+    session.register_dictionary("l_returnflag", ("A", "N", "R"))    # sorted
+    session.register_dictionary("l_linestatus", ("O", "F"))         # unsorted
+    for column in ("l_returnflag", "l_linestatus"):
+        for op in ("=", "!="):
+            with pytest.raises(UnsupportedSqlError,
+                               match="not in the dictionary"):
+                session.sql(f"SELECT COUNT(*) AS n FROM lineitem "
+                            f"WHERE {column} {op} 'Q'")
+    # sorted dictionaries still accept the same absent literal for ORDER
+    # comparisons (the bisection boundary is well-defined either way)
+    assert session.sql("SELECT COUNT(*) AS n FROM lineitem "
+                       "WHERE l_returnflag < 'Q'").status == "done"
+    # unsorted ones reject order comparisons even for present literals
+    with pytest.raises(UnsupportedSqlError, match="not lexicographically"):
+        session.sql("SELECT COUNT(*) AS n FROM lineitem "
+                    "WHERE l_linestatus < 'O'")
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# HAVING: post-aggregation group filter
+# ---------------------------------------------------------------------------
+
+def test_having_parses_and_round_trips():
+    from repro.api import HavingClause
+    sql = ("SELECT SUM(l_quantity) AS q FROM lineitem "
+           "GROUP BY l_returnflag MAXGROUPS 3 HAVING q >= 100 "
+           "ERROR 5% CONFIDENCE 95%")
+    parsed = parse_sql(sql)
+    assert parsed.having == HavingClause("q", ">=", 100.0)
+    rendered = render_sql(parsed.query, parsed.spec, parsed.having)
+    assert parse_sql(rendered) == parsed
+    # negative literals and every comparison operator survive the trip
+    for op in ("<", "<=", ">", ">=", "=", "!="):
+        p = parse_sql(f"SELECT COUNT(*) AS n FROM t HAVING n {op} -3")
+        assert parse_sql(render_sql(p.query, p.spec, p.having)) == p
+
+
+def test_having_unknown_aggregate_rejected():
+    with pytest.raises(SqlSyntaxError, match="not a SELECT output"):
+        parse_sql("SELECT COUNT(*) AS n FROM t GROUP BY g HAVING m > 1")
+
+
+def test_having_filters_groups_on_answer(catalog):
+    """HAVING clears failing groups from group_present; estimates are
+    untouched, and the unfiltered spelling still sees every group."""
+    session = Session(dict(catalog), seed=0)
+    base = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                       "GROUP BY l_returnflag ERROR 5% CONFIDENCE 95%")
+    vals = np.asarray(base.result().values[0])
+    present = np.asarray(base.result().group_present)
+    assert present.all()
+    cut = float(np.sort(vals)[-2])  # keep only groups >= 2nd largest
+    h = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                    f"GROUP BY l_returnflag HAVING q >= {cut} "
+                    "ERROR 5% CONFIDENCE 95%")
+    np.testing.assert_array_equal(np.asarray(h.result().group_present),
+                                  vals >= cut)
+    # values are the same estimates — HAVING filters membership only
+    np.testing.assert_array_equal(np.asarray(h.result().values), base.result().values)
+    session.close()
+
+
+def test_having_variants_share_one_cached_base_answer(catalog):
+    """HAVING is not part of the plan/seed/cache key: HAVING-varied
+    re-issues of one query hit ONE cached base answer and re-filter it."""
+    session = Session(dict(catalog), seed=0)
+    template = ("SELECT SUM(l_quantity) AS q FROM lineitem "
+                "GROUP BY l_returnflag{having} ERROR 5% CONFIDENCE 95%")
+    first = session.sql(template.format(having=" HAVING q > 0"))
+    assert not first.cached and np.asarray(first.result().group_present).all()
+    tight = session.sql(template.format(having=" HAVING q > 1e12"))
+    assert tight.cached  # same (query, spec, seed) -> the cached base
+    assert not np.asarray(tight.result().group_present).any()
+    bare = session.sql(template.format(having=""))
+    assert bare.cached
+    assert np.asarray(bare.result().group_present).all()
+    session.close()
+
+
 def test_nested_filters_render_one_canonical_where():
     """Nested Filter nodes collapse into ONE WHERE conjunction with stable
     term order (application order: innermost filter first), right-folded

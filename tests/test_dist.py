@@ -1,0 +1,415 @@
+"""Partitioned tables + shard-parallel execution (repro.dist).
+
+The load-bearing property: for a fixed session seed, a table registered
+with ANY shard count answers bit-identically — sampled finals, pilots,
+shared-pilot herds, cached re-issues, and exact fallbacks included.  The
+sampled block set is the one content-derived Bernoulli realization
+restricted per shard, and all cross-shard state moves at per-block
+granularity (blocks never straddle shards), so the merged statistics are
+the same arrays a monolithic dispatch produces.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import Session, SessionConfig
+from repro.core import CompositeAgg, ErrorSpec
+from repro.core.taqa import Query
+from repro.dist import (DistExecutor, ShardedTable, merge_block_stats,
+                        reduce_group_totals, shard_block_ids)
+from repro.dist.merge import ShardPart
+from repro.engine import logical as L
+from repro.engine.datagen import tpch_catalog
+from repro.engine.executor import EmptySampleError, Executor
+from repro.engine.expr import And, Col
+from repro.engine.sampling import draw_block_ids
+
+ROWS, BLOCK_ROWS = 24_000, 64
+SEED = 11
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(ROWS, BLOCK_ROWS, seed=3)
+
+
+def q6_plan(seed, rate=0.12):
+    pred = And(Col("l_shipdate").between(100, 1500), Col("l_quantity") < 24)
+    plan = L.Aggregate(
+        child=L.Filter(L.Scan("lineitem"), pred),
+        aggs=(L.AggSpec("sum", Col("l_extendedprice") * Col("l_discount"),
+                        "rev"),
+              L.AggSpec("count", None, "cnt"),
+              L.AggSpec("avg", Col("l_quantity"), "aq")),
+        group_by="l_returnflag", max_groups=3)
+    return L.rewrite_scans(
+        plan, {"lineitem": L.SampleClause("block", rate, seed)})
+
+
+def dist_executor(catalog, shards):
+    ex = DistExecutor(dict(catalog))
+    ex.register_sharded("lineitem", catalog["lineitem"], shards)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# Shard geometry + restriction-based sub-draws
+# ---------------------------------------------------------------------------
+
+def test_shards_partition_blocks_disjoint_and_complete(catalog):
+    table = catalog["lineitem"]
+    st = ShardedTable.from_table(table, 3)
+    assert st.num_blocks == table.num_blocks
+    covered = []
+    for s in st.shards:
+        assert s.end_block > s.start_block
+        assert s.table.num_blocks == s.num_blocks
+        # global origin labels survive the slice
+        assert int(np.asarray(s.table.block_id)[0]) == s.start_block
+        covered.extend(range(s.start_block, s.end_block))
+    assert covered == list(range(table.num_blocks))
+    # shard data is the base table's slice, bit for bit
+    s1 = st.shards[1]
+    lo = s1.start_block * BLOCK_ROWS
+    hi = s1.end_block * BLOCK_ROWS
+    np.testing.assert_array_equal(
+        np.asarray(s1.table.columns["l_quantity"]),
+        np.asarray(table.columns["l_quantity"])[lo:hi])
+
+
+def test_shard_counts_validated(catalog):
+    table = catalog["lineitem"]
+    with pytest.raises(ValueError):
+        ShardedTable.from_table(table, 0)
+    with pytest.raises(ValueError):
+        ShardedTable.from_table(table, table.num_blocks + 1)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 3, 4, 7])
+def test_sub_draws_union_to_the_monolithic_draw(catalog, shards):
+    """Per-shard restriction of the one content-derived realization: the
+    union equals the monolithic Bernoulli draw exactly, for any N."""
+    table = catalog["lineitem"]
+    st = ShardedTable.from_table(table, shards)
+    global_ids, parts = shard_block_ids(table.num_blocks, 0.1, SEED, st)
+    np.testing.assert_array_equal(global_ids,
+                                  draw_block_ids(table.num_blocks, 0.1, SEED))
+    rejoined = np.concatenate(
+        [local + s.start_block for s, local in parts]) if parts else []
+    np.testing.assert_array_equal(rejoined, global_ids)
+    for s, local in parts:
+        assert len(local) and local.min() >= 0
+        assert local.max() < s.num_blocks
+
+
+def test_merge_rejects_out_of_order_parts():
+    a = ShardPart(0, np.array([4, 5]), np.zeros((2, 1, 2)))
+    b = ShardPart(1, np.array([0, 1]), np.ones((2, 1, 2)))
+    with pytest.raises(ValueError):
+        merge_block_stats([a, b])
+    ids, bs = merge_block_stats([b, a])
+    np.testing.assert_array_equal(ids, [0, 1, 4, 5])
+    sums, counts = reduce_group_totals(bs)
+    assert sums.shape == (1, 1) and counts.shape == (1,)
+    assert counts[0] == 2.0  # last channel is the row count
+
+
+# ---------------------------------------------------------------------------
+# Executor-level bit-identity
+# ---------------------------------------------------------------------------
+
+def test_final_bit_identity_across_shard_counts(catalog):
+    results = {n: dist_executor(catalog, n).execute(q6_plan(7))
+               for n in (1, 2, 4)}
+    for n in (2, 4):
+        np.testing.assert_array_equal(results[n].values, results[1].values)
+        np.testing.assert_array_equal(results[n].group_counts,
+                                      results[1].group_counts)
+        np.testing.assert_array_equal(results[n].group_present,
+                                      results[1].group_present)
+
+
+def test_final_agrees_with_monolithic_route(catalog):
+    """Cross-route agreement with the monolithic executor: counts and the
+    group bitmap are bitwise equal (integer summands), values to f32
+    rounding — the same standard the Pallas and XLA kernel routes meet."""
+    ref = Executor(dict(catalog)).execute(q6_plan(7))
+    res = dist_executor(catalog, 4).execute(q6_plan(7))
+    np.testing.assert_array_equal(res.group_counts, ref.group_counts)
+    np.testing.assert_array_equal(res.group_present, ref.group_present)
+    np.testing.assert_allclose(res.values, ref.values, rtol=1e-6)
+    assert res.scanned_bytes == ref.scanned_bytes
+    infos = res.sample_infos["lineitem"]
+    assert infos.n_sampled_blocks == ref.sample_infos["lineitem"].n_sampled_blocks
+
+
+def test_pilot_statistics_bitwise_equal_to_monolithic(catalog):
+    plan = L.strip_samples(q6_plan(0))
+    ref = Executor(dict(catalog)).execute_pilot(plan, "lineitem", 0.08, SEED)
+    for n in (1, 2, 4):
+        ps = dist_executor(catalog, n).execute_pilot(
+            plan, "lineitem", 0.08, SEED)
+        assert ps.n_sampled_blocks == ref.n_sampled_blocks
+        np.testing.assert_array_equal(ps.block_sums, ref.block_sums)
+        np.testing.assert_array_equal(ps.group_present, ref.group_present)
+        assert ps.scanned_bytes == ref.scanned_bytes
+
+
+def test_join_pilot_pair_sums_merge_bitwise(catalog):
+    """Lemma-4.8 block-pair statistics (join pilots) concatenate exactly."""
+    plan = L.Aggregate(
+        child=L.Join(L.Scan("lineitem"), L.Scan("orders"),
+                     "l_orderkey", "o_orderkey"),
+        aggs=(L.AggSpec("sum", Col("l_extendedprice"), "rev"),))
+    ref = Executor(dict(catalog)).execute_pilot(
+        plan, "lineitem", 0.08, SEED, pair_tables=("orders",))
+    for n in (1, 3):
+        ps = dist_executor(catalog, n).execute_pilot(
+            plan, "lineitem", 0.08, SEED, pair_tables=("orders",))
+        np.testing.assert_array_equal(ps.block_sums, ref.block_sums)
+        np.testing.assert_array_equal(ps.pair_sums["orders"],
+                                      ref.pair_sums["orders"])
+        assert ps.right_total_blocks == ref.right_total_blocks
+
+
+def test_empty_global_draw_raises_empty_sample_error(catalog):
+    """The engine-wide empty-sample semantics survive sharding: a GLOBAL
+    draw of zero blocks raises (TAQA's explicit exact fallback); a single
+    empty shard merely contributes nothing (covered implicitly by the small
+    rates elsewhere)."""
+    ex = dist_executor(catalog, 4)
+    n_blocks = catalog["lineitem"].num_blocks
+    empty_seed = next(
+        s for s in range(10_000)
+        if len(draw_block_ids(n_blocks, 0.001, s)) == 0)
+    with pytest.raises(EmptySampleError):
+        ex.execute(q6_plan(empty_seed, rate=0.001))
+
+
+def test_compile_cache_info_aggregates_shard_compilers(catalog):
+    """Dist dispatches compile in per-shard executors; the top-level
+    counters must include them (gateway/drain stats read those)."""
+    ex = dist_executor(catalog, 2)
+    assert ex.compile_cache_info().misses == 0
+    ex.execute(q6_plan(7))
+    first = ex.compile_cache_info()
+    assert first.misses >= 2 and first.size >= 2  # one compile per shard
+    ex.execute(q6_plan(8))  # same shapes: warm
+    second = ex.compile_cache_info()
+    assert second.misses == first.misses
+    assert second.hits > first.hits
+
+
+def test_per_shard_scanned_bytes_sum_to_monolithic_total(catalog):
+    totals = {}
+    for n in (1, 2, 4):
+        ex = dist_executor(catalog, n)
+        res = ex.execute(q6_plan(7))
+        info = ex.shard_scan_info()["lineitem"]
+        assert len(info) == n and all(b > 0 for b in info)
+        totals[n] = sum(info)
+        assert totals[n] == res.sample_infos["lineitem"].scanned_bytes
+    assert totals[2] == totals[1] and totals[4] == totals[1]
+
+
+def test_execute_batch_routes_dist_members_bit_identically(catalog):
+    ex = dist_executor(catalog, 2)
+    plans = [q6_plan(s) for s in (3, 4, 5, 6)]
+    solo = [dist_executor(catalog, 2).execute(p) for p in plans]
+    outs = ex.execute_batch(plans)
+    for out, ref in zip(outs, solo):
+        np.testing.assert_array_equal(out.values, ref.values)
+
+
+def test_multi_table_sampling_falls_back_monolithically(catalog):
+    """Plans sampling more than the sharded table run on the monolithic
+    arrays — shard-count-independent by definition."""
+    plan = L.Aggregate(
+        child=L.Join(L.Scan("lineitem"), L.Scan("orders"),
+                     "l_orderkey", "o_orderkey"),
+        aggs=(L.AggSpec("sum", Col("l_extendedprice"), "rev"),))
+    sampled = L.rewrite_scans(plan, {
+        "lineitem": L.SampleClause("block", 0.2, 5),
+        "orders": L.SampleClause("block", 0.5, 6)})
+    ref = Executor(dict(catalog)).execute(sampled)
+    for n in (2, 4):
+        res = dist_executor(catalog, n).execute(sampled)
+        np.testing.assert_array_equal(res.values, ref.values)
+
+
+def test_plain_reregistration_drops_sharding(catalog):
+    ex = dist_executor(catalog, 4)
+    assert ex.sharded_tables() == {"lineitem": 4}
+    ex.register_table("lineitem", catalog["lineitem"])
+    assert ex.sharded_tables() == {}
+    ref = Executor(dict(catalog)).execute(q6_plan(7))
+    np.testing.assert_array_equal(ex.execute(q6_plan(7)).values, ref.values)
+
+
+# ---------------------------------------------------------------------------
+# Session-level acceptance: the TPC-H-style suite across shard counts
+# ---------------------------------------------------------------------------
+
+SUITE = [
+    # q6-family filtered SUM (constant-varied herd below slides the cap)
+    "SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+    "WHERE l_shipdate BETWEEN 100 AND 1500 AND l_quantity < 24 "
+    "ERROR 5% CONFIDENCE 95%",
+    # q1-family grouped multi-aggregate
+    "SELECT COUNT(*) AS n, AVG(l_quantity) AS aq FROM lineitem "
+    "GROUP BY l_returnflag ERROR 8% CONFIDENCE 90%",
+    # ratio composite
+    "SELECT SUM(l_extendedprice * l_discount) / SUM(l_extendedprice) AS r "
+    "FROM lineitem ERROR 8% CONFIDENCE 90%",
+    # PK-FK join
+    "SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+    "JOIN orders ON l_orderkey = o_orderkey WHERE o_orderdate < 1200 "
+    "ERROR 8% CONFIDENCE 90%",
+    # exact (no ERROR clause)
+    "SELECT SUM(l_quantity) AS q FROM lineitem WHERE l_quantity < 10",
+]
+
+HERD = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+        "WHERE l_quantity < {cap} ERROR 6% CONFIDENCE 90%")
+
+
+def _run_suite(catalog, shards, pilot_workers=None):
+    cfg = SessionConfig(large_table_rows=10_000, pilot_workers=pilot_workers) \
+        if pilot_workers is not None else SessionConfig(large_table_rows=10_000)
+    session = Session(seed=SEED, config=cfg)
+    session.register_table("orders", catalog["orders"])
+    session.register_table("lineitem", catalog["lineitem"], shards=shards)
+
+    # one drain: the suite + a shared-pilot herd (verbatim re-issues share
+    # ONE pilot, constant-varied members each pilot their own constant)
+    sqls = list(SUITE)
+    sqls += [HERD.format(cap=24)] * 3                   # herd: verbatim x3
+    sqls += [HERD.format(cap=18 + 2 * i) for i in range(3)]  # constant-slid
+    handles = [session.submit(q) for q in sqls]
+    drain_stats_handles = session.drain()
+    assert len(drain_stats_handles) == len(handles)
+    drain1 = session.scheduler.last_drain
+
+    # result-cache re-issue: identical resubmission answers from the cache
+    reissue = session.submit(SUITE[0])
+    session.drain()
+    assert reissue.cached
+
+    out = {
+        "values": [np.asarray(h.result().values) for h in handles],
+        "present": [np.asarray(h.result().group_present) for h in handles],
+        "fallbacks": [h.fallback for h in handles],
+        "reissue": np.asarray(reissue.result().values),
+        "pilots_run": session.executor.pilots_run,
+        "drain1": drain1,
+        "shard_bytes": session.executor.shard_scan_info(),
+    }
+    session.close()
+    return out
+
+
+@pytest.fixture(scope="module")
+def suite_runs(catalog):
+    return {n: _run_suite(catalog, n) for n in (1, 2, 4)}
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_suite_bit_identical_to_single_shard(suite_runs, shards):
+    base, run = suite_runs[1], suite_runs[shards]
+    for vb, vr in zip(base["values"], run["values"]):
+        np.testing.assert_array_equal(vb, vr)
+    for pb, pr in zip(base["present"], run["present"]):
+        np.testing.assert_array_equal(pb, pr)
+    assert base["fallbacks"] == run["fallbacks"]
+    np.testing.assert_array_equal(base["reissue"], run["reissue"])
+
+
+def test_suite_shares_pilots_identically(suite_runs):
+    """The shared-pilot herd runs the same number of pilot stages at every
+    shard count (sharing keys are content-derived, not placement-derived)."""
+    counts = {n: r["pilots_run"] for n, r in suite_runs.items()}
+    assert counts[2] == counts[1] and counts[4] == counts[1]
+    # 3 verbatim herd members shared ONE pilot: stages < approximate queries
+    approx = sum(1 for s in SUITE if "ERROR" in s) + 6
+    assert counts[1] < approx
+
+
+def test_suite_shard_bytes_attribution(suite_runs):
+    for n in (1, 2, 4):
+        per_shard = suite_runs[n]["shard_bytes"]["lineitem"]
+        assert len(per_shard) == n
+    assert (sum(suite_runs[2]["shard_bytes"]["lineitem"])
+            == sum(suite_runs[1]["shard_bytes"]["lineitem"]))
+    assert (sum(suite_runs[4]["shard_bytes"]["lineitem"])
+            == sum(suite_runs[1]["shard_bytes"]["lineitem"]))
+
+
+def test_drain_records_pilot_fanout(suite_runs):
+    """The constant-varied herd's pilot subgroups fanned out (>= 2 pilot
+    subgroups in one drain group) and the drain surfaced the wall/serial
+    accounting."""
+    drain = suite_runs[1]["drain1"]
+    assert drain.pilot_fanouts >= 1
+    assert drain.pilot_fanout_serial_s > 0.0
+    assert drain.pilot_fanout_wall_s > 0.0
+
+
+def test_pilot_fanout_serial_and_concurrent_bit_identical(catalog):
+    serial = _run_suite(catalog, 2, pilot_workers=0)
+    conc = _run_suite(catalog, 2, pilot_workers=2)
+    for vs, vc in zip(serial["values"], conc["values"]):
+        np.testing.assert_array_equal(vs, vc)
+    assert serial["pilots_run"] == conc["pilots_run"]
+
+
+def test_session_rejects_shards_on_custom_executor(catalog):
+    session = Session(executor=Executor(dict(catalog)))
+    with pytest.raises(ValueError):
+        session.register_table("lineitem", catalog["lineitem"], shards=2)
+    session.close()
+
+
+def test_rejected_shard_count_leaves_session_state_untouched(catalog):
+    """An invalid shards= value is rejected BEFORE the table-generation
+    bump: cached answers survive and nothing is invalidated over data that
+    never changed."""
+    session = Session(seed=SEED,
+                      config=SessionConfig(large_table_rows=10_000))
+    session.register_table("lineitem", catalog["lineitem"], shards=2)
+    session.sql(SUITE[0])
+    for bad in (0, -1, catalog["lineitem"].num_blocks + 1):
+        with pytest.raises(ValueError, match="shards"):
+            session.register_table("lineitem", catalog["lineitem"],
+                                   shards=bad)
+    again = session.sql(SUITE[0])
+    assert again.cached  # the failed registrations evicted nothing
+    session.close()
+
+
+def test_register_table_replacement_invalidates_sharded_cache(catalog):
+    session = Session(seed=SEED,
+                      config=SessionConfig(large_table_rows=10_000))
+    session.register_table("lineitem", catalog["lineitem"], shards=2)
+    h1 = session.sql(SUITE[0])
+    h2 = session.sql(SUITE[0])
+    assert h2.cached
+    session.register_table("lineitem", catalog["lineitem"], shards=4)
+    h3 = session.sql(SUITE[0])
+    assert not h3.cached  # replacement evicted the entry
+    np.testing.assert_array_equal(h3.result().values, h1.result().values)
+    session.close()
+
+
+def test_hand_built_query_dist_matches_plain_session(catalog):
+    """Builder/hand-built paths route through the same dist executor."""
+    q = Query(child=L.Filter(L.Scan("lineitem"), Col("l_quantity") < 30),
+              aggs=(CompositeAgg("q", "sum", Col("l_quantity")),))
+    spec = ErrorSpec(error=0.06, confidence=0.9)
+    vals = {}
+    for shards in (1, 2, 4):
+        s = Session(seed=SEED, config=SessionConfig(large_table_rows=10_000))
+        s.register_table("lineitem", catalog["lineitem"], shards=shards)
+        vals[shards] = np.asarray(s.execute(q, spec).result().values)
+        s.close()
+    np.testing.assert_array_equal(vals[2], vals[1])
+    np.testing.assert_array_equal(vals[4], vals[1])

@@ -184,6 +184,48 @@ def test_gateway_backpressure_per_client_cap(aqp_session):
     assert t in results and gw.stats.throttled == 1
 
 
+def test_gateway_stats_payload_one_stop(aqp_session):
+    """stats_payload() surfaces the gateway counters, the physical
+    compile-cache counters, and the result-cache hit/byte counters in one
+    payload — no reaching into session internals."""
+    gw = SqlGateway(aqp_session)
+    sql = ("SELECT SUM(l_quantity) AS q FROM lineitem "
+           "WHERE l_quantity < 30 ERROR 10% CONFIDENCE 90%")
+    for i in range(3):
+        gw.submit(f"c{i}", sql)
+    gw.run()
+    payload = gw.stats_payload()
+    assert payload["gateway"]["requests"] == gw.stats.requests == 3
+    assert payload["gateway"]["served"] == 3
+    info = aqp_session.compile_cache_info()
+    assert payload["compile_cache"] == {
+        "hits": info.hits, "misses": info.misses, "size": info.size}
+    rc = aqp_session.result_cache_info()
+    assert payload["result_cache"]["hits"] == rc.hits >= 2
+    assert payload["result_cache"]["bytes_used"] == rc.bytes_used > 0
+    assert payload["result_cache"]["capacity"] == rc.capacity
+    # nothing sharded on this session: the dist section is present but empty
+    assert payload["shard_scanned_bytes"] == {}
+
+
+def test_gateway_stats_payload_shard_attribution():
+    """With a partitioned registration the payload carries per-shard
+    sampled-slab bytes that sum to the monolithic attribution."""
+    from repro.api import SessionConfig
+    session = Session(seed=5, config=SessionConfig(large_table_rows=10_000))
+    cat = tpch_catalog(scale_rows=24_000, block_rows=64, seed=0)
+    session.register_table("lineitem", cat["lineitem"], shards=3)
+    gw = SqlGateway(session)
+    gw.submit("c0", "SELECT SUM(l_quantity) AS q FROM lineitem "
+                    "WHERE l_quantity < 30 ERROR 8% CONFIDENCE 90%")
+    gw.run()
+    per_shard = gw.stats_payload()["shard_scanned_bytes"]["lineitem"]
+    assert len(per_shard) == 3 and sum(per_shard) > 0
+    expected = session.executor.shard_scan_info()["lineitem"]
+    assert per_shard == list(expected)
+    session.close()
+
+
 # -- guaranteed approximate evaluation -------------------------------------------
 
 def test_guaranteed_eval_bounds_error():
