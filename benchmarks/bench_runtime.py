@@ -117,7 +117,10 @@ def _run_config(cfg: SessionConfig, tables) -> dict:
     info = session.compile_cache_info()
     out = {
         "wall_s": wall,
-        "workers": cfg.resolve_workers(),
+        # the ACTUAL pool widths the drains ran on (the runtime auto-sizes
+        # both), not the config knob — which is 0/None for "auto"
+        "workers": session.runtime.workers,
+        "pilot_workers": session.runtime.pilot_workers,
         "queries": len(handles),
         "pilots_run": ex.pilots_run - p0,
         "compile_misses": info.misses - m0,

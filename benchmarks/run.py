@@ -49,13 +49,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench: guarantees|naive_clt|scan|"
                          "speedup|quickr|ablation|kernels|compiled|runtime|"
-                         "dist")
+                         "dist|staged")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_compiled, bench_dist,
                             bench_guarantees, bench_kernels, bench_naive_clt,
                             bench_quickr, bench_runtime, bench_scan,
-                            bench_speedup)
+                            bench_speedup, bench_staged)
 
     benches = {
         "scan": bench_scan.run,              # Fig. 4
@@ -68,6 +68,7 @@ def main() -> None:
         "compiled": bench_compiled.run,      # eager vs compiled physical layer
         "runtime": bench_runtime.run,        # serving herd: async/share/cache
         "dist": bench_dist.run,              # shard-parallel execution
+        "staged": bench_staged.run,          # pre-staged sample-catalog ladders
     }
     todo = [args.only] if args.only else list(benches)
     print("name,us_per_call,derived")

@@ -7,9 +7,9 @@ from repro.api.builder import QueryBuilder, avg_, count_, sum_
 from repro.api.scheduler import DrainStats, QueryScheduler
 from repro.api.session import (QueryFailedError, QueryHandle, QueryStatus,
                                Session, SessionConfig)
-from repro.api.sql import (HavingClause, ParsedQuery, SqlSyntaxError,
-                           UnsupportedSqlError, parse_sql, render_sql,
-                           resolve_string_literals)
+from repro.api.sql import (HavingClause, LimitClause, ParsedQuery,
+                           SqlSyntaxError, UnsupportedSqlError, parse_sql,
+                           render_sql, resolve_string_literals)
 from repro.runtime import BackpressureError, ResultCacheInfo
 
 __all__ = [
@@ -28,6 +28,7 @@ __all__ = [
     "render_sql",
     "resolve_string_literals",
     "HavingClause",
+    "LimitClause",
     "ParsedQuery",
     "SqlSyntaxError",
     "UnsupportedSqlError",

@@ -68,6 +68,11 @@ class DrainStats:
     pilot_fanouts: int = 0
     pilot_fanout_wall_s: float = 0.0
     pilot_fanout_serial_s: float = 0.0
+    # the runtime pool widths this drain actually ran on — the session
+    # auto-sizes both, so reports must read the resolved values here, not
+    # echo the (possibly 0 = "auto") configuration knob back
+    workers: int = 0
+    pilot_workers: int = 0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -158,6 +163,8 @@ class QueryScheduler:
         completed = [h for b in batches for h in b]
 
         stats = DrainStats()
+        stats.workers = self._session.runtime.workers
+        stats.pilot_workers = self._session.runtime.pilot_workers
         stats.n_groups = len(batches)
         stats.group_sizes = [len(b) for b in batches]
         info1 = self._session.compile_cache_info()

@@ -51,14 +51,15 @@ import numpy as np
 
 from repro.api.builder import QueryBuilder
 from repro.api.scheduler import QueryScheduler
-from repro.api.sql import (HavingClause, UnsupportedSqlError, parse_sql,
-                           resolve_string_literals)
+from repro.api.sql import (HavingClause, LimitClause, UnsupportedSqlError,
+                           parse_sql, resolve_string_literals)
 from repro.core.spec import ErrorSpec
 from repro.dist import DistExecutor
 from repro.core.taqa import (ApproxAnswer, PilotDB, Query, TaqaReport,
                              pilot_params, structural_signature)
 from repro.engine.executor import Executor
 from repro.engine.physical import plan_template
+from repro.engine.staged import DEFAULT_STAGED_RATES, validate_rates
 from repro.engine.table import BlockTable
 from repro.runtime import (AsyncRuntime, CachedAnswer, ResultCache,
                            ResultCacheInfo)
@@ -105,6 +106,10 @@ class QueryHandle:
     # (fresh or cache-served) but never part of the plan, the seed, or the
     # cache key — the cache stores the unfiltered base answer
     having: Optional[HavingClause] = None
+    # post-aggregation [ORDER BY agg] LIMIT n selection: same contract as
+    # HAVING (applied after it, never keyed) — LIMIT-varied re-issues all
+    # share one cached base answer
+    limit: Optional[LimitClause] = None
     status: str = QueryStatus.PENDING
     error: Optional[str] = None
     cached: bool = False              # answered from the session result cache
@@ -230,6 +235,12 @@ class SessionConfig:
     # ApproxAnswer graph) and evicted LRU-first once the budget is hit.
     # None = entry-count bound only.
     result_cache_bytes: Optional[int] = None
+    # Optional byte budget for the staged sample catalog (tables registered
+    # with staged_rates=...): rung arrays of cold ladders are evicted
+    # LRU-first past the budget; the ladder's pinned staging seed survives
+    # eviction, so answers stay bit-identical across the hit/miss boundary.
+    # None = unbounded residency.
+    staged_bytes: Optional[int] = None
 
     def resolve_workers(self) -> int:
         """The worker count ``async_workers=None`` auto-sizes to.
@@ -284,7 +295,8 @@ class Session:
             # registered with shards= (see register_table)
             self.executor = DistExecutor(catalog or {},
                                          use_compiled=config.use_compiled,
-                                         kernel_mode=config.kernel_mode)
+                                         kernel_mode=config.kernel_mode,
+                                         staged_bytes=config.staged_bytes)
         self.db = PilotDB(self.executor,
                           large_table_rows=config.large_table_rows)
         self._entropy = int(seed)
@@ -313,8 +325,21 @@ class Session:
     def register_table(self, name: str, table: BlockTable, *,
                        dictionaries: Optional[Dict[str, Sequence[str]]] = None,
                        shards: Optional[int] = None,
+                       staged_rates: Optional[Sequence[float]] = None,
                        ) -> None:
         """Add (or replace) a catalog table.
+
+        ``staged_rates=[...]`` additionally materializes a staged
+        block-sample ladder for the table (``staged_rates=True`` uses the
+        default 1%/4%/16% ladder; per shard for sharded registrations): a
+        sampled scan whose rate a rung covers executes against the
+        pre-gathered staged arrays as a sub-draw of the table's ONE
+        content-derived staging realization — bit-identical to a fresh
+        draw, for pilots and finals — skipping the per-query full-table
+        gather.  ``staged_rates=None`` (default) stages nothing and
+        reproduces the unstaged behavior exactly.  Re-registration always
+        drops the old ladder first, so staged arrays can never outlive
+        their data.
 
         ``shards=N`` registers the table *partitioned* into N disjoint
         block ranges (placed round-robin across JAX devices when more than
@@ -358,6 +383,15 @@ class Session:
                 raise ValueError(
                     f"shards must be in [1, {table.num_blocks}] (blocks are "
                     f"the atomic placement unit), got {shards}")
+        if staged_rates is not None:
+            if not hasattr(self.executor, "register_staged"):
+                raise ValueError(
+                    "staged_rates= needs a staging-capable executor (the "
+                    "session default); the explicit executor passed to this "
+                    "session does not support staged sample ladders")
+            # validate BEFORE the generation bump, like shards= above
+            staged_rates = DEFAULT_STAGED_RATES if staged_rates is True \
+                else validate_rates(staged_rates)
         # bump+swap under the generation lock: no snapshot can interleave
         # between the new generation and the new data (see _gen_lock above)
         with self._gen_lock:
@@ -366,6 +400,12 @@ class Session:
                 self.executor.register_table(name, table)
             else:
                 self.executor.register_sharded(name, table, shards)
+            if staged_rates is not None:
+                # stage inside the lock: the ladder (and its seed pinning)
+                # becomes visible atomically with the table swap, so no
+                # query can observe the table staged-rates-on but unstaged
+                self.executor.register_staged(
+                    name, staged_rates, seed=self._staged_seed_for(name))
         # replacing a table invalidates its cached statistics
         self._max_groups_cache = {k: v for k, v in
                                   self._max_groups_cache.items()
@@ -463,6 +503,18 @@ class Session:
              _content_hash(handle.signature, params)])
         return int(seq.generate_state(1, dtype=np.uint32)[0])
 
+    def _staged_seed_for(self, name: str) -> int:
+        """The staging seed pinning table ``name``'s one staged realization.
+
+        Derived from (session seed, table name) ONLY — not from the ladder
+        rates — so every ladder configuration of a table stages the same
+        realization and answers are bit-identical across re-staging with
+        different rungs.  Its own domain constant keeps it off the
+        per-query and pilot seed streams."""
+        seq = np.random.SeedSequence(
+            [self._entropy, 0x5A3D1ED, _content_hash(name)])
+        return int(seq.generate_state(1, dtype=np.uint32)[0])
+
     # -- front doors ----------------------------------------------------------
     def table(self, name: str) -> QueryBuilder:
         if name not in self.executor.catalog:
@@ -500,8 +552,11 @@ class Session:
         return handle
 
     def submit_query(self, query: Query,
-                     spec: Optional[ErrorSpec] = None) -> QueryHandle:
-        return self.scheduler.submit(self._make_handle(query, spec))
+                     spec: Optional[ErrorSpec] = None, *,
+                     having: Optional[HavingClause] = None,
+                     limit: Optional[LimitClause] = None) -> QueryHandle:
+        return self.scheduler.submit(
+            self._make_handle(query, spec, having=having, limit=limit))
 
     def drain(self, max_queries: Optional[int] = None) -> List[QueryHandle]:
         return self.scheduler.drain(max_queries)
@@ -516,7 +571,7 @@ class Session:
         parsed = parse_sql(text, max_groups_resolver=self.infer_max_groups,
                            spec_kwargs=self.config.spec_kwargs)
         return self._make_handle(parsed.query, parsed.spec, sql=text,
-                                 having=parsed.having)
+                                 having=parsed.having, limit=parsed.limit)
 
     def _resolve_dictionary(self, column: str, literal: str) -> int:
         d = self._dictionaries.get(column)
@@ -584,7 +639,8 @@ class Session:
 
     def _make_handle(self, query: Query, spec: Optional[ErrorSpec],
                      sql: Optional[str] = None,
-                     having: Optional[HavingClause] = None) -> QueryHandle:
+                     having: Optional[HavingClause] = None,
+                     limit: Optional[LimitClause] = None) -> QueryHandle:
         # resolve + validate before deriving a seed: rejected queries never
         # enter the seed/cache keyspace
         query = resolve_string_literals(query, self._resolve_dictionary,
@@ -594,12 +650,17 @@ class Session:
             raise UnsupportedSqlError(
                 f"HAVING references unknown aggregate {having.agg!r} "
                 f"(outputs: {[c.name for c in query.aggs]})")
+        if limit is not None and limit.order_by is not None \
+                and limit.order_by not in {c.name for c in query.aggs}:
+            raise UnsupportedSqlError(
+                f"ORDER BY references unknown aggregate {limit.order_by!r} "
+                f"(outputs: {[c.name for c in query.aggs]})")
         # one lowering: the group key is the (memoized) constant-stripped
         # template of the signature just computed, not a second lowering
         signature = structural_signature(query)
         handle = QueryHandle(query_id=self._next_id, query=query, spec=spec,
                              seed=self._derive_seed(query, spec), sql=sql,
-                             having=having, signature=signature,
+                             having=having, limit=limit, signature=signature,
                              group_key=plan_template(signature))
         self._next_id += 1
         return handle
@@ -637,6 +698,8 @@ class Session:
             # the cache holds the unfiltered base answer (HAVING is not in
             # the key), so HAVING-varied re-issues all hit one entry
             answer = handle.having.apply(answer)
+        if handle.limit is not None:  # same contract; after HAVING
+            answer = handle.limit.apply(answer)
         handle._mark_done(answer, cached=True)
         return True
 
@@ -673,6 +736,8 @@ class Session:
             (lambda: gen_snapshot == self._scan_generations(handle.query)))
         if handle.having is not None:  # cache keeps the unfiltered answer
             answer = handle.having.apply(answer)
+        if handle.limit is not None:   # after HAVING, like _serve_cached
+            answer = handle.limit.apply(answer)
         handle._mark_done(answer)
         return True
 

@@ -6,6 +6,8 @@ Grammar (case-insensitive keywords)::
                FROM ident (JOIN ident ON column '=' column)*
                (WHERE pred)?
                (GROUP BY column (MAXGROUPS int)?)?
+               (HAVING ident cmp num)?
+               ((ORDER BY ident (ASC|DESC)?)? LIMIT int)?
                (ERROR num '%' CONFIDENCE num '%')?
     item    := composite (AS ident)?
     composite := wterm '+' wterm          -- addition rule (Table 2)
@@ -105,10 +107,55 @@ _HAVING_OPS = {
 
 
 @dataclasses.dataclass(frozen=True)
+class LimitClause:
+    """``[ORDER BY <agg> [ASC|DESC]] LIMIT n``: post-aggregation top-n.
+
+    Same contract as :class:`HavingClause` (and applied after it): the
+    selection acts on the delivered answer's present groups — ranked by the
+    named output aggregate's estimates when ORDER BY is given, by group id
+    otherwise — and never reaches the engine plan.  Signatures, pilot
+    sharing, seeds, and the result-cache key are all LIMIT-agnostic, so
+    LIMIT-varied re-issues of one query share the same pilot, compilation,
+    and cached base answer.  ORDER BY without LIMIT is rejected at parse:
+    answers are unordered group sets, so ordering only exists to select.
+    """
+
+    n: int
+    order_by: Optional[str] = None
+    desc: bool = False
+
+    def apply(self, answer):
+        """A copy of ``answer`` keeping at most ``n`` present groups (the
+        values array is untouched — LIMIT selects group membership, not
+        estimates).  Ties and NaN-last ranking follow numpy stable argsort,
+        so repeated applications are deterministic."""
+        import numpy as np
+        present = np.asarray(answer.group_present, dtype=bool)
+        idx = np.nonzero(present)[0]
+        if len(idx) <= self.n:
+            return dataclasses.replace(answer, group_present=present)
+        if self.order_by is not None:
+            if self.order_by not in answer.names:
+                raise UnsupportedSqlError(
+                    f"ORDER BY references unknown aggregate "
+                    f"{self.order_by!r} (outputs: {answer.names})")
+            vals = np.asarray(
+                answer.values[answer.names.index(self.order_by)])[idx]
+            key = -vals if self.desc else vals
+            keep = idx[np.argsort(key, kind="stable")[:self.n]]
+        else:
+            keep = idx[:self.n]
+        new_present = np.zeros_like(present)
+        new_present[keep] = True
+        return dataclasses.replace(answer, group_present=new_present)
+
+
+@dataclasses.dataclass(frozen=True)
 class ParsedQuery:
     query: Query
     spec: Optional[ErrorSpec]   # None: no ERROR clause -> exact execution
     having: Optional[HavingClause] = None
+    limit: Optional[LimitClause] = None
 
     @property
     def is_approximate(self) -> bool:
@@ -122,7 +169,7 @@ class ParsedQuery:
 _KEYWORDS = {
     "SELECT", "FROM", "WHERE", "GROUP", "BY", "JOIN", "ON", "AS", "AND",
     "OR", "NOT", "BETWEEN", "SUM", "COUNT", "AVG", "ERROR", "CONFIDENCE",
-    "MAXGROUPS", "HAVING",
+    "MAXGROUPS", "HAVING", "ORDER", "LIMIT", "ASC", "DESC",
 }
 
 _TOKEN_RE = re.compile(
@@ -436,6 +483,29 @@ class _Parser:
                     f"expected comparison after HAVING {name}, got "
                     f"{self.peek()[1]!r}")
 
+        limit = None
+        order_by = None
+        desc = False
+        if self.accept_kw("ORDER"):
+            self.expect_kw("BY")
+            order_by = self.expect_ident()
+            if order_by not in {a.name for a in aggs}:
+                raise SqlSyntaxError(
+                    f"ORDER BY references {order_by!r}, which is not a "
+                    f"SELECT output (outputs: {[a.name for a in aggs]}); "
+                    "ORDER BY ranks by an aggregate alias")
+            if self.accept_kw("DESC"):
+                desc = True
+            else:
+                self.accept_kw("ASC")
+            if not self.accept_kw("LIMIT"):
+                raise SqlSyntaxError(
+                    "ORDER BY requires LIMIT: answers are unordered group "
+                    "sets, so ordering only exists to select the top n")
+            limit = self._finish_limit(order_by, desc)
+        elif self.accept_kw("LIMIT"):
+            limit = self._finish_limit(None, False)
+
         spec = None
         if self.accept_kw("ERROR"):
             err = self.expect_num()
@@ -459,7 +529,15 @@ class _Parser:
             raise SqlSyntaxError(f"trailing input at {self.peek()[1]!r}")
         q = Query(child=child, aggs=tuple(aggs), group_by=group_by,
                   max_groups=max_groups)
-        return ParsedQuery(query=q, spec=spec, having=having)
+        return ParsedQuery(query=q, spec=spec, having=having, limit=limit)
+
+    def _finish_limit(self, order_by: Optional[str],
+                      desc: bool) -> LimitClause:
+        n = self.expect_num()
+        if n != int(n) or int(n) < 1:
+            raise SqlSyntaxError(
+                f"LIMIT must be a positive integer, got {n!r}")
+        return LimitClause(n=int(n), order_by=order_by, desc=desc)
 
 
 def parse_sql(
@@ -673,15 +751,17 @@ def _render_agg(a: CompositeAgg) -> str:
 
 
 def render_sql(query: Query, spec: Optional[ErrorSpec] = None,
-               having: Optional[HavingClause] = None) -> str:
+               having: Optional[HavingClause] = None,
+               limit: Optional[LimitClause] = None) -> str:
     """Render the internal representation back to dialect SQL.
 
     Only the dialect surface is expressible: a single optional Filter over a
     left-deep Join chain over plain Scans.  TABLESAMPLE clauses and Unions
     raise :class:`UnsupportedSqlError` — those are TAQA's rewriting
-    intermediates, not user queries.  ``having`` re-emits the
-    post-aggregation :class:`HavingClause` (round-trips through
-    :func:`parse_sql`).
+    intermediates, not user queries.  ``having`` and ``limit`` re-emit the
+    post-aggregation :class:`HavingClause` / :class:`LimitClause`
+    (round-trip through :func:`parse_sql`; ASC, the default direction, is
+    left implicit).
     """
     preds: List[Expr] = []
     node: L.Plan = query.child
@@ -727,6 +807,15 @@ def render_sql(query: Query, spec: Optional[ErrorSpec] = None,
                 f"HAVING references {having.agg!r}, not a query output")
         parts.append(f"HAVING {having.agg} {_SQL_CMP[having.op]} "
                      f"{_num(having.value)}")
+    if limit is not None:
+        if limit.order_by is not None:
+            if limit.order_by not in {a.name for a in query.aggs}:
+                raise UnsupportedSqlError(
+                    f"ORDER BY references {limit.order_by!r}, "
+                    "not a query output")
+            parts.append(f"ORDER BY {limit.order_by}"
+                         + (" DESC" if limit.desc else ""))
+        parts.append(f"LIMIT {limit.n}")
     if spec is not None:
         parts.append(f"ERROR {_pct(spec.error)}% "
                      f"CONFIDENCE {_pct(spec.confidence)}%")

@@ -48,6 +48,8 @@ from repro.engine.executor import (EmptySampleError, Executor, PilotStats,
                                    QueryResult)
 from repro.engine.physical import ScanRuntime, plan_constants, scan_cost_bytes
 from repro.engine.sampling import SampleInfo, pad_block_ids
+from repro.engine.staged import (DEFAULT_STAGED_RATES, ShardSubdraw,
+                                 build_sharded_ladder, prepare_dist_subdraw)
 from repro.engine.table import BlockTable
 
 
@@ -55,9 +57,10 @@ class DistExecutor(Executor):
     """An :class:`Executor` whose catalog may hold partitioned tables."""
 
     def __init__(self, catalog: Dict[str, BlockTable], *,
-                 use_compiled: bool = True, kernel_mode: str = "auto"):
+                 use_compiled: bool = True, kernel_mode: str = "auto",
+                 staged_bytes: Optional[int] = None):
         super().__init__(catalog, use_compiled=use_compiled,
-                         kernel_mode=kernel_mode)
+                         kernel_mode=kernel_mode, staged_bytes=staged_bytes)
         self._sharded: Dict[str, ShardedTable] = {}
         # one engine Executor per shard: its catalog holds the shard slice
         # under the table's name plus every other table's monolithic arrays
@@ -89,6 +92,22 @@ class DistExecutor(Executor):
             self._shard_scanned[name] = [0] * shards
         self._refresh_shard_catalogs(name, table)
         return sharded
+
+    def register_staged(self, name: str,
+                        rates=DEFAULT_STAGED_RATES, *, seed: int = 0) -> None:
+        """Materialize a staged ladder; a sharded table stages PER SHARD —
+        each shard gathers its restriction of the rung's one global draw, so
+        the staged realization is shard-count-independent exactly like a
+        fresh ``shard_block_ids`` draw."""
+        if not self.use_compiled:
+            return
+        snap = self._shard_snapshot(name)
+        if snap is None:
+            return super().register_staged(name, rates, seed=seed)
+        sharded, executors = snap
+        self.staged.admit(build_sharded_ladder(
+            name, sharded, rates, seed, self.physical.kernel_mode,
+            [ex.catalog for ex in executors]))
 
     def register_table(self, name: str, table: BlockTable) -> None:
         """Plain (monolithic) registration; drops any existing sharding of
@@ -210,23 +229,46 @@ class DistExecutor(Executor):
                 scanned_bytes=scan_cost_bytes(tab, "none"))
         return infos
 
+    def _staged_dist_rung(self, table: str, rate: float, sharded):
+        """(ladder, rung) when the dist draw of ``table`` at ``rate`` can be
+        served from per-shard staged rungs; (ladder, None) when the table
+        has a ladder but must draw fresh (under the ladder's pinned seed)."""
+        lad = self.staged.ladder(table)
+        if lad is None:
+            return None, None
+        if lad.sharded is not sharded or self.physical._use_pallas():
+            return lad, None
+        return lad, lad.rung_for(rate)
+
     def _execute_dist(self, plan: L.Aggregate, table: str,
                       sample: L.SampleClause, sharded: ShardedTable,
                       executors: List[Executor]) -> QueryResult:
         t0 = time.perf_counter()
-        global_ids, parts_ids = shard_block_ids(
-            sharded.num_blocks, sample.rate, sample.seed, sharded)
-        if len(global_ids) == 0:
-            raise EmptySampleError(table, "block", sample.rate)
+        lad, rung = self._staged_dist_rung(table, sample.rate, sharded)
+        seed = sample.seed if lad is None else lad.seed
         stripped = L.strip_samples(plan)
-        parts = self._dispatch_shards(stripped, table, sharded, executors,
-                                      parts_ids)
+        if rung is not None:
+            self.staged.note_hit()
+            global_ids, splits = prepare_dist_subdraw(lad, rung, sample.rate)
+            if len(global_ids) == 0:
+                raise EmptySampleError(table, "block", sample.rate)
+            parts = self._dispatch_staged_shards(stripped, table, sharded,
+                                                 splits)
+        else:
+            if lad is not None:
+                self.staged.note_miss()
+            global_ids, parts_ids = shard_block_ids(
+                sharded.num_blocks, sample.rate, seed, sharded)
+            if len(global_ids) == 0:
+                raise EmptySampleError(table, "block", sample.rate)
+            parts = self._dispatch_shards(stripped, table, sharded, executors,
+                                          parts_ids)
         _, block_sums = merge.merge_block_stats(parts)
         sums, counts = merge.reduce_group_totals(block_sums)
 
         infos = self._replicated_infos(plan, table)
         infos[table] = SampleInfo(
-            "block", sample.rate, sample.seed, int(len(global_ids)),
+            "block", sample.rate, seed, int(len(global_ids)),
             sharded.num_blocks, global_ids,
             scanned_bytes=sum(p.scanned_bytes for p in parts))
         values = self._compose_values(plan, sums, counts, self._upscale(infos))
@@ -275,6 +317,40 @@ class DistExecutor(Executor):
                 scanned_bytes=nbytes))
         return parts
 
+    def _dispatch_staged_shards(self, stripped: L.Aggregate, table: str,
+                                sharded: ShardedTable,
+                                splits: List[ShardSubdraw],
+                                pair_table: Optional[str] = None
+                                ) -> List[merge.ShardPart]:
+        """The staged twin of :meth:`_dispatch_shards`: each shard's sampled
+        blocks are addressed by POSITION within its staged rung and gathered
+        from the pre-staged shard-rung arrays, with the physical block count
+        forced to the fresh per-shard value — same rows, same shapes, same
+        reduction order, so the merged answer is bitwise the fresh one."""
+        params = plan_constants(stripped)
+        raw = []
+        for sd in splits:
+            part = sd.part
+            runtime = ScanRuntime("block", sd.n_real, sd.n_phys, sd.phys,
+                                  ids_dev=sd.phys_dev,
+                                  nreal_dev=sd.nreal_dev)
+            compiled = part.compiler.compile_pilot(stripped, table, runtime,
+                                                   pair_table)
+            raw.append((part, sd.local_ids, sd.n_real,
+                        compiled({table: runtime}, params)))
+        parts = []
+        for part, local_ids, n_real, (bs_d, _present, pair_d) in raw:
+            nbytes = n_real * sharded.block_rows * sharded.row_bytes
+            self._note_shard_scan(table, part.shard_index, nbytes)
+            parts.append(merge.ShardPart(
+                shard_index=part.shard_index,
+                global_ids=local_ids.astype(np.int64) + part.start_block,
+                block_sums=np.asarray(bs_d, np.float64)[:n_real],
+                pair_sums=(None if pair_d is None
+                           else np.asarray(pair_d, np.float64)[:n_real]),
+                scanned_bytes=nbytes))
+        return parts
+
     # -- pilot ----------------------------------------------------------------
     def execute_pilot(self, plan: L.Aggregate, pilot_table: str,
                       theta_p: float, seed: int,
@@ -286,17 +362,28 @@ class DistExecutor(Executor):
                                          pair_tables)
         sharded, executors = snap
         t0 = time.perf_counter()
-        global_ids, parts_ids = shard_block_ids(
-            sharded.num_blocks, theta_p, seed, sharded)
+        lad, rung = self._staged_dist_rung(pilot_table, theta_p, sharded)
+        seed = seed if lad is None else lad.seed
         names = [a.name for a in plan.aggs] + ["__rows"]
         pair_table = pair_tables[0] if pair_tables else None
         replicated = sum(
             self.catalog[t].total_bytes()
             for t in {s.table for s in plan.scans()} if t != pilot_table)
-        parts = (self._dispatch_shards(L.strip_samples(plan), pilot_table,
-                                       sharded, executors, parts_ids,
-                                       pair_table)
-                 if len(global_ids) else [])
+        if rung is not None:
+            self.staged.note_hit()
+            global_ids, splits = prepare_dist_subdraw(lad, rung, theta_p)
+            parts = (self._dispatch_staged_shards(
+                L.strip_samples(plan), pilot_table, sharded, splits,
+                pair_table) if len(global_ids) else [])
+        else:
+            if lad is not None:
+                self.staged.note_miss()
+            global_ids, parts_ids = shard_block_ids(
+                sharded.num_blocks, theta_p, seed, sharded)
+            parts = (self._dispatch_shards(L.strip_samples(plan), pilot_table,
+                                           sharded, executors, parts_ids,
+                                           pair_table)
+                     if len(global_ids) else [])
         has_pair = bool(parts) and parts[0].pair_sums is not None
         return merge.merge_pilot_stats(
             table=pilot_table,

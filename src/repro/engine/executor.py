@@ -39,6 +39,8 @@ from repro.engine.physical import (PhysicalCompiler, ScanRuntime,
                                    plan_constants, scan_cost_bytes)
 from repro.engine.sampling import (SampleInfo, block_sample, draw_block_ids,
                                    pad_block_ids, row_sample)
+from repro.engine.staged import (DEFAULT_STAGED_RATES, SampleCatalog,
+                                 build_ladder, prepare_mono_subdraw)
 from repro.engine.table import BlockTable
 
 
@@ -99,10 +101,15 @@ class PilotStats:
 
 class Executor:
     def __init__(self, catalog: Dict[str, BlockTable], *,
-                 use_compiled: bool = True, kernel_mode: str = "auto"):
+                 use_compiled: bool = True, kernel_mode: str = "auto",
+                 staged_bytes: Optional[int] = None):
         self.catalog = dict(catalog)
         self.use_compiled = use_compiled
         self.physical = PhysicalCompiler(self.catalog, kernel_mode=kernel_mode)
+        # Pre-staged block-sample ladders (repro.engine.staged): tables
+        # opted in via register_staged() serve covered sampled scans from
+        # materialized rungs; staged_bytes bounds rung-array residency.
+        self.staged = SampleCatalog(max_bytes=staged_bytes)
         # Execution counters, lock-guarded: the concurrent runtime
         # (repro.runtime) runs queries from a worker pool, and its tests /
         # benchmarks assert pilot-sharing through exactly these numbers
@@ -132,6 +139,30 @@ class Executor:
         its group-domain cache) rather than calling this directly.
         """
         self.catalog[name] = table
+        # Staged lifecycle: the replaced table's ladder holds stale gathered
+        # slabs — drop it (re-staging is the registrant's call); other
+        # ladders replicate this table in their rung-compiler catalogs and
+        # must see the new arrays.
+        self.staged.invalidate(name)
+        self.staged.refresh_replicated(name, table)
+
+    def register_staged(self, name: str,
+                        rates=DEFAULT_STAGED_RATES, *, seed: int = 0) -> None:
+        """Materialize a staged sample ladder for catalog table ``name``.
+
+        ``seed`` pins the table's one staging realization: EVERY block draw
+        of the table (staged hit or fresh miss, pilot or final) replays it,
+        which is what makes staged and fresh answers bit-identical.  The
+        eager executor has no physical layer to serve rungs through, so
+        staging is a no-op there (``use_compiled=False``).
+        """
+        if name not in self.catalog:
+            raise KeyError(f"unknown table {name!r}")
+        if not self.use_compiled:
+            return
+        self.staged.admit(build_ladder(
+            name, self.catalog[name], rates, seed,
+            self.physical.kernel_mode, self.catalog))
 
     # -- table metadata (the "DBMS statistics" TAQA consults) ---------------
     def table_rows(self, name: str) -> int:
@@ -147,22 +178,40 @@ class Executor:
         return self.catalog[name].total_bytes()
 
     def compile_cache_info(self):
-        """Hit/miss/size counters of the physical-plan compile cache."""
-        return self.physical.cache_info()
+        """Hit/miss/size counters of the physical-plan compile cache
+        (including every staged rung's compiler) plus staged-path
+        hit/miss counters."""
+        info = self.physical.cache_info()
+        rung_hits, rung_misses, rung_size = self.staged.compile_totals()
+        info.hits += rung_hits
+        info.misses += rung_misses
+        info.size += rung_size
+        info.staged_hits = self.staged.hits
+        info.staged_misses = self.staged.misses
+        return info
+
+    def staged_info(self) -> Dict[str, object]:
+        """Staged-catalog serving counters and per-table ladder state."""
+        return self.staged.info()
 
     # -- host-side sampling decisions ---------------------------------------
     def _scan_runtimes(
-        self, plan: L.Plan,
+        self, plan: L.Plan, exclude: Optional[str] = None,
     ) -> Tuple[Dict[str, ScanRuntime], Dict[str, SampleInfo]]:
         """Draw every scan's TABLESAMPLE decision (host RNG, as a DBMS picks
         pages before scanning) and package it as compiled-executable inputs.
 
         Uses the same RNG stream as the eager samplers, so the two paths see
-        identical samples for identical seeds.
+        identical samples for identical seeds.  A table with a staged ladder
+        draws from its pinned staging seed (one realization per table —
+        hits and misses agree bitwise); ``exclude`` skips one table whose
+        runtime the staged route supplies itself.
         """
         runtimes: Dict[str, ScanRuntime] = {}
         infos: Dict[str, SampleInfo] = {}
         for s in plan.scans():
+            if s.table == exclude:
+                continue
             table = self.catalog[s.table]
             if s.sample is None:
                 runtimes[s.table] = ScanRuntime("none")
@@ -171,11 +220,17 @@ class Executor:
                     np.arange(table.num_blocks),
                     scanned_bytes=scan_cost_bytes(table, "none"))
             elif s.sample.method == "block":
-                ids = draw_block_ids(table.num_blocks, s.sample.rate, s.sample.seed)
+                lad = self.staged.ladder(s.table)
+                seed = s.sample.seed if lad is None else lad.seed
+                if lad is not None and s.sample.rate < 1.0:
+                    # a ladder-bearing table drawn fresh: rate uncovered,
+                    # rung arrays evicted, or a route that bypasses staging
+                    self.staged.note_miss()
+                ids = draw_block_ids(table.num_blocks, s.sample.rate, seed)
                 phys, n_real, n_phys = pad_block_ids(ids, table.num_blocks)
                 runtimes[s.table] = ScanRuntime("block", n_real, n_phys, phys)
                 infos[s.table] = SampleInfo(
-                    "block", s.sample.rate, s.sample.seed, n_real,
+                    "block", s.sample.rate, seed, n_real,
                     table.num_blocks, ids,
                     scanned_bytes=scan_cost_bytes(table, "block", n_real))
             else:
@@ -283,7 +338,75 @@ class Executor:
             return self._execute_compiled(plan)
         return self._execute_eager(plan)
 
+    def _staged_route(self, plan: L.Aggregate):
+        """(table, SampleClause, ladder, rung) when ``plan`` can run against
+        a monolithic staged rung, else None (the fresh path — which still
+        draws under the ladder seed, so both routes agree bitwise).
+
+        Conservative like ``dist._dist_route``: compiled XLA lowering only,
+        exactly one block-sampled (rate < 1) scan, and that scan's table
+        must hold a resident monolithic rung covering the rate.
+        """
+        if not self.use_compiled or self.physical._use_pallas():
+            return None
+        sampled = [s for s in plan.scans()
+                   if s.sample is not None and s.sample.rate < 1.0]
+        if len(sampled) != 1 or sampled[0].sample.method != "block":
+            return None
+        target = sampled[0]
+        lad = self.staged.ladder(target.table)
+        if lad is None or lad.sharded is not None:
+            return None
+        rung = lad.rung_for(target.sample.rate)
+        if rung is None:
+            return None
+        return target.table, target.sample, lad, rung
+
+    def _execute_staged(self, plan: L.Aggregate, table: str, sample,
+                        lad, rung) -> QueryResult:
+        """Execute against a staged rung: memoized sub-draw (a restriction
+        of the ladder's one realization), block POSITIONS within the rung in
+        place of global block ids, and the rung's own compiler — with the
+        physical block count forced to the fresh path's value, the compiled
+        graph gathers the same rows in the same order from the small staged
+        arrays, so the answer is bitwise identical to a fresh draw's.
+        """
+        t0 = time.perf_counter()
+        origin = self.catalog[table]
+        sub = prepare_mono_subdraw(lad, rung, sample.rate)
+        self.staged.note_hit()
+        if sub.n_real == 0:
+            # a fresh draw under the pinned seed would be empty too
+            raise EmptySampleError(table, "block", sample.rate)
+        runtimes, infos = self._scan_runtimes(plan, exclude=table)
+        self._check_empty(infos)
+        runtimes[table] = ScanRuntime("block", sub.n_real, sub.n_phys,
+                                      sub.phys, ids_dev=sub.phys_dev,
+                                      nreal_dev=sub.nreal_dev)
+        infos[table] = SampleInfo(
+            "block", sample.rate, lad.seed, sub.n_real, lad.num_blocks,
+            sub.sub_ids,
+            scanned_bytes=scan_cost_bytes(origin, "block", sub.n_real))
+        compiled = rung.compiler.compile_query(plan, runtimes)
+        sums_d, counts_d = compiled(runtimes, plan_constants(plan))
+        sums = np.asarray(sums_d, dtype=np.float64)
+        counts = np.asarray(counts_d, dtype=np.float64)
+        values = self._compose_values(plan, sums, counts, self._upscale(infos))
+        return QueryResult(
+            agg_names=[a.name for a in plan.aggs],
+            values=values,
+            raw_sums=sums,
+            group_counts=counts,
+            group_present=counts > 0,
+            scanned_bytes=compiled.scanned_bytes(runtimes),
+            sample_infos=infos,
+            wall_time_s=time.perf_counter() - t0,
+        )
+
     def _execute_compiled(self, plan: L.Aggregate) -> QueryResult:
+        route = self._staged_route(plan)
+        if route is not None:
+            return self._execute_staged(plan, *route)
         t0 = time.perf_counter()
         runtimes, infos = self._scan_runtimes(plan)
         self._check_empty(infos)
@@ -380,6 +503,13 @@ class Executor:
         drawn: Dict[int, tuple] = {}
         buckets: Dict[tuple, List[int]] = {}
         for i, plan in enumerate(plans):
+            if self._staged_route(plan) is not None:
+                # staged members run solo against their rung arrays — their
+                # dispatch is already the cheap path, and batching them
+                # would redraw fresh (the ladder seed keeps that bitwise
+                # identical, but it forfeits the staged win)
+                results[i] = self._execute_captured(plan)
+                continue
             runtimes, infos = self._scan_runtimes(plan)
             try:
                 self._check_empty(infos)
@@ -454,6 +584,10 @@ class Executor:
         incremented by :meth:`repro.core.taqa.PilotDB.run_pilot` — a stage's
         Bernoulli-undershoot retries re-enter this method but are one stage.
         """
+        # A staged pilot table draws from its pinned staging seed on EVERY
+        # path (compiled, eager, staged rung), so retries and route changes
+        # can never fork the realization.
+        seed = self.staged.seed_for(pilot_table, seed)
         # The compiled lowering traces one pair table; the (currently unused
         # by TAQA) multi-pair shape takes the eager path so both paths return
         # pair_sums for every requested table.
@@ -467,8 +601,23 @@ class Executor:
                                 pair_tables) -> PilotStats:
         t0 = time.perf_counter()
         table = self.catalog[pilot_table]
-        ids = draw_block_ids(table.num_blocks, theta_p, seed)
-        n_real = int(len(ids))
+        # Staged route: serve the pilot draw as a sub-draw of the table's
+        # staged realization (execute_pilot already pinned ``seed`` to the
+        # ladder's, so hit and miss replay one realization either way).
+        lad = self.staged.ladder(pilot_table)
+        rung = None
+        if (lad is not None and lad.sharded is None
+                and not self.physical._use_pallas()):
+            rung = lad.rung_for(theta_p)
+        if rung is not None:
+            sub = prepare_mono_subdraw(lad, rung, theta_p)
+            self.staged.note_hit()
+            ids, n_real = sub.sub_ids, sub.n_real
+        else:
+            if lad is not None:
+                self.staged.note_miss()
+            ids = draw_block_ids(table.num_blocks, theta_p, seed)
+            n_real = int(len(ids))
         names = [a.name for a in plan.aggs] + ["__rows"]
 
         if n_real == 0:
@@ -483,11 +632,20 @@ class Executor:
                 pair_sums={}, right_total_blocks={}, scanned_bytes=scanned,
                 wall_time_s=time.perf_counter() - t0)
 
-        phys, n_real, n_phys = pad_block_ids(ids, table.num_blocks)
-        runtime = ScanRuntime("block", n_real, n_phys, phys)
+        if rung is not None:
+            # positions within the rung, padded to the FRESH physical block
+            # count — identical graph shapes and masking, smaller gather
+            runtime = ScanRuntime("block", sub.n_real, sub.n_phys, sub.phys,
+                                  ids_dev=sub.phys_dev,
+                                  nreal_dev=sub.nreal_dev)
+            compiler = rung.compiler
+        else:
+            phys, n_real, n_phys = pad_block_ids(ids, table.num_blocks)
+            runtime = ScanRuntime("block", n_real, n_phys, phys)
+            compiler = self.physical
         pair_table = pair_tables[0] if pair_tables else None
-        compiled = self.physical.compile_pilot(plan, pilot_table, runtime,
-                                               pair_table)
+        compiled = compiler.compile_pilot(plan, pilot_table, runtime,
+                                          pair_table)
         # One executable from sampled scan to per-block statistics — zero
         # host syncs in between; the conversions below are the boundary.
         bs_d, present_d, pair_d = compiled({pilot_table: runtime},

@@ -114,6 +114,11 @@ class ScanRuntime:
     n_phys: int = 0                         # bucketed physical block count
     ids: Optional[np.ndarray] = None        # (n_phys,) int32, zero-padded
     keep_mask: Optional[np.ndarray] = None  # (padded_rows,) bool (row method)
+    # Pre-staged device copies of ids/n_real (repro.engine.staged memoizes a
+    # sub-draw once and replays it every query): when set, the per-call
+    # host->device transfer is skipped.  Values must match ids/n_real.
+    ids_dev: Optional[object] = None
+    nreal_dev: Optional[object] = None
 
     def sig(self) -> tuple:
         if self.method == "block":
@@ -533,8 +538,10 @@ class _CompiledBase:
             r = runtimes.get(name)
             method = self.methods.get(name, "none")
             if method == "block":
-                rt["ids"][name] = jnp.asarray(r.ids, jnp.int32)
-                rt["nreal"][name] = jnp.asarray(r.n_real, jnp.int32)
+                rt["ids"][name] = r.ids_dev if r.ids_dev is not None \
+                    else jnp.asarray(r.ids, jnp.int32)
+                rt["nreal"][name] = r.nreal_dev if r.nreal_dev is not None \
+                    else jnp.asarray(r.n_real, jnp.int32)
             elif method == "row":
                 rt["mask"][name] = jnp.asarray(r.keep_mask)
         rt["params"] = jnp.asarray(np.asarray(params, np.float32))
@@ -609,6 +616,10 @@ class CacheInfo:
     hits: int = 0
     misses: int = 0
     size: int = 0
+    # Staged-sample-catalog serving counters (repro.engine.staged), filled
+    # in by Executor.compile_cache_info; zero for a bare compiler.
+    staged_hits: int = 0
+    staged_misses: int = 0
 
 
 class PhysicalCompiler:

@@ -78,6 +78,25 @@ def restrict_block_ids(ids: np.ndarray, lo: int, hi: int) -> np.ndarray:
     return (ids[(ids >= lo) & (ids < hi)] - lo).astype(np.int32)
 
 
+def subdraw_positions(rung_ids: np.ndarray, num_blocks: int, rate: float,
+                      seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Sub-draw at ``rate`` from a staged rung drawn at a rate >= ``rate``
+    with the SAME seed, returning ``(sub_ids, positions)``.
+
+    The nesting property of the one-uniform-vector Bernoulli draw
+    (``rng.random(N) < rate``) makes the sub-draw a *restriction* of the
+    rung's realization: every block kept at rate r is also kept at any
+    R >= r under the same seed, so ``sub_ids`` is guaranteed to be a subset
+    of ``rung_ids`` and ``positions`` — indices of the sub-drawn blocks
+    WITHIN the rung (both ascending, so searchsorted is exact) — lets a
+    staged rung stand in for the full table without changing which global
+    blocks the query sees (``repro.engine.staged``).
+    """
+    sub_ids = draw_block_ids(num_blocks, rate, seed)
+    positions = np.searchsorted(np.asarray(rung_ids), sub_ids).astype(np.int32)
+    return sub_ids, positions
+
+
 def pad_block_ids(ids: np.ndarray, num_blocks: int) -> tuple[np.ndarray, int, int]:
     """Zero-pad sampled ids to the bucketed physical count.
 

@@ -158,18 +158,26 @@ class SqlGateway:
         * ``result_cache``  — result-cache hit/miss/eviction AND byte
           counters (``bytes_used`` / ``max_bytes``, session-global);
         * ``shard_scanned_bytes`` — per-shard sampled-slab attribution per
-          partitioned table (``repro.dist``), empty when nothing is sharded.
+          partitioned table (``repro.dist``), empty when nothing is sharded;
+        * ``staged``        — the materialized sample-catalog state
+          (:meth:`repro.engine.Executor.staged_info`: hit/miss/eviction
+          counters, per-table ladders, resident bytes), empty when no table
+          was registered with ``staged_rates``.
         """
         compile_info = self.session.compile_cache_info()
         result_info = self.session.result_cache_info()
         shard_info = getattr(self.session.executor, "shard_scan_info",
                              lambda: {})()
+        staged_info = getattr(self.session.executor, "staged_info",
+                              lambda: {})()
         return {
             "gateway": self.stats.as_dict(),
             "compile_cache": {
                 "hits": compile_info.hits,
                 "misses": compile_info.misses,
                 "size": compile_info.size,
+                "staged_hits": compile_info.staged_hits,
+                "staged_misses": compile_info.staged_misses,
             },
             "result_cache": {
                 "hits": result_info.hits,
@@ -184,6 +192,7 @@ class SqlGateway:
             },
             "shard_scanned_bytes": {t: list(v)
                                     for t, v in shard_info.items()},
+            "staged": staged_info,
         }
 
     def results_for(self, client_id: str) -> List[QueryHandle]:

@@ -356,6 +356,115 @@ def test_having_variants_share_one_cached_base_answer(catalog):
     session.close()
 
 
+# ---------------------------------------------------------------------------
+# LIMIT / ORDER BY: post-aggregation top-n selection
+# ---------------------------------------------------------------------------
+
+def test_limit_parses_and_round_trips():
+    from repro.api import LimitClause
+    sql = ("SELECT SUM(l_quantity) AS q FROM lineitem "
+           "GROUP BY l_returnflag MAXGROUPS 3 HAVING q >= 100 "
+           "ORDER BY q DESC LIMIT 2 ERROR 5% CONFIDENCE 95%")
+    parsed = parse_sql(sql)
+    assert parsed.limit == LimitClause(2, order_by="q", desc=True)
+    rendered = render_sql(parsed.query, parsed.spec, parsed.having,
+                          parsed.limit)
+    assert parse_sql(rendered) == parsed
+    # bare LIMIT, explicit ASC (canonicalized away), and no-ERROR spellings
+    for sql in ("SELECT COUNT(*) AS n FROM t LIMIT 5",
+                "SELECT COUNT(*) AS n FROM t GROUP BY g ORDER BY n ASC "
+                "LIMIT 1",
+                "SELECT COUNT(*) AS n FROM t ORDER BY n LIMIT 3 "
+                "ERROR 5% CONFIDENCE 95%"):
+        p = parse_sql(sql)
+        assert p.limit is not None and not p.limit.desc
+        assert parse_sql(render_sql(p.query, p.spec, p.having, p.limit)) == p
+
+
+def test_limit_rejections():
+    with pytest.raises(SqlSyntaxError, match="ORDER BY requires LIMIT"):
+        parse_sql("SELECT COUNT(*) AS n FROM t ORDER BY n DESC")
+    with pytest.raises(SqlSyntaxError, match="not a SELECT output"):
+        parse_sql("SELECT COUNT(*) AS n FROM t ORDER BY m LIMIT 2")
+    with pytest.raises(SqlSyntaxError, match="positive integer"):
+        parse_sql("SELECT COUNT(*) AS n FROM t LIMIT 0")
+    with pytest.raises(SqlSyntaxError, match="positive integer"):
+        parse_sql("SELECT COUNT(*) AS n FROM t LIMIT 2.5")
+
+
+def test_limit_selects_top_groups_on_answer(catalog):
+    """ORDER BY <agg> DESC LIMIT n keeps the n largest-estimate groups in
+    group_present; estimates are untouched; bare LIMIT keeps the first n
+    present groups in group-id order."""
+    session = Session(dict(catalog), seed=0)
+    base = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                       "GROUP BY l_returnflag ERROR 5% CONFIDENCE 95%")
+    vals = np.asarray(base.result().values[0])
+    assert np.asarray(base.result().group_present).all()
+    top = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                      "GROUP BY l_returnflag ORDER BY q DESC LIMIT 1 "
+                      "ERROR 5% CONFIDENCE 95%")
+    expect = np.zeros(len(vals), bool)
+    expect[int(np.argmax(vals))] = True
+    np.testing.assert_array_equal(np.asarray(top.result().group_present),
+                                  expect)
+    np.testing.assert_array_equal(np.asarray(top.result().values),
+                                  base.result().values)
+    first2 = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                         "GROUP BY l_returnflag LIMIT 2 "
+                         "ERROR 5% CONFIDENCE 95%")
+    got = np.asarray(first2.result().group_present)
+    assert got.sum() == 2 and got[:2].all()
+    session.close()
+
+
+def test_limit_applies_after_having(catalog):
+    """HAVING filters first, then LIMIT ranks the survivors — a group
+    cleared by HAVING can never be selected by LIMIT."""
+    session = Session(dict(catalog), seed=0)
+    base = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                       "GROUP BY l_returnflag ERROR 5% CONFIDENCE 95%")
+    vals = np.asarray(base.result().values[0])
+    cut = float(np.sort(vals)[-1])  # HAVING q < max clears the top group
+    h = session.sql("SELECT SUM(l_quantity) AS q FROM lineitem "
+                    f"GROUP BY l_returnflag HAVING q < {cut} "
+                    "ORDER BY q DESC LIMIT 1 ERROR 5% CONFIDENCE 95%")
+    got = np.asarray(h.result().group_present)
+    runner_up = np.zeros(len(vals), bool)
+    runner_up[int(np.argsort(vals)[-2])] = True
+    np.testing.assert_array_equal(got, runner_up)
+    session.close()
+
+
+def test_limit_variants_share_one_cached_base_answer(catalog):
+    """LIMIT (like HAVING) is not part of the plan/seed/cache key:
+    LIMIT-varied re-issues hit ONE cached base answer and re-select it."""
+    session = Session(dict(catalog), seed=0)
+    template = ("SELECT SUM(l_quantity) AS q FROM lineitem "
+                "GROUP BY l_returnflag{limit} ERROR 5% CONFIDENCE 95%")
+    first = session.sql(template.format(limit=""))
+    assert not first.cached
+    n_present = int(np.asarray(first.result().group_present).sum())
+    assert n_present > 1
+    top1 = session.sql(template.format(limit=" ORDER BY q DESC LIMIT 1"))
+    assert top1.cached  # same (query, spec, seed) -> the cached base
+    assert int(np.asarray(top1.result().group_present).sum()) == 1
+    bare = session.sql(template.format(limit=""))
+    assert bare.cached
+    assert int(np.asarray(bare.result().group_present).sum()) == n_present
+    session.close()
+
+
+def test_limit_order_by_unknown_aggregate_rejected_by_builder_path(catalog):
+    from repro.api import LimitClause, UnsupportedSqlError
+    session = Session(dict(catalog), seed=0)
+    with pytest.raises(UnsupportedSqlError, match="unknown aggregate"):
+        session.submit_query(
+            Q6_HAND, ErrorSpec(error=0.05, confidence=0.95),
+            limit=LimitClause(1, order_by="nope"))
+    session.close()
+
+
 def test_nested_filters_render_one_canonical_where():
     """Nested Filter nodes collapse into ONE WHERE conjunction with stable
     term order (application order: innermost filter first), right-folded

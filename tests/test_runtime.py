@@ -166,6 +166,24 @@ def test_submission_fair_order_under_interleaved_submissions(catalog):
     session.close()
 
 
+def test_drain_stats_report_resolved_pool_widths(catalog):
+    """DrainStats carries the pool widths the drain ACTUALLY ran on (the
+    auto-sized runtime values), never the raw config knob — async_workers=0
+    or None must not surface as a meaningless 0 in reports."""
+    for cfg in (SessionConfig(async_workers=3, pilot_workers=2,
+                              result_cache_size=0),
+                SessionConfig(async_workers=None, result_cache_size=0)):
+        session = Session(catalog, seed=2, config=cfg)
+        session.submit("SELECT COUNT(*) AS n FROM orders")
+        session.drain()
+        stats = session.scheduler.last_drain
+        assert stats.workers == session.runtime.workers \
+            == cfg.resolve_workers()
+        assert stats.pilot_workers == session.runtime.pilot_workers \
+            == cfg.resolve_pilot_workers()
+        session.close()
+
+
 # ---------------------------------------------------------------------------
 # Failure capture under the runtime
 # ---------------------------------------------------------------------------

@@ -199,13 +199,17 @@ def test_gateway_stats_payload_one_stop(aqp_session):
     assert payload["gateway"]["served"] == 3
     info = aqp_session.compile_cache_info()
     assert payload["compile_cache"] == {
-        "hits": info.hits, "misses": info.misses, "size": info.size}
+        "hits": info.hits, "misses": info.misses, "size": info.size,
+        "staged_hits": info.staged_hits, "staged_misses": info.staged_misses}
     rc = aqp_session.result_cache_info()
     assert payload["result_cache"]["hits"] == rc.hits >= 2
     assert payload["result_cache"]["bytes_used"] == rc.bytes_used > 0
     assert payload["result_cache"]["capacity"] == rc.capacity
     # nothing sharded on this session: the dist section is present but empty
     assert payload["shard_scanned_bytes"] == {}
+    # no staged_rates registration: the staged section reports zero state
+    assert payload["staged"]["hits"] == 0
+    assert payload["staged"]["tables"] == {}
 
 
 def test_gateway_stats_payload_shard_attribution():

@@ -1,0 +1,397 @@
+"""Materialized block-sample catalog (repro.engine.staged).
+
+The non-negotiable contract: a table registered with ``staged_rates=``
+pins ONE content-derived staging realization, and every block draw of that
+table — staged hit, fresh miss, pilot, final, monolithic or sharded —
+replays it.  Answers are therefore bit-identical whether a query is served
+from pre-gathered rung arrays or falls back to a fresh draw (rate above
+the top rung, evicted arrays, non-routable plan shapes), for every ladder
+configuration and every shard count.  ``staged_rates=None`` stages nothing
+and reproduces the unstaged behavior exactly.
+
+The *reference* in these tests is a session/executor whose ladder can
+never serve (a single rung at rate 1e-9): every query then misses to a
+fresh draw under the SAME pinned seed, exercising today's gather path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import Session, SessionConfig
+from repro.dist import DistExecutor
+from repro.engine import logical as L
+from repro.engine.datagen import tpch_catalog
+from repro.engine.executor import EmptySampleError, Executor
+from repro.engine.expr import And, Col
+from repro.engine.sampling import draw_block_ids, subdraw_positions
+from repro.engine.staged import (DEFAULT_STAGED_RATES, build_ladder,
+                                 prepare_mono_subdraw, validate_rates)
+
+ROWS, BLOCK_ROWS = 24_000, 64
+SEED = 11
+
+# A ladder whose single rung covers no realistic rate: every query misses
+# to a fresh draw under the ladder's pinned seed — the bitwise reference.
+NEVER = [1e-9]
+LADDER = [0.01, 0.04, 0.16, 0.5]
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(ROWS, BLOCK_ROWS, seed=3)
+
+
+def q6_base(cap=24):
+    pred = And(Col("l_shipdate").between(100, 1500), Col("l_quantity") < cap)
+    return L.Aggregate(
+        child=L.Filter(L.Scan("lineitem"), pred),
+        aggs=(L.AggSpec("sum", Col("l_extendedprice") * Col("l_discount"),
+                        "rev"),
+              L.AggSpec("count", None, "cnt"),
+              L.AggSpec("avg", Col("l_quantity"), "aq")),
+        group_by="l_returnflag", max_groups=3)
+
+
+def q6_plan(seed, rate=0.12, cap=24):
+    return L.rewrite_scans(
+        q6_base(cap), {"lineitem": L.SampleClause("block", rate, seed)})
+
+
+def staged_executor(catalog, rates, *, seed=0, **kw):
+    ex = Executor(dict(catalog), **kw)
+    ex.register_staged("lineitem", rates, seed=seed)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# The restriction invariant + ladder construction
+# ---------------------------------------------------------------------------
+
+def test_subdraw_is_restriction_of_rung():
+    n, seed = 5000, 42
+    rung_ids = draw_block_ids(n, 0.16, seed)
+    for rate in (0.001, 0.01, 0.04, 0.16):
+        sub_ids, positions = subdraw_positions(rung_ids, n, rate, seed)
+        # the sub-draw IS the fresh draw at that rate (same realization) ...
+        np.testing.assert_array_equal(sub_ids, draw_block_ids(n, rate, seed))
+        # ... and every sub-drawn id is addressed by its rung position
+        np.testing.assert_array_equal(rung_ids[positions], sub_ids)
+
+
+def test_validate_rates():
+    assert validate_rates([0.16, 0.01, 0.04]) == (0.01, 0.04, 0.16)
+    assert validate_rates([1.0]) == (1.0,)
+    with pytest.raises(ValueError):
+        validate_rates([])
+    with pytest.raises(ValueError):
+        validate_rates([0.0])
+    with pytest.raises(ValueError):
+        validate_rates([1.5])
+
+
+def test_rung_selection_smallest_covering(catalog):
+    lad = build_ladder("lineitem", catalog["lineitem"], LADDER, 7,
+                       "auto", dict(catalog))
+    assert lad.rung_for(0.005).rate == 0.01
+    assert lad.rung_for(0.01).rate == 0.01   # exact match, no eps rejection
+    assert lad.rung_for(0.05).rate == 0.16
+    assert lad.rung_for(0.3).rate == 0.5
+    assert lad.rung_for(0.7) is None          # above the top rung
+    # rung arrays are the table's sampled slabs with global lineage intact
+    rung = lad.rung_for(0.01)
+    assert rung.table.num_blocks == len(rung.ids)
+    assert rung.table.num_origin_blocks == catalog["lineitem"].num_blocks
+    np.testing.assert_array_equal(
+        np.asarray(rung.table.block_id).reshape(-1, BLOCK_ROWS)[:, 0],
+        rung.ids)
+
+
+def test_prepare_mono_subdraw_memoizes(catalog):
+    lad = build_ladder("lineitem", catalog["lineitem"], LADDER, 7,
+                       "auto", dict(catalog))
+    rung = lad.rung_for(0.04)
+    s1 = prepare_mono_subdraw(lad, rung, 0.03)
+    s2 = prepare_mono_subdraw(lad, rung, 0.03)
+    assert s1 is s2  # warm path skips the host RNG entirely
+    # the forced physical count matches the fresh path's bucketing
+    from repro.engine.sampling import bucket_blocks
+    assert s1.n_phys == min(bucket_blocks(max(s1.n_real, 1)),
+                            catalog["lineitem"].num_blocks)
+    assert len(s1.phys) == s1.n_phys
+
+
+# ---------------------------------------------------------------------------
+# Executor-level bit-identity: finals and pilots
+# ---------------------------------------------------------------------------
+
+def test_staged_final_bit_identical_and_counted(catalog):
+    ref = staged_executor(catalog, NEVER)
+    hot = staged_executor(catalog, LADDER)
+    for i, rate in enumerate((0.01, 0.035, 0.12, 0.4)):
+        plan = q6_plan(seed=100 + i, rate=rate, cap=20 + i)
+        a_ref = ref.execute(plan)
+        a_hot = hot.execute(plan)
+        np.testing.assert_array_equal(np.asarray(a_ref.values),
+                                      np.asarray(a_hot.values))
+        np.testing.assert_array_equal(np.asarray(a_ref.group_present),
+                                      np.asarray(a_hot.group_present))
+    assert hot.staged.hits == 4 and hot.staged.misses == 0
+    assert ref.staged.hits == 0 and ref.staged.misses == 4
+    info = hot.compile_cache_info()
+    assert info.staged_hits == 4 and info.staged_misses == 0
+
+
+def test_staged_rate_above_top_rung_falls_back_bit_identically(catalog):
+    ref = staged_executor(catalog, NEVER)
+    hot = staged_executor(catalog, [0.01, 0.04])   # top rung 4%
+    plan = q6_plan(seed=5, rate=0.3)               # required rate above it
+    a_ref = ref.execute(plan)
+    a_hot = hot.execute(plan)
+    np.testing.assert_array_equal(np.asarray(a_ref.values),
+                                  np.asarray(a_hot.values))
+    assert hot.staged.hits == 0 and hot.staged.misses == 1
+
+
+def test_staged_pilot_stats_bit_identical(catalog):
+    ref = staged_executor(catalog, NEVER)
+    hot = staged_executor(catalog, LADDER)
+    base = q6_base()  # pilots run on the unsampled plan
+    p_ref = ref.execute_pilot(base, "lineitem", 0.03, seed=123)
+    p_hot = hot.execute_pilot(base, "lineitem", 0.03, seed=123)
+    assert p_ref.n_sampled_blocks == p_hot.n_sampled_blocks > 0
+    np.testing.assert_array_equal(np.asarray(p_ref.block_sums),
+                                  np.asarray(p_hot.block_sums))
+    np.testing.assert_array_equal(np.asarray(p_ref.group_present),
+                                  np.asarray(p_hot.group_present))
+    assert hot.staged.hits == 1 and ref.staged.misses == 1
+
+
+def test_staged_empty_subdraw_raises_like_fresh(catalog):
+    # a rate far below 1/num_blocks: the pinned realization has no block
+    # below the threshold, so BOTH paths see an empty sample
+    ref = staged_executor(catalog, NEVER)
+    hot = staged_executor(catalog, LADDER)
+    rate = 1e-7
+    assert len(draw_block_ids(catalog["lineitem"].num_blocks, rate, 0)) == 0
+    with pytest.raises(EmptySampleError):
+        hot.execute(q6_plan(seed=1, rate=rate))
+    with pytest.raises(EmptySampleError):
+        ref.execute(q6_plan(seed=1, rate=rate))
+    assert hot.staged.hits == 1  # the staged route served the empty verdict
+
+
+def test_register_table_invalidates_stale_ladder(catalog):
+    hot = staged_executor(catalog, LADDER)
+    plan = q6_plan(seed=2, rate=0.1)
+    old = hot.execute(plan)
+    assert hot.staged.hits == 1
+    # re-register with DIFFERENT data: the old rung arrays must not serve
+    table = catalog["lineitem"]
+    scaled = table.with_columns(
+        {**table.columns, "l_extendedprice":
+         table.columns["l_extendedprice"] * 2.0})
+    hot.register_table("lineitem", scaled)
+    assert hot.staged_info()["tables"] == {}  # ladder dropped, not re-staged
+    # restaging on the new data serves the new values, bit-identical to a
+    # pinned-seed fresh draw of the new data — never the stale rung arrays
+    hot.register_staged("lineitem", NEVER, seed=0)
+    fresh = hot.execute(plan)                 # fresh gather of the new data
+    assert not np.array_equal(np.asarray(old.values),
+                              np.asarray(fresh.values))
+    hot.register_staged("lineitem", LADDER, seed=0)
+    restaged = hot.execute(plan)
+    np.testing.assert_array_equal(np.asarray(fresh.values),
+                                  np.asarray(restaged.values))
+
+
+def test_refresh_replicated_other_table(catalog):
+    # a rung compiler replicates OTHER tables; re-registering one must
+    # repoint the replicated entry (same sharing as the main catalog)
+    hot = staged_executor(catalog, LADDER)
+    orders = catalog["orders"]
+    doubled = orders.with_columns(
+        {**orders.columns,
+         "o_totalprice": orders.columns["o_totalprice"] * 2.0})
+    hot.register_table("orders", doubled)
+    lad = hot.staged.ladder("lineitem")
+    for rung in lad.rungs:
+        assert rung.compiler.catalog["orders"] is doubled
+
+
+def test_eviction_keeps_bit_identity(catalog):
+    ref = staged_executor(catalog, NEVER)
+    hot = staged_executor(catalog, LADDER)
+    plan = q6_plan(seed=3, rate=0.1)
+    before = hot.execute(plan)
+    assert hot.staged.hits == 1
+    # squeeze the budget: the ladder's arrays are dropped, the record stays
+    hot.staged.max_bytes = 0
+    with hot.staged._lock:
+        hot.staged._enforce_budget()
+    info = hot.staged_info()
+    assert info["evictions"] == 1 and info["resident_bytes"] == 0
+    assert info["tables"]["lineitem"]["resident_rates"] == []
+    after = hot.execute(plan)     # misses to a fresh draw, same pinned seed
+    assert hot.staged.misses == 1
+    np.testing.assert_array_equal(np.asarray(before.values),
+                                  np.asarray(after.values))
+    np.testing.assert_array_equal(np.asarray(ref.execute(plan).values),
+                                  np.asarray(after.values))
+
+
+def test_staged_bytes_budget_evicts_lru(catalog):
+    one = build_ladder("lineitem", catalog["lineitem"], [0.04], 0,
+                       "auto", dict(catalog))
+    nbytes = one.resident_bytes
+    assert nbytes > 0
+    ex = Executor(dict(catalog), staged_bytes=int(nbytes))
+    ex.register_staged("lineitem", [0.04], seed=0)
+    ex.register_staged("orders", [0.04], seed=0)   # busts the budget
+    info = ex.staged_info()
+    assert info["evictions"] == 1
+    # the LRU victim is lineitem (registered first, never used since)
+    assert info["tables"]["lineitem"]["resident_rates"] == []
+    assert info["tables"]["orders"]["resident_rates"] == [0.04]
+
+
+def test_batched_members_route_staged_solo(catalog):
+    ref = staged_executor(catalog, NEVER)
+    hot = staged_executor(catalog, LADDER)
+    plans = [q6_plan(seed=10 + i, rate=0.08, cap=18 + i) for i in range(4)]
+    ref_out = ref.execute_batch(plans)
+    hot_out = hot.execute_batch(plans)
+    for a, b in zip(ref_out, hot_out):
+        np.testing.assert_array_equal(np.asarray(a.values),
+                                      np.asarray(b.values))
+    assert hot.staged.hits == 4
+
+
+# ---------------------------------------------------------------------------
+# Session-level: ladder configs x shard counts, herds, cached re-issues
+# ---------------------------------------------------------------------------
+
+SQLS = [
+    "SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+    "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 90%",
+    "SELECT AVG(l_quantity) AS aq, COUNT(*) AS n FROM lineitem "
+    "WHERE l_shipdate BETWEEN 100 AND 1500 GROUP BY l_returnflag "
+    "MAXGROUPS 3 ERROR 10% CONFIDENCE 90%",
+]
+
+
+def _answers(catalog, staged_rates, shards):
+    cfg = SessionConfig(large_table_rows=10_000, result_cache_size=0)
+    session = Session(seed=SEED, config=cfg)
+    session.register_table("lineitem", catalog["lineitem"], shards=shards,
+                           staged_rates=staged_rates)
+    out = []
+    for sql in SQLS:
+        a = session.sql(sql).result()
+        out.append((np.asarray(a.values), np.asarray(a.group_present)))
+    stats = dict(session.executor.staged.__dict__)
+    session.close()
+    return out, stats
+
+
+def test_session_bit_identity_across_ladders_and_shards(catalog):
+    ref, _ = _answers(catalog, NEVER, None)
+    served_somewhere = False
+    for rates in (LADDER, [0.5], True, NEVER):
+        for shards in (None, 1, 2, 4):
+            got, stats = _answers(catalog, rates, shards)
+            for (rv, rp), (gv, gp) in zip(ref, got):
+                np.testing.assert_array_equal(rv, gv)
+                np.testing.assert_array_equal(rp, gp)
+            if stats["hits"] > 0:
+                served_somewhere = True
+    assert served_somewhere  # the matrix exercised real staged serving
+
+
+def test_session_staged_rates_none_is_todays_behavior(catalog):
+    cfg = SessionConfig(large_table_rows=10_000)
+    plain, staged_off = [], []
+    for out in (plain, staged_off):
+        session = Session(seed=SEED, config=cfg)
+        session.register_table("lineitem", catalog["lineitem"],
+                               staged_rates=None)
+        for sql in SQLS:
+            out.append(np.asarray(session.sql(sql).result().values))
+        assert session.executor.staged_info()["tables"] == {}
+        session.close()
+    for a, b in zip(plain, staged_off):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_session_herd_shared_pilots_and_cache_bit_identical(catalog):
+    herd = ["SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            f"WHERE l_quantity < {cap} ERROR 8% CONFIDENCE 90%"
+            for cap in (24, 24, 20, 22)]     # verbatim re-issue + constants
+    results = {}
+    for key, rates in (("ref", NEVER), ("hot", LADDER)):
+        cfg = SessionConfig(large_table_rows=10_000, share_pilots=True,
+                            batch_finals=True, result_cache_size=32)
+        session = Session(seed=SEED, config=cfg)
+        session.register_table("lineitem", catalog["lineitem"],
+                               staged_rates=rates)
+        handles = [session.submit(s) for s in herd]
+        session.drain()
+        first = [np.asarray(h.result().values) for h in handles]
+        rerun = [np.asarray(session.sql(s).result().values) for s in herd]
+        assert session.result_cache_info().hits > 0  # re-issues were cached
+        results[key] = first + rerun
+        if key == "hot":
+            assert session.executor.staged.hits > 0
+        session.close()
+    for a, b in zip(results["ref"], results["hot"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_session_validates_staged_rates_before_registering(catalog):
+    session = Session(seed=SEED)
+    with pytest.raises(ValueError):
+        session.register_table("lineitem", catalog["lineitem"],
+                               staged_rates=[2.0])
+    assert "lineitem" not in session.executor.catalog  # rejected atomically
+    session.close()
+
+
+def test_session_exact_fallback_on_empty_staged_sample(catalog):
+    # a 3-block toy table: the pinned realization at the pilot rate is
+    # empty, the pilot escalates, and if everything stays empty the session
+    # falls back to the exact answer — identically with and without rungs
+    tiny = tpch_catalog(3 * BLOCK_ROWS, BLOCK_ROWS, seed=5)
+    out = []
+    for rates in (NEVER, LADDER):
+        session = Session(seed=SEED,
+                          config=SessionConfig(large_table_rows=64))
+        session.register_table("lineitem", tiny["lineitem"],
+                               staged_rates=rates)
+        h = session.sql(SQLS[0])
+        out.append(np.asarray(h.result().values))
+        session.close()
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+def test_gateway_payload_staged_section(catalog):
+    from repro.serve import SqlGateway
+    cfg = SessionConfig(large_table_rows=10_000)
+    session = Session(seed=SEED, config=cfg)
+    session.register_table("lineitem", catalog["lineitem"],
+                           staged_rates=LADDER)
+    gw = SqlGateway(session)
+    gw.submit("c0", SQLS[0])
+    gw.run()
+    staged = gw.stats_payload()["staged"]
+    assert staged["hits"] + staged["misses"] > 0
+    assert staged["tables"]["lineitem"]["rates"] == LADDER
+    assert staged["tables"]["lineitem"]["sharded"] is False
+    session.close()
+
+
+def test_dist_executor_staged_info_reports_sharded(catalog):
+    ex = DistExecutor(dict(catalog))
+    ex.register_sharded("lineitem", catalog["lineitem"], 3)
+    ex.register_staged("lineitem", LADDER, seed=0)
+    info = ex.staged_info()
+    assert info["tables"]["lineitem"]["sharded"] is True
+    assert info["tables"]["lineitem"]["resident_bytes"] > 0
