@@ -1,0 +1,167 @@
+"""Progressive-streaming benchmark: time-to-first-frame vs time-to-final.
+
+Workload: a dashboard herd — a block of verbatim re-issues of one template
+plus a sliding WHERE constant — submitted as STREAMING queries and drained
+through the full concurrent runtime (shared pilots + batched finals).  The
+herd shares one pilot stage, so the moment that pilot lands every member
+receives its advisory :class:`~repro.stream.PilotFrame`; the guaranteed
+:class:`~repro.stream.FinalFrame`\\ s arrive as each batched final bucket
+materializes.  The gap between those two is the whole point of streaming —
+a dashboard paints a provisional number long before the guarantee.
+
+Contract checks run BEFORE any timing is reported (each raises, so
+``run.py --only stream`` exits nonzero on violation):
+
+* every streamed FinalFrame is BITWISE identical to the answer an
+  equal-seed NON-streaming session produces for the same SQL — streaming
+  may only change observability, never values;
+* every member emits exactly one terminal frame, preceded by its advisory
+  PilotFrame;
+* on the herd drain, ALL PilotFrames are emitted before ANY FinalFrame —
+  the shared pilot fans out before the first stage-2 bucket lands.
+
+Reported: median time-to-first-frame vs time-to-final per drain (from
+``DrainStats``), their ratio, and frame counts.  Emits the
+machine-readable ``BENCH_stream.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.run --only stream
+  BENCH_ROWS=200000 PYTHONPATH=src python -m benchmarks.bench_stream
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import SCALE_ROWS, catalog, csv_row, save_results
+from repro.api import Session, SessionConfig
+
+BENCH_STREAM_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_stream.json")
+
+HERD_N = int(os.environ.get("BENCH_HERD_N", 12))
+REPS = int(os.environ.get("BENCH_STREAM_REPS", 3))  # median-of over drains
+
+# Tight error target => finals scan a real block fraction, so the pilot
+# fan-out visibly precedes the stage-2 work it prices.
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < {cap} ERROR 5% CONFIDENCE 95%")
+
+# result cache off: every drain (and every rep) re-executes both stages, so
+# TTFF/TTF measure the pilot fan-out against real final work, not a replay
+CFG = SessionConfig(async_workers=None, share_pilots=True, batch_finals=True,
+                    result_cache_size=0, large_table_rows=100_000)
+
+
+def _workload():
+    sqls = [HERD_SQL.format(cap=24)] * (HERD_N // 2)
+    sqls += [HERD_SQL.format(cap=18 + 2 * i) for i in range(HERD_N - len(sqls))]
+    return sqls
+
+
+def _reference_answers(tables) -> dict:
+    """Equal-seed NON-streaming drain: sql -> answer values (the identity
+    oracle; answers are a pure function of session seed + query content)."""
+    session = Session(tables, seed=17, config=CFG)
+    handles = [session.submit(s) for s in _workload()]
+    session.drain()
+    out = {}
+    for h in handles:
+        ans = h.result()
+        out.setdefault(h.sql, (np.asarray(ans.values), ans.report.fallback))
+    session.close()
+    return out
+
+
+def run() -> dict:
+    tables = {k: v for k, v in catalog().items() if k != "skewed"}
+    reference = _reference_answers(tables)
+
+    session = Session(tables, seed=17, config=CFG)
+    # Warm the jit caches (pilot + every final bucket shape) so the measured
+    # drains time the steady-state serving loop, not first-touch XLA.
+    for s in dict.fromkeys(_workload()):
+        session.sql(s)
+    for s in _workload():
+        session.submit(s, stream=True)
+    session.drain()
+
+    ttffs, ttfs, frame_counts = [], [], []
+    pilot_before_final = True
+    for _ in range(REPS):
+        handles = [session.submit(s, stream=True) for s in _workload()]
+        session.drain()
+        stats = session.scheduler.last_drain
+
+        # -- contract checks (before any timing is trusted) ----------------
+        pilot_emits, final_emits = [], []
+        for h in handles:
+            frames = h.frames()
+            terminals = [f for f in frames if f.terminal]
+            assert len(terminals) == 1, \
+                f"query {h.query_id}: expected exactly one terminal frame"
+            final = terminals[0]
+            ref_values, ref_fallback = reference[h.sql]
+            # a member the planner sends exact (e.g. "no feasible plan
+            # cheaper than exact" at small BENCH_ROWS) must stream an
+            # ExactFrame — and the reference must have gone exact too
+            want_kind = "exact" if ref_fallback is not None else "final"
+            assert final.kind == want_kind, \
+                f"query {h.query_id}: terminal kind {final.kind!r}, " \
+                f"reference says {want_kind!r}"
+            assert np.array_equal(np.asarray(final.answer.values),
+                                  ref_values), \
+                "streamed FinalFrame must be bitwise identical to the " \
+                "non-streaming answer"
+            assert final.answer is h.answer, \
+                "FinalFrame must carry the very answer object the handle " \
+                "delivers"
+            pilots = [f for f in frames if f.kind == "pilot"]
+            if ref_fallback is None:
+                assert pilots and pilots[0].advisory, \
+                    f"query {h.query_id}: missing advisory PilotFrame"
+            pilot_emits += [f.t_emit for f in pilots]
+            final_emits.append(final.t_emit)
+        assert pilot_emits, "herd drain produced no advisory PilotFrames"
+        if max(pilot_emits) >= min(final_emits):
+            pilot_before_final = False
+
+        assert stats.time_to_first_frame_s > 0.0
+        assert stats.time_to_first_frame_s < stats.time_to_final_s, \
+            "time-to-first-frame must be strictly below time-to-final"
+        ttffs.append(stats.time_to_first_frame_s)
+        ttfs.append(stats.time_to_final_s)
+        frame_counts.append(stats.frames_emitted)
+
+    assert pilot_before_final, \
+        "every PilotFrame must be emitted before any FinalFrame on a " \
+        "shared-pilot herd drain"
+    session.close()
+
+    ttff, ttf = float(np.median(ttffs)), float(np.median(ttfs))
+    doc = {"bench": "stream", "rows": SCALE_ROWS, "herd_n": HERD_N,
+           "reps": REPS, "cpu_count": os.cpu_count(),
+           "time_to_first_frame_s": ttff,
+           "time_to_final_s": ttf,
+           "first_frame_speedup": ttf / ttff if ttff else float("nan"),
+           "frames_per_drain": int(np.median(frame_counts)),
+           "bit_identical_to_nonstreaming": True,
+           "pilot_frames_precede_finals": pilot_before_final}
+
+    with open(BENCH_STREAM_PATH, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# wrote {os.path.normpath(BENCH_STREAM_PATH)}", file=sys.stderr)
+    save_results("stream", doc)
+
+    print(csv_row("stream_first_frame", ttff * 1e6,
+                  f"ttf={ttf * 1e6:.1f}us;"
+                  f"speedup={doc['first_frame_speedup']:.2f}x;"
+                  f"frames={doc['frames_per_drain']}"))
+    return doc
+
+
+if __name__ == "__main__":
+    run()

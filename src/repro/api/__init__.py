@@ -11,6 +11,8 @@ from repro.api.sql import (HavingClause, LimitClause, ParsedQuery,
                            SqlSyntaxError, UnsupportedSqlError, parse_sql,
                            render_sql, resolve_string_literals)
 from repro.runtime import BackpressureError, ResultCacheInfo
+from repro.stream import (ErrorFrame, ExactFrame, FinalFrame, Frame,
+                          PilotFrame)
 
 __all__ = [
     "Session",
@@ -34,4 +36,9 @@ __all__ = [
     "UnsupportedSqlError",
     "BackpressureError",
     "ResultCacheInfo",
+    "Frame",
+    "PilotFrame",
+    "FinalFrame",
+    "ExactFrame",
+    "ErrorFrame",
 ]

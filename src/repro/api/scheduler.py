@@ -73,6 +73,14 @@ class DrainStats:
     # echo the (possibly 0 = "auto") configuration knob back
     workers: int = 0
     pilot_workers: int = 0
+    # progressive streaming (repro.stream), over this drain's STREAMING
+    # handles: frames emitted, drain-relative time of the first frame of
+    # any kind (the first advisory estimate a client could render), and of
+    # the last terminal frame (every guarantee delivered).  All 0.0 when no
+    # handle in the batch streamed.
+    frames_emitted: int = 0
+    time_to_first_frame_s: float = 0.0
+    time_to_final_s: float = 0.0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -182,6 +190,23 @@ class QueryScheduler:
         stats.pilot_fanouts = fan1[0] - fan0[0]
         stats.pilot_fanout_wall_s = fan1[1] - fan0[1]
         stats.pilot_fanout_serial_s = fan1[2] - fan0[2]
+        # streaming latency, drain-relative: emission stamps predating this
+        # drain (replayed/synthesized frames of pre-enabled handles) clamp
+        # to 0 rather than going negative
+        emits: List[float] = []
+        finals: List[float] = []
+        for h in completed:
+            if not h.streaming:
+                continue
+            for f in h.frames():
+                emits.append(f.t_emit)
+                if f.terminal:
+                    finals.append(f.t_emit)
+        stats.frames_emitted = len(emits)
+        if emits:
+            stats.time_to_first_frame_s = max(0.0, min(emits) - t0)
+        if finals:
+            stats.time_to_final_s = max(0.0, max(finals) - t0)
         stats.wall_time_s = time.perf_counter() - t0
         self.last_drain = stats
         self.total_drained += len(completed)

@@ -56,7 +56,8 @@ from repro.api.sql import (HavingClause, LimitClause, UnsupportedSqlError,
 from repro.core.spec import ErrorSpec
 from repro.dist import DistExecutor
 from repro.core.taqa import (ApproxAnswer, PilotDB, Query, TaqaReport,
-                             pilot_params, structural_signature)
+                             advisory_estimate, pilot_params,
+                             structural_signature)
 from repro.engine.executor import Executor
 from repro.engine.physical import plan_template
 from repro.engine.staged import DEFAULT_STAGED_RATES, validate_rates
@@ -64,6 +65,8 @@ from repro.engine.table import BlockTable
 from repro.runtime import (AsyncRuntime, CachedAnswer, ResultCache,
                            ResultCacheInfo)
 from repro.runtime import shared_pilot as _shared_pilot
+from repro.stream import (ErrorFrame, FrameBuffer, final_frame_for,
+                          pilot_frame_for)
 
 
 class QueryStatus:
@@ -125,6 +128,13 @@ class QueryHandle:
         default=None, repr=False, compare=False)
     _done_event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
+    # progressive streaming (repro.stream): None until enable_streaming();
+    # the lock serializes terminal-frame emission against late enabling so
+    # every stream ends in EXACTLY one terminal frame
+    _frames: Optional[FrameBuffer] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _frame_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
@@ -157,20 +167,84 @@ class QueryHandle:
             return True
         return self._done_event.wait(timeout)
 
+    # -- progressive streaming (repro.stream) ---------------------------------
+    @property
+    def streaming(self) -> bool:
+        return self._frames is not None
+
+    def enable_streaming(self) -> "QueryHandle":
+        """Attach a frame buffer to this handle (idempotent).
+
+        Queries submitted with ``stream=True`` arrive pre-enabled; enabling
+        later still works — frames emitted before the buffer existed are
+        simply not observed (they are advisory), and enabling on an
+        already-finished handle synthesizes its terminal frame so late
+        subscribers always observe a complete stream.
+        """
+        with self._frame_lock:
+            if self._frames is None:
+                self._frames = FrameBuffer(self.query_id)
+                if self.status == QueryStatus.DONE:
+                    self._frames.push(final_frame_for(
+                        self.query_id, self._answer, cached=self.cached))
+                elif self.status == QueryStatus.FAILED:
+                    self._frames.push(ErrorFrame(
+                        query_id=self.query_id,
+                        error=self.error or "query failed"))
+        return self
+
+    def stream(self, timeout: Optional[float] = None):
+        """Blocking frame iterator: advisory :class:`repro.stream.PilotFrame`
+        estimates as they materialize, then exactly one terminal frame — a
+        :class:`FinalFrame` carrying the SAME answer object ``result()``
+        returns (bitwise identity with the non-streaming path is structural),
+        an :class:`ExactFrame` on fallback, or an :class:`ErrorFrame` on
+        captured failure.  Implicitly enables streaming; ``timeout`` bounds
+        each wait for the next frame."""
+        return self.enable_streaming()._frames.stream(timeout)
+
+    def on_frame(self, cb) -> "QueryHandle":
+        """Register ``cb(frame)`` for every frame of this query; frames
+        already emitted are replayed first, in order (late subscription
+        never loses frames).  Implicitly enables streaming."""
+        self.enable_streaming()._frames.add_callback(cb)
+        return self
+
+    def frames(self) -> list:
+        """Snapshot of the frames emitted so far ([] when not streaming)."""
+        return [] if self._frames is None else self._frames.frames()
+
+    def _emit(self, frame) -> None:
+        """Push an advisory frame if this handle streams (no-op otherwise);
+        terminal frames go through _mark_done/_mark_failed instead."""
+        if self._frames is not None:
+            self._frames.push(frame)
+
     # -- completion (runtime-internal) ----------------------------------------
     def _mark_running(self) -> None:
         if not self.done:
             self.status = QueryStatus.RUNNING
 
     def _mark_done(self, answer: ApproxAnswer, cached: bool = False) -> None:
-        self._answer = answer
-        self.cached = cached
-        self.status = QueryStatus.DONE
+        with self._frame_lock:
+            self._answer = answer
+            self.cached = cached
+            self.status = QueryStatus.DONE
+            if self._frames is not None:
+                self._frames.push(final_frame_for(
+                    self.query_id, answer, cached=cached))
         self._done_event.set()
 
     def _mark_failed(self, error: str) -> None:
-        self.status = QueryStatus.FAILED
-        self.error = error
+        with self._frame_lock:
+            self.status = QueryStatus.FAILED
+            self.error = error
+            if self._frames is not None:
+                # the failure-capture contract extends to streams: execution
+                # failures become a terminal frame, never an exception
+                # raised through a streaming client
+                self._frames.push(ErrorFrame(query_id=self.query_id,
+                                             error=error))
         self._done_event.set()
 
     def result(self) -> ApproxAnswer:
@@ -522,7 +596,7 @@ class Session:
                            f"{self.tables()}")
         return QueryBuilder(self, name)
 
-    def sql(self, text: str) -> QueryHandle:
+    def sql(self, text: str, *, stream: bool = False) -> QueryHandle:
         """Parse and execute dialect SQL synchronously.
 
         Parse-stage rejections — :class:`repro.api.SqlSyntaxError`, and
@@ -530,33 +604,41 @@ class Session:
         as GROUP BY on a non-integer-coded column or an unresolvable string
         literal — raise immediately (the query never existed); execution
         failures are captured on the returned handle.
+
+        ``stream=True`` attaches a frame buffer before execution, so the
+        handle's :meth:`QueryHandle.stream` / :meth:`QueryHandle.on_frame`
+        observe the advisory pilot estimate as well as the terminal frame;
+        the default is byte-for-byte today's non-streaming behavior.
         """
-        handle = self._parse_to_handle(text)
+        handle = self._parse_to_handle(text, stream=stream)
         self._run_handle(handle)
         return handle
 
-    def prepare(self, text: str) -> QueryHandle:
+    def prepare(self, text: str, *, stream: bool = False) -> QueryHandle:
         """Parse dialect SQL into a pending handle without scheduling it —
         for callers that run their own :class:`QueryScheduler` (e.g. a
         gateway keeping its queue separate from the session's)."""
-        return self._parse_to_handle(text)
+        return self._parse_to_handle(text, stream=stream)
 
-    def submit(self, text: str) -> QueryHandle:
+    def submit(self, text: str, *, stream: bool = False) -> QueryHandle:
         """Parse dialect SQL and enqueue it on the session scheduler."""
-        return self.scheduler.submit(self.prepare(text))
+        return self.scheduler.submit(self.prepare(text, stream=stream))
 
-    def execute(self, query: Query, spec: Optional[ErrorSpec] = None) -> QueryHandle:
+    def execute(self, query: Query, spec: Optional[ErrorSpec] = None, *,
+                stream: bool = False) -> QueryHandle:
         """Execute an already-lowered query synchronously (builder path)."""
-        handle = self._make_handle(query, spec)
+        handle = self._make_handle(query, spec, stream=stream)
         self._run_handle(handle)
         return handle
 
     def submit_query(self, query: Query,
                      spec: Optional[ErrorSpec] = None, *,
                      having: Optional[HavingClause] = None,
-                     limit: Optional[LimitClause] = None) -> QueryHandle:
+                     limit: Optional[LimitClause] = None,
+                     stream: bool = False) -> QueryHandle:
         return self.scheduler.submit(
-            self._make_handle(query, spec, having=having, limit=limit))
+            self._make_handle(query, spec, having=having, limit=limit,
+                              stream=stream))
 
     def drain(self, max_queries: Optional[int] = None) -> List[QueryHandle]:
         return self.scheduler.drain(max_queries)
@@ -567,11 +649,12 @@ class Session:
         return self.scheduler.drain_async()
 
     # -- plumbing -------------------------------------------------------------
-    def _parse_to_handle(self, text: str) -> QueryHandle:
+    def _parse_to_handle(self, text: str, *, stream: bool = False) -> QueryHandle:
         parsed = parse_sql(text, max_groups_resolver=self.infer_max_groups,
                            spec_kwargs=self.config.spec_kwargs)
         return self._make_handle(parsed.query, parsed.spec, sql=text,
-                                 having=parsed.having, limit=parsed.limit)
+                                 having=parsed.having, limit=parsed.limit,
+                                 stream=stream)
 
     def _resolve_dictionary(self, column: str, literal: str) -> int:
         d = self._dictionaries.get(column)
@@ -640,7 +723,8 @@ class Session:
     def _make_handle(self, query: Query, spec: Optional[ErrorSpec],
                      sql: Optional[str] = None,
                      having: Optional[HavingClause] = None,
-                     limit: Optional[LimitClause] = None) -> QueryHandle:
+                     limit: Optional[LimitClause] = None,
+                     stream: bool = False) -> QueryHandle:
         # resolve + validate before deriving a seed: rejected queries never
         # enter the seed/cache keyspace
         query = resolve_string_literals(query, self._resolve_dictionary,
@@ -663,6 +747,8 @@ class Session:
                              having=having, limit=limit, signature=signature,
                              group_key=plan_template(signature))
         self._next_id += 1
+        if stream:
+            handle.enable_streaming()
         return handle
 
     def failed_handle(self, sql: str, error: str) -> QueryHandle:
@@ -693,6 +779,13 @@ class Session:
         entry = self.result_cache.get(self._cache_key(handle))
         if entry is None:
             return False
+        if handle.streaming and isinstance(entry, CachedAnswer) \
+                and entry.pilot is not None:
+            # replay the compact pilot summary recorded at insert as an
+            # advisory frame, so cached re-issues stream the same shape
+            # (pilot then final); entries without one stream single-frame
+            handle._emit(pilot_frame_for(handle.query_id, entry.pilot,
+                                         from_cache=True))
         answer = entry.to_answer() if isinstance(entry, CachedAnswer) else entry
         if handle.having is not None:
             # the cache holds the unfiltered base answer (HAVING is not in
@@ -709,7 +802,8 @@ class Session:
                          for s in query.child.scans())
 
     def _complete_handle(self, handle: QueryHandle, answer: ApproxAnswer,
-                         gen_snapshot: Optional[tuple] = None) -> bool:
+                         gen_snapshot: Optional[tuple] = None,
+                         pilot_est=None) -> bool:
         """Finish a handle, guarding against mid-flight table replacement.
 
         If :meth:`register_table` replaced any scanned table after execution
@@ -721,6 +815,10 @@ class Session:
         cleanly against the new data).  The result-cache insert is guarded
         by the same generation check, under the cache lock.  Returns True
         when the handle completed with the answer.
+
+        ``pilot_est`` (the query's advisory :class:`PilotEstimate`, when its
+        pilot produced one) is recorded on the cache entry so cached
+        re-issues can replay a provisional frame (see :meth:`_serve_cached`).
         """
         current = self._scan_generations(handle.query)
         if gen_snapshot is not None and gen_snapshot != current:
@@ -730,7 +828,8 @@ class Session:
                 "resubmit to run against the new data")
             return False
         self.result_cache.put(
-            self._cache_key(handle), CachedAnswer.from_answer(answer),
+            self._cache_key(handle),
+            CachedAnswer.from_answer(answer, pilot=pilot_est),
             (s.table for s in handle.query.child.scans()),
             guard=None if gen_snapshot is None else
             (lambda: gen_snapshot == self._scan_generations(handle.query)))
@@ -749,13 +848,22 @@ class Session:
         handle._mark_running()
         gen = self._scan_generations(handle.query)
         try:
+            pilot_est = None
             if handle.spec is None:
                 ans = self.db.exact(handle.query)
             else:
-                ans = self.db.query(handle.query, handle.spec,
-                                    seed=handle.seed,
-                                    pilot_seed=self._pilot_seed_for(handle))
-            self._complete_handle(handle, ans, gen)
+                # run the two TAQA stages separately (instead of db.query)
+                # so the advisory estimate streams the moment stage 1
+                # returns — before any stage-2 dispatch
+                outcome = self.db.run_pilot(handle.query, handle.spec,
+                                            self._pilot_seed_for(handle))
+                pilot_est = advisory_estimate(handle.query, outcome,
+                                              handle.spec.confidence)
+                if pilot_est is not None:
+                    handle._emit(pilot_frame_for(handle.query_id, pilot_est))
+                ans = self.db.finish_from_pilot(handle.query, handle.spec,
+                                                outcome, handle.seed)
+            self._complete_handle(handle, ans, gen, pilot_est=pilot_est)
         except Exception as e:  # capture, don't raise through the client
             handle._mark_failed(f"{type(e).__name__}: {e}")
         return handle

@@ -201,20 +201,31 @@ class DistExecutor(Executor):
         self._count("queries_run")
         return self._execute_dist(plan, route[0], route[1], *snap)
 
-    def execute_batch(self, plans: List[L.Aggregate]) -> List[object]:
+    def execute_batch(self, plans: List[L.Aggregate],
+                      on_result=None) -> List[object]:
         """Dist-routed members run as per-shard dispatches (bit-identical
-        to their solo execution by construction); the rest batch as usual."""
+        to their solo execution by construction); the rest batch as usual.
+        ``on_result`` keeps the base contract: dist members announce per
+        member, the rest via the forwarded (index-remapped) callback."""
         dist_idx = {i for i, p in enumerate(plans)
                     if self._dist_route(p) is not None}
         if not dist_idx:
-            return super().execute_batch(plans)
+            return super().execute_batch(plans, on_result=on_result)
         results: List[object] = [None] * len(plans)
         rest = [i for i in range(len(plans)) if i not in dist_idx]
         if rest:
-            for i, r in zip(rest, super().execute_batch([plans[i] for i in rest])):
+            remap = (None if on_result is None
+                     else (lambda j, r: on_result(rest[j], r)))
+            for i, r in zip(rest, super().execute_batch(
+                    [plans[i] for i in rest], on_result=remap)):
                 results[i] = r
         for i in sorted(dist_idx):
             results[i] = self._execute_captured(plans[i])
+            if on_result is not None:
+                try:
+                    on_result(i, results[i])
+                except Exception:
+                    pass
         return results
 
     def _replicated_infos(self, plan: L.Aggregate, table: str) -> Dict[str, SampleInfo]:

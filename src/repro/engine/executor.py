@@ -468,9 +468,18 @@ class Executor:
         except EmptySampleError as e:
             return e
 
-    def execute_batch(self, plans: List[L.Aggregate]) -> List[object]:
+    def execute_batch(self, plans: List[L.Aggregate],
+                      on_result=None) -> List[object]:
         """Execute several plans, batching same-signature members into ONE
         device dispatch each (see ``physical.compile_batched_query``).
+
+        ``on_result(i, result)`` (optional) is invoked the moment
+        ``plans[i]``'s entry materializes — per member on the solo/fallback
+        paths, per bucket chunk on the batched path — so callers can deliver
+        early answers while later buckets are still dispatching (the
+        progressive-streaming drain).  The callback must not raise; an
+        escaping exception is swallowed here — delivery machinery must never
+        sink the batch (callers' completion loops still own every entry).
 
         Members are grouped by their solo compile key — the constant-hoisted
         plan signature including sampling methods and bucketed shapes — and
@@ -494,10 +503,19 @@ class Executor:
         saves.
         """
         results: List[object] = [None] * len(plans)
+
+        def _land(i: int, res: object) -> None:
+            results[i] = res
+            if on_result is not None:
+                try:
+                    on_result(i, res)
+                except Exception:
+                    pass
+
         if (not self.use_compiled or self.physical._use_pallas()
                 or len(plans) < 2):
             for i, p in enumerate(plans):
-                results[i] = self._execute_captured(p)
+                _land(i, self._execute_captured(p))
             return results
 
         drawn: Dict[int, tuple] = {}
@@ -508,14 +526,14 @@ class Executor:
                 # dispatch is already the cheap path, and batching them
                 # would redraw fresh (the ladder seed keeps that bitwise
                 # identical, but it forfeits the staged win)
-                results[i] = self._execute_captured(plan)
+                _land(i, self._execute_captured(plan))
                 continue
             runtimes, infos = self._scan_runtimes(plan)
             try:
                 self._check_empty(infos)
             except EmptySampleError as e:
                 self._count("queries_run")
-                results[i] = e
+                _land(i, e)
                 continue
             drawn[i] = (runtimes, infos)
             key = self.physical.query_signature(plan, runtimes)
@@ -527,7 +545,7 @@ class Executor:
                 chunk, idxs = idxs[:take], idxs[take:]
                 if len(chunk) == 1:
                     # the solo path redraws the same content-derived sample
-                    results[chunk[0]] = self._execute_captured(plans[chunk[0]])
+                    _land(chunk[0], self._execute_captured(plans[chunk[0]]))
                     continue
                 try:
                     self._run_bucket(plans, chunk, drawn, results)
@@ -539,6 +557,14 @@ class Executor:
                     for i in chunk:
                         if results[i] is None:
                             results[i] = self._execute_captured(plans[i])
+                # per-bucket landing: the whole chunk materializes in one
+                # device dispatch, so its members are announced together
+                if on_result is not None:
+                    for i in chunk:
+                        try:
+                            on_result(i, results[i])
+                        except Exception:
+                            pass
         return results
 
     def _run_bucket(self, plans, idxs, drawn, results) -> None:

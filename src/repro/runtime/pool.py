@@ -11,6 +11,10 @@ finish from the same outcome without cross-thread hand-off.
 Every failure is captured on the affected handles (``shared_pilot`` per
 member, a last-resort net here for bugs in the group machinery itself) —
 nothing raises through ``run_groups`` and no worker death loses a handle.
+The same capture path closes every *streaming* handle's frame stream with a
+terminal :class:`repro.stream.ErrorFrame` (``QueryHandle._mark_failed``
+emits it), so a blocked ``stream()`` iterator always terminates — a failure
+becomes a frame, never a hung client.
 
 Backpressure is the admission side's job: :class:`BackpressureError` is
 raised by callers (the SQL gateway's bounded queue and per-client caps)

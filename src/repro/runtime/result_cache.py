@@ -54,6 +54,12 @@ class CachedAnswer:
     ``group_present`` is bit-packed; ``to_answer()`` rebuilds a fresh
     :class:`repro.core.taqa.ApproxAnswer` on every hit (values/report are
     shared read-only, the bitmap is unpacked per hit).
+
+    ``pilot`` optionally records the query's compact advisory
+    :class:`repro.core.taqa.PilotEstimate` (point estimates + CI half-widths
+    only, never the per-block matrix) so a *streaming* cached re-issue can
+    replay a provisional frame before its terminal one; its bytes are
+    charged to the cache budget like everything else.
     """
 
     names: List[str]
@@ -61,15 +67,17 @@ class CachedAnswer:
     present_bits: np.ndarray     # packbits(group_present) uint8
     n_groups: int
     report: object               # the TaqaReport guaranteed at compute time
+    pilot: Optional[object] = None  # PilotEstimate (duck-typed: .nbytes())
 
     @classmethod
-    def from_answer(cls, answer) -> "CachedAnswer":
+    def from_answer(cls, answer, pilot=None) -> "CachedAnswer":
         present = np.asarray(answer.group_present, dtype=bool)
         return cls(names=list(answer.names),
                    values=np.asarray(answer.values),
                    present_bits=np.packbits(present),
                    n_groups=present.shape[0],
-                   report=answer.report)
+                   report=answer.report,
+                   pilot=pilot)
 
     def to_answer(self):
         from repro.core.taqa import ApproxAnswer  # session-layer dependency
@@ -79,8 +87,10 @@ class CachedAnswer:
                             group_present=present, report=self.report)
 
     def nbytes(self) -> int:
+        pilot_bytes = 0 if self.pilot is None else self.pilot.nbytes()
         return (self.values.nbytes + self.present_bits.nbytes
-                + sum(len(n) for n in self.names) + _ENTRY_OVERHEAD_BYTES)
+                + sum(len(n) for n in self.names) + pilot_bytes
+                + _ENTRY_OVERHEAD_BYTES)
 
 
 def _entry_bytes(value) -> int:

@@ -48,7 +48,9 @@ import dataclasses
 import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
-from repro.core.taqa import FinalStage, PilotOutcome, pilot_params
+from repro.core.taqa import (FinalStage, PilotOutcome, advisory_estimate,
+                             pilot_params)
+from repro.stream import pilot_frame_for
 
 if TYPE_CHECKING:  # runtime layering: session owns the runtime
     from repro.api.session import QueryHandle, Session
@@ -81,6 +83,7 @@ class _Pending:
     outcome: PilotOutcome
     stage: Optional[FinalStage] = None      # None: deferred duplicate
     failed: Optional[str] = None
+    est: Optional[object] = None            # advisory PilotEstimate (or None)
 
 
 def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
@@ -126,22 +129,38 @@ def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
             time.perf_counter() - t0, sum(durations))
     subgroups = [p for p in pend_lists if p]
 
-    # one batched launch per same-signature bucket across the WHOLE group
+    # one batched launch per same-signature bucket across the WHOLE group;
+    # each subgroup's pilot-ownership box is shared between the per-bucket
+    # early completions and the serial sweep below, so exactly one COMPLETED
+    # member per subgroup carries pilot_shared=False whichever path lands it
+    boxes = [{"owns": True} for _ in subgroups]
     if session.config.batch_finals:
-        stages = [p.stage for sp in subgroups for p in sp
-                  if p.stage is not None and p.failed is None
-                  and p.stage.answer is None]
-        if len(stages) >= 2:
+        by_stage: Dict[int, Tuple[_Pending, dict]] = {}
+        for pend, box in zip(subgroups, boxes):
+            for p in pend:
+                if p.stage is not None and p.failed is None \
+                        and p.stage.answer is None:
+                    by_stage[id(p.stage)] = (p, box)
+        if len(by_stage) >= 2:
+            def _on_answer(stage: FinalStage) -> None:
+                # a bucket landed: complete its members NOW — streaming
+                # clients see their FinalFrames while later buckets are
+                # still dispatching (the serial sweep skips done handles)
+                p, box = by_stage[id(stage)]
+                _complete_one(session, p, box)
+
             try:
-                session.db.run_finals_batched(stages)
+                session.db.run_finals_batched(list(
+                    pb[0].stage for pb in by_stage.values()),
+                    on_answer=_on_answer)
             except Exception:
                 # batching is an optimization, never a failure mode: stages
                 # left unanswered execute solo in the completion loop below
                 # (run_final), under its per-member exception capture
                 pass
 
-    for pend in subgroups:
-        _complete_subgroup(session, pend)
+    for pend, box in zip(subgroups, boxes):
+        _complete_subgroup(session, pend, box)
 
 
 def _pilot_and_prepare(session: "Session",
@@ -159,6 +178,18 @@ def _pilot_and_prepare(session: "Session",
         for h in live:
             h._mark_failed(f"{type(e).__name__}: {e}")
         return []
+    # fan the shared pilot's advisory estimate out to EVERY member the
+    # moment stage 1 returns — before any stage-2 planning or dispatch.
+    # Members share pilot statistics but not necessarily confidence, so
+    # the t-interval is computed per distinct confidence level.
+    ests: Dict[float, Optional[object]] = {}
+    shared = len(live) > 1
+    for h in live:
+        conf = h.spec.confidence
+        if conf not in ests:
+            ests[conf] = advisory_estimate(h.query, outcome, conf)
+        if ests[conf] is not None:
+            h._emit(pilot_frame_for(h.query_id, ests[conf], shared=shared))
     pend: List[_Pending] = []
     seen_keys = set()
     for h in live:
@@ -166,7 +197,8 @@ def _pilot_and_prepare(session: "Session",
         # with this member's exact (query, spec, seed) answer
         if session._serve_cached(h):
             continue
-        p = _Pending(handle=h, gen=gen, outcome=outcome)
+        p = _Pending(handle=h, gen=gen, outcome=outcome,
+                     est=ests.get(h.spec.confidence))
         key = session._cache_key(h)
         if session.result_cache.enabled and key in seen_keys:
             # identical re-issue inside one drain: the earlier member's
@@ -184,31 +216,46 @@ def _pilot_and_prepare(session: "Session",
     return pend
 
 
-def _complete_subgroup(session: "Session", pend: List[_Pending]) -> None:
-    # the first member that actually COMPUTES (not cache-serves) a completed
-    # answer owns the pilot stage in its report (pilot_shared=False) — drain
-    # stats count pilot stages by that flag
-    owns_pilot = True
+def _complete_one(session: "Session", p: _Pending, box: dict) -> None:
+    """Finish ONE member (idempotent): called early by the batched launch's
+    per-bucket callback, and again by the subgroup's serial sweep — whoever
+    runs first delivers; the other sees ``handle.done`` and returns.
+
+    ``box["owns"]`` is the subgroup's pilot-ownership flag: the first member
+    that actually COMPUTES (not cache-serves) a completed answer owns the
+    pilot stage in its report (pilot_shared=False) — drain stats count pilot
+    stages by that flag.  Both callers run on the group's worker thread, so
+    the box needs no lock.
+    """
+    h = p.handle
+    if h.done:
+        return
+    if p.failed is not None:
+        h._mark_failed(p.failed)
+        return
+    # a peer's completion may have cached this member's answer already
+    if session._serve_cached(h):
+        return
+    try:
+        if p.stage is None:  # deferred duplicate whose peer failed
+            p.stage = session.db.prepare_final(h.query, h.spec,
+                                               p.outcome, seed=h.seed)
+        ans = session.db.run_final(p.stage)
+        ans.report.pilot_shared = not box["owns"]
+        # ownership sticks only to a COMPLETED answer: if completion
+        # fails (mid-flight table replacement), the next member carries
+        # the non-shared report so drain stats still see the stage.
+        # (If every member fails, the stage shows only in
+        # executor.pilots_run — drain stats count completed answers.)
+        if session._complete_handle(h, ans, p.gen, pilot_est=p.est):
+            box["owns"] = False
+    except Exception as e:  # a member failing alone must not sink peers
+        h._mark_failed(f"{type(e).__name__}: {e}")
+
+
+def _complete_subgroup(session: "Session", pend: List[_Pending],
+                       box: Optional[dict] = None) -> None:
+    if box is None:
+        box = {"owns": True}
     for p in pend:
-        h = p.handle
-        if p.failed is not None:
-            h._mark_failed(p.failed)
-            continue
-        # a peer's completion above may have cached this member's answer
-        if session._serve_cached(h):
-            continue
-        try:
-            if p.stage is None:  # deferred duplicate whose peer failed
-                p.stage = session.db.prepare_final(h.query, h.spec,
-                                                   p.outcome, seed=h.seed)
-            ans = session.db.run_final(p.stage)
-            ans.report.pilot_shared = not owns_pilot
-            # ownership sticks only to a COMPLETED answer: if completion
-            # fails (mid-flight table replacement), the next member carries
-            # the non-shared report so drain stats still see the stage.
-            # (If every member fails, the stage shows only in
-            # executor.pilots_run — drain stats count completed answers.)
-            if session._complete_handle(h, ans, p.gen):
-                owns_pilot = False
-        except Exception as e:  # a member failing alone must not sink peers
-            h._mark_failed(f"{type(e).__name__}: {e}")
+        _complete_one(session, p, box)

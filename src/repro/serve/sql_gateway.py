@@ -25,11 +25,14 @@ request is refused, not failed — the client retries after results drain):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.api.scheduler import QueryScheduler
 from repro.api.session import QueryHandle, Session
 from repro.runtime import BackpressureError
+from repro.stream import Frame
 
 
 @dataclasses.dataclass
@@ -43,6 +46,9 @@ class GatewayStats:
     compile_hits: int = 0
     pilots_run: int = 0        # pilot stages executed on behalf of this gateway
     result_hits: int = 0       # tickets answered from the session result cache
+    streams: int = 0           # tickets admitted via submit_streaming
+    frames_pushed: int = 0     # frames landed in client queues
+    frames_dropped: int = 0    # advisory frames evicted by the queue bound
 
     @property
     def cache_hit_rate(self) -> float:
@@ -58,7 +64,8 @@ class GatewayStats:
 class SqlGateway:
     def __init__(self, session: Session, *, batch_size: Optional[int] = None,
                  max_pending: Optional[int] = None,
-                 max_inflight_per_client: Optional[int] = None):
+                 max_inflight_per_client: Optional[int] = None,
+                 max_frames_per_client: int = 1024):
         if batch_size is not None and batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if max_pending is not None and max_pending < 1:
@@ -66,16 +73,24 @@ class SqlGateway:
         if max_inflight_per_client is not None and max_inflight_per_client < 1:
             raise ValueError(f"max_inflight_per_client must be >= 1, "
                              f"got {max_inflight_per_client}")
+        if max_frames_per_client < 1:
+            raise ValueError(f"max_frames_per_client must be >= 1, "
+                             f"got {max_frames_per_client}")
         self.session = session
         self.batch_size = batch_size
         self.max_pending = max_pending
         self.max_inflight_per_client = max_inflight_per_client
+        self.max_frames_per_client = max_frames_per_client
         # A private scheduler over the shared session: draining this gateway
         # never executes (or counts) queries submitted elsewhere on the
         # session, and two gateways over one session keep separate stats.
         self.scheduler = QueryScheduler(session)
         self.stats = GatewayStats()
         self._tickets: Dict[int, Tuple[str, QueryHandle]] = {}
+        # per-client bounded frame queues (submit_streaming tickets push
+        # here from runtime workers; frames_for drains on the client's turn)
+        self._frames: Dict[str, Deque[Frame]] = {}
+        self._frame_lock = threading.Lock()
 
     # -- admission control ----------------------------------------------------
     def _admitted_load(self) -> int:
@@ -125,6 +140,63 @@ class SqlGateway:
         self._tickets[handle.query_id] = (client_id, handle)
         return handle.query_id
 
+    # -- progressive streaming ------------------------------------------------
+    def _push_client_frame(self, client_id: str, frame: Frame) -> None:
+        """Land one frame in ``client_id``'s bounded queue (runtime-worker
+        side).  On overflow the OLDEST ADVISORY frame is evicted — advisory
+        estimates are superseded by newer ones, so dropping stale ones loses
+        nothing a client is owed; terminal frames are never dropped (their
+        count is already bounded by the admission caps: one per ticket)."""
+        with self._frame_lock:
+            q = self._frames.setdefault(client_id, deque())
+            if frame.advisory and len(q) >= self.max_frames_per_client:
+                for i, old in enumerate(q):
+                    if old.advisory:
+                        del q[i]
+                        break
+                else:  # all resident frames terminal: drop the newcomer
+                    self.stats.frames_dropped += 1
+                    return
+                self.stats.frames_dropped += 1
+            q.append(frame)
+            self.stats.frames_pushed += 1
+
+    def submit_streaming(self, client_id: str, sql: str) -> int:
+        """Post one client request as a STREAMING ticket: same admission,
+        parsing, and scheduling as :meth:`submit`, but every frame of the
+        query — the advisory pilot estimate(s) and the terminal frame — is
+        additionally pushed to ``client_id``'s bounded frame queue, drained
+        with :meth:`frames_for`.  The terminal FinalFrame carries the very
+        answer object the ticket's handle delivers, so collecting frames
+        instead of handles never changes an answer.
+        """
+        self._check_admission(client_id)
+        self.stats.requests += 1
+        try:
+            handle = self.scheduler.submit(
+                self.session.prepare(sql, stream=True))
+        except (ValueError, RecursionError) as e:
+            # same parse-failure capture as submit(); enabling streaming on
+            # the pre-failed handle synthesizes its terminal ErrorFrame, so
+            # the client's frame queue still sees the stream end
+            handle = self.session.failed_handle(sql, f"{type(e).__name__}: {e}")
+            self.stats.rejected += 1
+        self.stats.streams += 1
+        handle.on_frame(lambda f: self._push_client_frame(client_id, f))
+        self._tickets[handle.query_id] = (client_id, handle)
+        return handle.query_id
+
+    def frames_for(self, client_id: str,
+                   max_frames: Optional[int] = None) -> List[Frame]:
+        """Drain up to ``max_frames`` of ``client_id``'s queued frames (all
+        of them by default), oldest first.  Frames are delivered once."""
+        with self._frame_lock:
+            q = self._frames.get(client_id)
+            if not q:
+                return []
+            n = len(q) if max_frames is None else min(max_frames, len(q))
+            return [q.popleft() for _ in range(n)]
+
     def run(self) -> Dict[int, QueryHandle]:
         """Drain every scheduled request; returns ticket -> finished handle.
 
@@ -161,15 +233,21 @@ class SqlGateway:
           partitioned table (``repro.dist``), empty when nothing is sharded;
         * ``staged``        — the materialized sample-catalog state
           (:meth:`repro.engine.Executor.staged_info`: hit/miss/eviction
-          counters, per-table ladders, resident bytes), empty when no table
-          was registered with ``staged_rates``.
+          counters, per-table ladders, resident bytes).  ALWAYS present with
+          the full key schema — a session with no ladders (or an executor
+          without a staged catalog) reports zero counters and empty
+          ``tables``, so payload consumers never key-check.
         """
         compile_info = self.session.compile_cache_info()
         result_info = self.session.result_cache_info()
         shard_info = getattr(self.session.executor, "shard_scan_info",
                              lambda: {})()
-        staged_info = getattr(self.session.executor, "staged_info",
-                              lambda: {})()
+        # pinned payload schema: merge whatever the executor reports over a
+        # full-key skeleton (duck-typed executors may lack staged_info)
+        staged_info = {"hits": 0, "misses": 0, "evictions": 0,
+                       "resident_bytes": 0, "max_bytes": None, "tables": {}}
+        staged_info.update(getattr(self.session.executor, "staged_info",
+                                   lambda: {})())
         return {
             "gateway": self.stats.as_dict(),
             "compile_cache": {

@@ -1,0 +1,20 @@
+# Progressive answer streaming (online-aggregation serving, ROADMAP item 2):
+# every query can be observed as a monotone stream of typed frames — advisory
+# PilotFrames the moment TAQA's stage 1 returns, then exactly one terminal
+# frame (FinalFrame with the §4 guarantee, ExactFrame on fallback, ErrorFrame
+# on captured failure).  The FrameBuffer is the thread-safe plumbing behind
+# QueryHandle.stream()/on_frame() and the gateway's server-push tickets.
+from repro.stream.buffer import FrameBuffer
+from repro.stream.frames import (ErrorFrame, ExactFrame, FinalFrame, Frame,
+                                 PilotFrame, final_frame_for, pilot_frame_for)
+
+__all__ = [
+    "Frame",
+    "PilotFrame",
+    "FinalFrame",
+    "ExactFrame",
+    "ErrorFrame",
+    "FrameBuffer",
+    "final_frame_for",
+    "pilot_frame_for",
+]

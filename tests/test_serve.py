@@ -207,9 +207,19 @@ def test_gateway_stats_payload_one_stop(aqp_session):
     assert payload["result_cache"]["capacity"] == rc.capacity
     # nothing sharded on this session: the dist section is present but empty
     assert payload["shard_scanned_bytes"] == {}
-    # no staged_rates registration: the staged section reports zero state
+    # no staged_rates registration: the staged section reports zero state —
+    # with the FULL key schema pinned (consumers must never key-check)
+    assert set(payload["staged"]) == {"hits", "misses", "evictions",
+                                      "resident_bytes", "max_bytes",
+                                      "tables"}
     assert payload["staged"]["hits"] == 0
     assert payload["staged"]["tables"] == {}
+    # the payload's top-level sections are a pinned contract too
+    assert set(payload) == {"gateway", "compile_cache", "result_cache",
+                            "shard_scanned_bytes", "staged"}
+    # streaming counters ride the gateway section
+    assert {"streams", "frames_pushed",
+            "frames_dropped"} <= set(payload["gateway"])
 
 
 def test_gateway_stats_payload_shard_attribution():

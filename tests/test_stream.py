@@ -1,0 +1,424 @@
+"""Progressive answer streaming (repro.stream): monotone frame contract.
+
+The hard contract under test everywhere: intermediate frames are ADVISORY
+and flagged as such, and the terminal FinalFrame is BITWISE identical to the
+non-streaming ``handle.answer`` for the same query on an equal-seed session
+— for every configuration (solo, shared-pilot herd, batched finals, cached
+re-issues, staged ladders, every shard count) — while ``stream=False`` (the
+default) is exactly today's behavior.
+"""
+
+import dataclasses as dc
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import (ErrorFrame, ExactFrame, FinalFrame, PilotFrame,
+                       Session, SessionConfig)
+from repro.core.taqa import advisory_estimate
+from repro.engine.datagen import tpch_catalog
+from repro.serve.sql_gateway import SqlGateway
+from repro.stream import FrameBuffer, Frame
+
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+# post-aggregation clauses (HAVING / ORDER BY / LIMIT) go before the spec
+GROUPED_TEMPLATE = ("SELECT SUM(l_quantity) AS q, COUNT(*) AS n FROM "
+                    "lineitem WHERE l_quantity < 30 GROUP BY l_returnflag "
+                    "MAXGROUPS 3{suffix} ERROR 10% CONFIDENCE 90%")
+
+SERIAL_CFG = SessionConfig(async_workers=0, share_pilots=False,
+                           result_cache_size=0)
+NOCACHE_CFG = SessionConfig(async_workers=4, result_cache_size=0)
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(scale_rows=200_000, block_rows=32, seed=0)
+
+
+def _assert_bitwise(answer_a, answer_b):
+    assert np.array_equal(answer_a.values, answer_b.values)
+    assert np.array_equal(answer_a.group_present, answer_b.group_present)
+    assert list(answer_a.names) == list(answer_b.names)
+
+
+# ---------------------------------------------------------------------------
+# FrameBuffer mechanics
+# ---------------------------------------------------------------------------
+
+def test_frame_buffer_orders_and_closes():
+    buf = FrameBuffer(7)
+    buf.push(Frame(query_id=7))
+    f2 = buf.push(ErrorFrame(query_id=7, error="x"))
+    assert [f.seq for f in buf.frames()] == [0, 1]
+    assert buf.closed and f2.terminal
+    # post-terminal pushes are no-ops: the stream already ended
+    buf.push(Frame(query_id=7))
+    assert len(buf.frames()) == 2
+    # iterating a finished stream terminates without blocking
+    assert [f.seq for f in buf.stream()] == [0, 1]
+
+
+def test_frame_buffer_callback_replays_backlog():
+    buf = FrameBuffer(1)
+    early = Frame(query_id=1)
+    buf.push(early)
+    seen = []
+    buf.add_callback(seen.append)
+    assert seen == [early]  # late subscription replays, in order
+    late = ErrorFrame(query_id=1, error="e")
+    buf.push(late)
+    assert seen == [early, late]
+
+
+def test_frame_buffer_stream_timeout():
+    buf = FrameBuffer(2)
+    with pytest.raises(TimeoutError):
+        next(buf.stream(timeout=0.01))
+
+
+# ---------------------------------------------------------------------------
+# Solo path: frame shape, advisory flags, bitwise final
+# ---------------------------------------------------------------------------
+
+def test_solo_stream_pilot_then_bitwise_final(catalog):
+    plain = Session(catalog, seed=3, config=SERIAL_CFG).sql(HERD_SQL)
+    assert plain.fallback is None
+
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    h = s.sql(HERD_SQL, stream=True)
+    frames = list(h.stream())
+    assert [type(f) for f in frames] == [PilotFrame, FinalFrame]
+    pf, ff = frames
+    assert pf.advisory and not pf.terminal
+    assert ff.terminal and not ff.advisory
+    assert [f.seq for f in frames] == [0, 1]
+    assert pf.t_emit < ff.t_emit
+    # the terminal frame IS the delivered answer object — bitwise identity
+    # with the equal-seed non-streaming session follows
+    assert ff.answer is h.answer
+    _assert_bitwise(ff.answer, plain.answer)
+    # the advisory estimate is in the right ballpark of the guaranteed one
+    # (pilot CI is provisional, but a wildly-off point estimate means the
+    # Hájek math broke)
+    rel = abs(pf.scalar("rev") - ff.scalar("rev")) / abs(ff.scalar("rev"))
+    assert rel < 0.5
+    assert math.isfinite(pf.half_width("rev")) and pf.half_width("rev") > 0
+    assert pf.n_pilot_blocks == h.report.n_pilot_blocks
+    assert pf.confidence == 0.95
+
+
+def test_stream_false_is_nonstreaming_default(catalog):
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    h = s.sql(HERD_SQL)
+    assert not h.streaming and h.frames() == []
+    # enabling after the fact synthesizes a complete single-frame stream
+    frames = list(h.stream())
+    assert len(frames) == 1 and frames[0].terminal
+    assert frames[0].answer is h.answer
+
+
+def test_advisory_estimate_matches_hand_computed_t_interval(catalog):
+    """PilotEstimate's SUM channel is the Hájek total with a two-sided
+    t-interval on the pilot block sums — checked against a hand
+    computation from the same PilotOutcome."""
+    from repro.stats import student_t_ppf
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    hq = s.prepare(HERD_SQL)
+    outcome = s.db.run_pilot(hq.query, hq.spec, s._pilot_seed_for(hq))
+    est = advisory_estimate(hq.query, outcome, hq.spec.confidence)
+    bs = np.asarray(outcome.pilot.block_sums, dtype=np.float64)
+    n_p, N = bs.shape[0], float(outcome.pilot.n_total_blocks)
+    idx = outcome.comp_channels[0][0]
+    want_val = N * bs[:, 0, idx].mean()
+    t_q = student_t_ppf(1.0 - 0.025, n_p - 1)
+    want_hw = N * t_q / np.sqrt(n_p) * bs[:, 0, idx].std(ddof=1)
+    assert est.scalar("rev") == pytest.approx(want_val, rel=1e-12)
+    assert est.half_width("rev") == pytest.approx(want_hw, rel=1e-12)
+    assert est.n_pilot_blocks == outcome.pilot.n_sampled_blocks
+
+
+def test_error_frame_on_captured_failure(catalog):
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    h = s.submit("SELECT COUNT(*) AS n FROM not_a_table GROUP BY g",
+                 stream=True)
+    s.drain()
+    assert h.status == "failed"
+    frames = list(h.stream())
+    assert len(frames) == 1 and isinstance(frames[0], ErrorFrame)
+    assert frames[0].terminal and frames[0].error == h.error
+
+
+# ---------------------------------------------------------------------------
+# Herd / shared pilot / batched finals
+# ---------------------------------------------------------------------------
+
+def test_herd_stream_shared_pilot_fanout_before_stage2(catalog):
+    """Every herd member streams the shared pilot's advisory frame — and
+    ALL pilot frames are emitted before ANY final frame (stage-2 dispatch
+    starts only after the group's pilot fan-out re-joins)."""
+    solo = Session(catalog, seed=11, config=SERIAL_CFG).sql(HERD_SQL)
+    rt = Session(catalog, seed=11, config=NOCACHE_CFG)
+    handles = [rt.submit(HERD_SQL, stream=True) for _ in range(5)]
+    p0 = rt.executor.pilots_run
+    rt.drain()
+    assert rt.executor.pilots_run - p0 == 1  # streaming kept pilot sharing
+    pilot_emits, final_emits = [], []
+    for h in handles:
+        frames = h.frames()
+        assert [type(f) for f in frames] == [PilotFrame, FinalFrame]
+        assert frames[0].shared  # fanned out from a shared pilot stage
+        pilot_emits.append(frames[0].t_emit)
+        final_emits.append(frames[1].t_emit)
+        _assert_bitwise(frames[1].answer, solo.answer)
+    assert max(pilot_emits) < min(final_emits)
+    # one herd pilot stage => every member's advisory values are identical
+    vals = {h.frames()[0].scalar("rev") for h in handles}
+    assert len(vals) == 1
+    stats = rt.scheduler.last_drain
+    assert stats.frames_emitted == 10
+    assert 0 < stats.time_to_first_frame_s < stats.time_to_final_s
+    rt.close()
+
+
+def test_batched_finals_stream_bitwise(catalog):
+    """A constant-varied herd (batched finals, one pilot per constant)
+    streams per-member FinalFrames bitwise identical to solo runs."""
+    template = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+                "WHERE l_quantity < {} ERROR 10% CONFIDENCE 90%")
+    cuts = [18, 24, 30, 36]
+    serial = Session(catalog, seed=9, config=SERIAL_CFG)
+    want = {c: serial.sql(template.format(c)).answer for c in cuts}
+
+    rt = Session(catalog, seed=9, config=NOCACHE_CFG)
+    handles = {c: rt.submit(template.format(c), stream=True) for c in cuts}
+    rt.drain()
+    for c, h in handles.items():
+        assert h.status == "done"
+        ff = h.frames()[-1]
+        assert ff.terminal
+        _assert_bitwise(ff.answer, want[c])
+    rt.close()
+
+
+def test_mixed_streaming_and_plain_members_bitwise(catalog):
+    """stream=True members riding a drain with stream=False peers change
+    nothing for either: both match the serial solo answer bitwise."""
+    solo = Session(catalog, seed=11, config=SERIAL_CFG).sql(HERD_SQL)
+    rt = Session(catalog, seed=11, config=NOCACHE_CFG)
+    hs = rt.submit(HERD_SQL, stream=True)
+    hp = rt.submit(HERD_SQL)
+    rt.drain()
+    assert not hp.streaming and hp.frames() == []
+    _assert_bitwise(hs.answer, solo.answer)
+    _assert_bitwise(hp.answer, solo.answer)
+    rt.close()
+
+
+def test_on_frame_callback_and_late_subscription(catalog):
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    live = []
+    h = s.prepare(HERD_SQL, stream=True)
+    h.on_frame(live.append)
+    s.scheduler.submit(h)
+    s.drain()
+    assert [type(f) for f in live] == [PilotFrame, FinalFrame]
+    # a late subscriber replays the full backlog in order
+    replay = []
+    h.on_frame(replay.append)
+    assert [f.seq for f in replay] == [f.seq for f in live]
+
+
+# ---------------------------------------------------------------------------
+# Cached re-issues
+# ---------------------------------------------------------------------------
+
+def test_cached_stream_replays_pilot_summary(catalog):
+    s = Session(catalog, seed=13)
+    first = s.sql(HERD_SQL, stream=True)
+    assert not first.cached
+    again = s.sql(HERD_SQL, stream=True)
+    assert again.cached
+    frames = again.frames()
+    assert [type(f) for f in frames] == [PilotFrame, FinalFrame]
+    assert frames[0].from_cache  # replayed from the CachedAnswer record
+    assert frames[1].cached
+    # the replayed summary is the one the original pilot produced
+    assert frames[0].scalar("rev") == first.frames()[0].scalar("rev")
+    _assert_bitwise(frames[1].answer, first.frames()[1].answer)
+    s.close()
+
+
+def test_cached_entry_without_pilot_streams_single_frame(catalog):
+    """Exact entries record no pilot summary: a streaming cache hit then
+    emits only its terminal (Exact) frame."""
+    s = Session(catalog, seed=13)
+    sql = "SELECT COUNT(*) AS n FROM lineitem"  # no spec: requested exact
+    first = s.sql(sql)
+    assert first.fallback is not None
+    again = s.sql(sql, stream=True)
+    assert again.cached
+    frames = again.frames()
+    assert len(frames) == 1 and isinstance(frames[0], ExactFrame)
+    s.close()
+
+
+def test_result_cache_bytes_account_for_pilot_summary(catalog):
+    """CachedAnswer.nbytes() charges the recorded pilot summary, keeping
+    result_cache_bytes honest."""
+    from repro.runtime import CachedAnswer
+    s = Session(catalog, seed=13)
+    h = s.sql(HERD_SQL, stream=True)
+    est = h.frames()[0]
+    base = CachedAnswer.from_answer(h.answer)
+    key = s._cache_key(h)
+    entry = s.result_cache.get(key)
+    assert entry.pilot is not None
+    assert entry.nbytes() == base.nbytes() + entry.pilot.nbytes()
+    assert entry.pilot.nbytes() < 4096  # compact: summaries, not matrices
+    # and the byte meter reflects what the entries report
+    assert s.result_cache_info().bytes_used >= entry.nbytes()
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# HAVING + ORDER BY/LIMIT interaction matrix (streamed vs plain, cached, dist)
+# ---------------------------------------------------------------------------
+
+_SUFFIXES = [
+    "",
+    " HAVING q >= 100",
+    " ORDER BY q DESC LIMIT 2",
+    " HAVING q >= 100 ORDER BY q ASC LIMIT 1",
+]
+
+
+@pytest.mark.parametrize("suffix", _SUFFIXES)
+def test_having_limit_matrix_streamed_bitwise(catalog, suffix):
+    sql = GROUPED_TEMPLATE.format(suffix=suffix)
+    plain = Session(catalog, seed=21, config=SERIAL_CFG).sql(sql)
+    s = Session(catalog, seed=21, config=SERIAL_CFG)
+    h = s.sql(sql, stream=True)
+    ff = h.frames()[-1]
+    assert ff.terminal and ff.answer is h.answer
+    # the frame carries the POST-HAVING/LIMIT delivered answer
+    _assert_bitwise(ff.answer, plain.answer)
+
+
+@pytest.mark.parametrize("suffix", _SUFFIXES)
+def test_having_limit_matrix_cached_stream_bitwise(catalog, suffix):
+    s = Session(catalog, seed=22)
+    sql = GROUPED_TEMPLATE.format(suffix=suffix)
+    first = s.sql(sql)
+    again = s.sql(sql, stream=True)
+    assert again.cached
+    _assert_bitwise(again.frames()[-1].answer, first.answer)
+    s.close()
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_shard_counts_stream_bitwise(catalog, shards):
+    """Streamed finals across every shard count match the monolithic
+    serial answer bitwise, HAVING/LIMIT included."""
+    sql = GROUPED_TEMPLATE.format(
+        suffix=" HAVING q >= 100 ORDER BY q DESC LIMIT 2")
+    mono = Session(catalog, seed=31, config=SERIAL_CFG).sql(sql)
+    s = Session(seed=31, config=SERIAL_CFG)
+    for name, tab in catalog.items():
+        if name == "lineitem":
+            s.register_table(name, tab, shards=shards)
+        else:
+            s.register_table(name, tab)
+    h = s.sql(sql, stream=True)
+    frames = h.frames()
+    assert frames[-1].terminal
+    if mono.fallback is None:
+        assert isinstance(frames[0], PilotFrame)  # dist pilots stream too
+    _assert_bitwise(frames[-1].answer, mono.answer)
+
+
+def test_staged_stream_bitwise(catalog):
+    """Streamed finals served from a staged ladder match the never-serving
+    ladder reference bitwise (same pinned staging realization)."""
+    def _run(rates, stream):
+        s = Session(seed=41, config=SERIAL_CFG)
+        for name, tab in catalog.items():
+            s.register_table(name, tab,
+                             staged_rates=rates if name == "lineitem"
+                             else None)
+        h = s.sql(HERD_SQL, stream=stream)
+        hits = s.executor.staged_info()["hits"]
+        return h, hits
+
+    ref, _ = _run([1e-9], stream=False)     # ladder that never serves
+    hot, hits = _run(True, stream=True)     # default ladder, streamed
+    assert hits > 0  # the streamed run genuinely served staged rungs
+    frames = hot.frames()
+    assert isinstance(frames[0], PilotFrame) and frames[-1].terminal
+    _assert_bitwise(frames[-1].answer, ref.answer)
+
+
+# ---------------------------------------------------------------------------
+# Gateway streaming
+# ---------------------------------------------------------------------------
+
+def test_gateway_submit_streaming_delivers_frames(catalog):
+    session = Session(catalog, seed=5)
+    gw = SqlGateway(session)
+    t1 = gw.submit_streaming("alice", HERD_SQL)
+    t2 = gw.submit("bob", HERD_SQL)  # plain ticket on the same drain
+    results = gw.run()
+    assert results[t1].status == "done" and results[t2].status == "done"
+    frames = gw.frames_for("alice")
+    assert [type(f) for f in frames] == [PilotFrame, FinalFrame]
+    assert frames[1].answer is results[t1].answer
+    assert gw.frames_for("alice") == []   # delivered once
+    assert gw.frames_for("bob") == []     # plain tickets push no frames
+    assert gw.stats.streams == 1
+    assert gw.stats.frames_pushed == 2
+    _assert_bitwise(results[t1].answer, results[t2].answer)
+    session.close()
+
+
+def test_gateway_streaming_parse_failure_is_terminal_frame(catalog):
+    session = Session(catalog, seed=5)
+    gw = SqlGateway(session)
+    gw.submit_streaming("eve", "SELEKT 1")
+    frames = gw.frames_for("eve")
+    assert len(frames) == 1 and isinstance(frames[0], ErrorFrame)
+    assert gw.stats.rejected == 1
+    session.close()
+
+
+def test_gateway_frame_queue_bounded_drops_oldest_advisory(catalog):
+    session = Session(catalog, seed=6)
+    gw = SqlGateway(session, max_frames_per_client=2)
+    q1 = "SELECT SUM(l_quantity) AS q FROM lineitem ERROR 10% CONFIDENCE 90%"
+    q2 = ("SELECT SUM(l_extendedprice) AS r FROM lineitem "
+          "ERROR 10% CONFIDENCE 90%")
+    gw.submit_streaming("c", q1)
+    gw.submit_streaming("c", q2)
+    gw.run()
+    frames = gw.frames_for("c")
+    # 4 frames were emitted into a 2-bounded queue: advisory frames gave
+    # way, every terminal frame survived
+    assert gw.stats.frames_dropped >= 1
+    terminals = [f for f in frames if f.terminal]
+    assert len(terminals) == 2
+    session.close()
+
+
+def test_gateway_stats_payload_staged_schema_pinned(catalog):
+    """Satellite contract: payload['staged'] is ALWAYS present with the
+    full key schema, zeroed when nothing is staged."""
+    session = Session(catalog, seed=5)
+    payload = SqlGateway(session).stats_payload()
+    assert set(payload["staged"]) >= {"hits", "misses", "evictions",
+                                      "resident_bytes", "max_bytes",
+                                      "tables"}
+    assert payload["staged"]["hits"] == 0
+    assert payload["staged"]["tables"] == {}
+    assert payload["gateway"]["streams"] == 0
+    session.close()
