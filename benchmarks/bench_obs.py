@@ -1,0 +1,165 @@
+"""Observability benchmark: tracing overhead, bit-identity, audit honesty.
+
+Contract checks run BEFORE any timing is reported (each raises, so
+``run.py --only obs`` exits nonzero on violation):
+
+* every answer of a traced warm herd drain is BITWISE identical to the
+  equal-seed untraced session's answer — tracing observes, never steers;
+* every traced query ends with a CLOSED span tree covering the full
+  lifecycle (pilot → rate_solve → final → deliver, or exact);
+* audit mode records observed <= promised error for the whole seeded
+  workload (zero violations) without perturbing a single answer.
+
+Reported: warm herd drain wall time with tracing OFF vs ON and the
+relative overhead — asserted below ``BENCH_OBS_MAX_OVERHEAD`` (default
+5%).  Emits the machine-readable ``BENCH_obs.json`` at the repo root plus
+one sample Chrome trace (``BENCH_obs_trace.json``, loadable in
+``chrome://tracing`` / Perfetto) as a workflow artifact.
+
+  PYTHONPATH=src python -m benchmarks.run --only obs
+  BENCH_ROWS=200000 PYTHONPATH=src python -m benchmarks.bench_obs
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE_ROWS, catalog, csv_row, save_results
+from repro.api import Session, SessionConfig
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+BENCH_OBS_PATH = os.path.join(_ROOT, "BENCH_obs.json")
+SAMPLE_TRACE_PATH = os.path.join(_ROOT, "BENCH_obs_trace.json")
+
+HERD_N = int(os.environ.get("BENCH_HERD_N", 12))
+REPS = int(os.environ.get("BENCH_OBS_REPS", 5))  # median-of over drains
+MAX_OVERHEAD = float(os.environ.get("BENCH_OBS_MAX_OVERHEAD", 0.05))
+
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < {cap} ERROR 5% CONFIDENCE 95%")
+
+# result cache off: every measured drain re-executes both stages, so the
+# overhead figure prices the instrumented hot path, not a cache replay
+CFG = SessionConfig(async_workers=None, share_pilots=True, batch_finals=True,
+                    result_cache_size=0, large_table_rows=100_000)
+TRACE_CFG = SessionConfig(async_workers=None, share_pilots=True,
+                          batch_finals=True, result_cache_size=0,
+                          large_table_rows=100_000, tracing=True)
+AUDIT_CFG = SessionConfig(async_workers=0, share_pilots=False,
+                          result_cache_size=0, large_table_rows=100_000,
+                          tracing=True, audit=True)
+
+
+def _workload():
+    sqls = [HERD_SQL.format(cap=24)] * (HERD_N // 2)
+    sqls += [HERD_SQL.format(cap=18 + 2 * i) for i in range(HERD_N - len(sqls))]
+    return sqls
+
+
+def _warm_session(cfg) -> Session:
+    tables = {k: v for k, v in catalog().items() if k != "skewed"}
+    session = Session(tables, seed=17, config=cfg)
+    # warm the jit caches (pilot + every final bucket shape) so measured
+    # drains time the steady-state serving loop, not first-touch XLA
+    for s in dict.fromkeys(_workload()):
+        session.sql(s)
+    return session
+
+
+def _timed_drains(session) -> tuple:
+    """Median warm-drain wall time over REPS; returns (median_s, handles of
+    the last rep)."""
+    walls, handles = [], []
+    for _ in range(REPS):
+        handles = [session.submit(s) for s in _workload()]
+        t0 = time.perf_counter()
+        session.drain()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls)), handles
+
+
+def run() -> dict:
+    plain = _warm_session(CFG)
+    traced = _warm_session(TRACE_CFG)
+
+    off_s, off_handles = _timed_drains(plain)
+    on_s, on_handles = _timed_drains(traced)
+
+    # -- contract checks (before any timing is trusted) --------------------
+    for hp, ht in zip(off_handles, on_handles):
+        ap, at = hp.result(), ht.result()
+        assert np.array_equal(np.asarray(ap.values), np.asarray(at.values)), \
+            "traced answers must be bitwise identical to untraced ones"
+        assert np.array_equal(np.asarray(ap.group_present),
+                              np.asarray(at.group_present))
+        tr = ht._trace
+        assert tr is not None and tr.finished and tr.open_spans() == [], \
+            f"query {ht.query_id}: span tree not closed"
+        names = set(tr.span_names())
+        want = {"final", "deliver"} if at.report.fallback is None \
+            else {"exact"}
+        assert want <= names or at.report.fallback is not None, \
+            f"query {ht.query_id}: lifecycle spans missing ({names})"
+    assert all(h._trace is None for h in off_handles), \
+        "tracing OFF must carry no trace objects"
+
+    overhead = (on_s - off_s) / off_s if off_s > 0 else 0.0
+    assert overhead < MAX_OVERHEAD, \
+        f"tracing-ON overhead {overhead:.1%} exceeds the " \
+        f"{MAX_OVERHEAD:.0%} budget (off={off_s * 1e3:.2f}ms " \
+        f"on={on_s * 1e3:.2f}ms)"
+
+    # one sample Chrome trace for the workflow artifact: the first traced
+    # member that genuinely sampled (pilot + final spans)
+    sampled = [h for h in on_handles
+               if h.answer is not None and h.report.fallback is None]
+    sample = (sampled or on_handles)[0]
+    with open(SAMPLE_TRACE_PATH, "w") as f:
+        json.dump(sample.trace("chrome"), f, indent=1)
+    print(f"# wrote {os.path.normpath(SAMPLE_TRACE_PATH)}", file=sys.stderr)
+
+    # -- audit mode: runtime Figure-9 check over the seeded workload -------
+    audit_session = _warm_session(AUDIT_CFG)
+    for s in dict.fromkeys(_workload()):
+        audit_session.sql(s)
+    summary = audit_session.auditor.summary()
+    assert summary["violations"] == 0, \
+        f"audit recorded guarantee violations: {summary}"
+    assert summary["errors"] == 0
+    assert summary["audited"] > 0 or summary["skipped_exact"] > 0
+    assert summary["max_error_ratio"] <= 1.0 or summary["audited"] == 0
+
+    plain.close()
+    traced.close()
+    audit_session.close()
+
+    doc = {"bench": "obs", "rows": SCALE_ROWS, "herd_n": HERD_N,
+           "reps": REPS, "cpu_count": os.cpu_count(),
+           "drain_off_s": off_s,
+           "drain_on_s": on_s,
+           "tracing_overhead": overhead,
+           "max_overhead_budget": MAX_OVERHEAD,
+           "bit_identical_on_vs_off": True,
+           "span_trees_closed": True,
+           "audit": {k: summary[k] for k in
+                     ("runs", "audited", "skipped_exact", "violations",
+                      "errors", "max_error_ratio", "mean_error_ratio")}}
+
+    with open(BENCH_OBS_PATH, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# wrote {os.path.normpath(BENCH_OBS_PATH)}", file=sys.stderr)
+    save_results("obs", doc)
+
+    print(csv_row("obs_tracing_overhead", on_s * 1e6,
+                  f"off={off_s * 1e6:.1f}us;overhead={overhead:.2%};"
+                  f"audit_max_ratio={summary['max_error_ratio']:.3f}"))
+    return doc
+
+
+if __name__ == "__main__":
+    run()

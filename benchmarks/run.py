@@ -49,13 +49,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench: guarantees|naive_clt|scan|"
                          "speedup|quickr|ablation|kernels|compiled|runtime|"
-                         "dist|staged|stream")
+                         "dist|staged|stream|obs")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_compiled, bench_dist,
                             bench_guarantees, bench_kernels, bench_naive_clt,
-                            bench_quickr, bench_runtime, bench_scan,
-                            bench_speedup, bench_staged, bench_stream)
+                            bench_obs, bench_quickr, bench_runtime,
+                            bench_scan, bench_speedup, bench_staged,
+                            bench_stream)
 
     benches = {
         "scan": bench_scan.run,              # Fig. 4
@@ -70,6 +71,7 @@ def main() -> None:
         "dist": bench_dist.run,              # shard-parallel execution
         "staged": bench_staged.run,          # pre-staged sample-catalog ladders
         "stream": bench_stream.run,          # progressive frames: TTFF vs final
+        "obs": bench_obs.run,                # tracing overhead + audit honesty
     }
     todo = [args.only] if args.only else list(benches)
     print("name,us_per_call,derived")

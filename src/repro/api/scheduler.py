@@ -51,6 +51,14 @@ class DrainStats:
     session never leaks in.  ``compile_misses``/``compile_hits`` diff the
     session-global compile cache around the drain — exact when nothing else
     executes concurrently, which is the single-drainer serving loop.
+
+    Accumulation contract: every field is PER DRAIN.  A fresh ``DrainStats``
+    is built for each ``drain()`` call (``scheduler.last_drain`` is replaced
+    wholesale; counters never carry over between drains).  Cumulative
+    session totals live elsewhere: ``scheduler.total_drained``, the
+    session-global cache infos, and the session metrics registry
+    (``session.metrics``).  Pinned by
+    ``tests/test_runtime.py::test_drain_stats_reset_per_drain``.
     """
 
     n_queries: int = 0
@@ -118,6 +126,11 @@ class QueryScheduler:
             handle.group_key = template_signature(handle.query)
         self._queued.add(handle.query_id)
         self._pending.append(handle)
+        if handle._trace is not None:
+            # cross-thread span: opened here on the client thread, closed by
+            # whichever worker starts the query (_mark_running) — the
+            # wait-in-queue time
+            handle._trace.open_span("schedule")
         return handle
 
     @property
@@ -210,6 +223,16 @@ class QueryScheduler:
         stats.wall_time_s = time.perf_counter() - t0
         self.last_drain = stats
         self.total_drained += len(completed)
+        metrics = getattr(self._session, "metrics", None)
+        if metrics is not None:  # cumulative totals live in the registry
+            metrics.counter("pilotdb_drains_total",
+                            "drain() calls completed").inc()
+            metrics.counter("pilotdb_drained_queries_total",
+                            "Queries completed via drain()").inc(
+                                len(completed))
+            metrics.histogram("pilotdb_drain_wall_seconds",
+                              "Wall time per drain() call").observe(
+                                  stats.wall_time_s)
         return completed
 
     def drain_async(self) -> List["QueryHandle"]:

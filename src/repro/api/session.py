@@ -45,6 +45,7 @@ import dataclasses
 import hashlib
 import os
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -62,6 +63,9 @@ from repro.engine.executor import Executor
 from repro.engine.physical import plan_template
 from repro.engine.staged import DEFAULT_STAGED_RATES, validate_rates
 from repro.engine.table import BlockTable
+from repro.obs import audit as _audit
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.runtime import (AsyncRuntime, CachedAnswer, ResultCache,
                            ResultCacheInfo)
 from repro.runtime import shared_pilot as _shared_pilot
@@ -135,6 +139,18 @@ class QueryHandle:
         default=None, repr=False, compare=False)
     _frame_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
+    # submission instant (perf_counter): the zero point for every frame's
+    # relative `emitted_at` stamp and for the trace's span times
+    t_submit: float = dataclasses.field(
+        default_factory=time.perf_counter, repr=False, compare=False)
+    # query-lifecycle span tree (repro.obs.trace); None unless the session
+    # was configured with tracing=True
+    _trace: Optional[_trace.QueryTrace] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # observed-vs-promised outcome (repro.obs.audit); None unless the
+    # session runs in audit mode and this query completed
+    audit_record: Optional[_audit.AuditRecord] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
@@ -183,7 +199,7 @@ class QueryHandle:
         """
         with self._frame_lock:
             if self._frames is None:
-                self._frames = FrameBuffer(self.query_id)
+                self._frames = FrameBuffer(self.query_id, t0=self.t_submit)
                 if self.status == QueryStatus.DONE:
                     self._frames.push(final_frame_for(
                         self.query_id, self._answer, cached=self.cached))
@@ -220,10 +236,32 @@ class QueryHandle:
         if self._frames is not None:
             self._frames.push(frame)
 
+    # -- observability (repro.obs) --------------------------------------------
+    def trace(self, fmt: str = "json"):
+        """The query's span tree: a JSON-able dict (``fmt="json"``) or a
+        Chrome trace-event list (``fmt="chrome"``, load in chrome://tracing).
+        None when the session ran with tracing off."""
+        if self._trace is None:
+            return None
+        if fmt == "chrome":
+            return self._trace.to_chrome()
+        if fmt == "json":
+            return self._trace.to_dict()
+        raise ValueError(f"unknown trace format {fmt!r} "
+                         "(expected 'json' or 'chrome')")
+
+    def explain(self) -> str:
+        """EXPLAIN-style report: promised guarantee, solved rates, pilot
+        inputs, scanned bytes, provenance (see :mod:`repro.obs.audit`)."""
+        return _audit.explain(self)
+
     # -- completion (runtime-internal) ----------------------------------------
     def _mark_running(self) -> None:
         if not self.done:
             self.status = QueryStatus.RUNNING
+            if self._trace is not None:
+                # the cross-thread wait-in-queue span submit() opened
+                self._trace.close_span("schedule")
 
     def _mark_done(self, answer: ApproxAnswer, cached: bool = False) -> None:
         with self._frame_lock:
@@ -233,6 +271,10 @@ class QueryHandle:
             if self._frames is not None:
                 self._frames.push(final_frame_for(
                     self.query_id, answer, cached=cached))
+        if self._trace is not None:
+            self._trace.finish(
+                "ok", cached=cached,
+                fallback=answer.report.fallback if answer is not None else None)
         self._done_event.set()
 
     def _mark_failed(self, error: str) -> None:
@@ -245,6 +287,8 @@ class QueryHandle:
                 # raised through a streaming client
                 self._frames.push(ErrorFrame(query_id=self.query_id,
                                              error=error))
+        if self._trace is not None:
+            self._trace.finish("error", error=error)
         self._done_event.set()
 
     def result(self) -> ApproxAnswer:
@@ -315,6 +359,17 @@ class SessionConfig:
     # eviction, so answers stay bit-identical across the hit/miss boundary.
     # None = unbounded residency.
     staged_bytes: Optional[int] = None
+    # -- observability (repro.obs) -------------------------------------------
+    # Per-query span trees (handle.trace()).  Off by default: the untraced
+    # path carries no trace objects and is byte-for-byte the pre-tracing
+    # code; ON only observes (never touches seeds, plans, or reductions),
+    # so answers stay bit-identical either way.
+    tracing: bool = False
+    # Audit mode: after each approximate answer is DELIVERED, run the exact
+    # query alongside and record observed vs promised error into the
+    # session metrics registry (see repro.obs.audit — never perturbs seeds,
+    # cache keys, or delivered answers; adds exact scan cost per query).
+    audit: bool = False
 
     def resolve_workers(self) -> int:
         """The worker count ``async_workers=None`` auto-sizes to.
@@ -390,6 +445,12 @@ class Session:
         self.runtime = AsyncRuntime(self, workers=config.resolve_workers(),
                                     pilot_workers=config.resolve_pilot_workers())
         self.scheduler = QueryScheduler(self)
+        # unified metrics registry: first-class instruments plus collector
+        # views over the caches/runtime this session already tracks
+        self.metrics = _metrics.MetricsRegistry()
+        _metrics.register_session_collectors(self.metrics, self)
+        self.auditor = (_audit.GuaranteeAuditor(self.db, self.metrics)
+                        if config.audit else None)
 
     def close(self) -> None:
         """Shut the runtime's worker pool down (idempotent)."""
@@ -650,11 +711,18 @@ class Session:
 
     # -- plumbing -------------------------------------------------------------
     def _parse_to_handle(self, text: str, *, stream: bool = False) -> QueryHandle:
+        t0 = time.perf_counter()
         parsed = parse_sql(text, max_groups_resolver=self.infer_max_groups,
                            spec_kwargs=self.config.spec_kwargs)
-        return self._make_handle(parsed.query, parsed.spec, sql=text,
-                                 having=parsed.having, limit=parsed.limit,
-                                 stream=stream)
+        t_parsed = time.perf_counter()
+        # t0 (pre-parse) is the submit epoch: the parse span and every
+        # frame's emitted_at stay non-negative relative to it
+        handle = self._make_handle(parsed.query, parsed.spec, sql=text,
+                                   having=parsed.having, limit=parsed.limit,
+                                   stream=stream, t_submit=t0)
+        if handle._trace is not None:
+            handle._trace.record("parse", duration_s=t_parsed - t0)
+        return handle
 
     def _resolve_dictionary(self, column: str, literal: str) -> int:
         d = self._dictionaries.get(column)
@@ -724,7 +792,8 @@ class Session:
                      sql: Optional[str] = None,
                      having: Optional[HavingClause] = None,
                      limit: Optional[LimitClause] = None,
-                     stream: bool = False) -> QueryHandle:
+                     stream: bool = False,
+                     t_submit: Optional[float] = None) -> QueryHandle:
         # resolve + validate before deriving a seed: rejected queries never
         # enter the seed/cache keyspace
         query = resolve_string_literals(query, self._resolve_dictionary,
@@ -741,12 +810,23 @@ class Session:
                 f"(outputs: {[c.name for c in query.aggs]})")
         # one lowering: the group key is the (memoized) constant-stripped
         # template of the signature just computed, not a second lowering
+        t_lower0 = time.perf_counter()
         signature = structural_signature(query)
         handle = QueryHandle(query_id=self._next_id, query=query, spec=spec,
                              seed=self._derive_seed(query, spec), sql=sql,
                              having=having, limit=limit, signature=signature,
-                             group_key=plan_template(signature))
+                             group_key=plan_template(signature),
+                             t_submit=(time.perf_counter()
+                                       if t_submit is None else t_submit))
         self._next_id += 1
+        if self.config.tracing:
+            handle._trace = _trace.QueryTrace(
+                handle.query_id, sql=sql, t_start=handle.t_submit)
+            handle._trace.record(
+                "lower", duration_s=time.perf_counter() - t_lower0,
+                seed=handle.seed,
+                template=_trace.sig_hash(handle.group_key),
+                signature=_trace.sig_hash(signature))
         if stream:
             handle.enable_streaming()
         return handle
@@ -776,7 +856,9 @@ class Session:
         changed)."""
         if handle.query is None:
             return False
-        entry = self.result_cache.get(self._cache_key(handle))
+        with _trace.span("cache_lookup") as sp:
+            entry = self.result_cache.get(self._cache_key(handle))
+            sp.set(hit=entry is not None)
         if entry is None:
             return False
         if handle.streaming and isinstance(entry, CachedAnswer) \
@@ -833,40 +915,77 @@ class Session:
             (s.table for s in handle.query.child.scans()),
             guard=None if gen_snapshot is None else
             (lambda: gen_snapshot == self._scan_generations(handle.query)))
+        base = answer  # the guarantee covers the pre-HAVING/LIMIT answer
         if handle.having is not None:  # cache keeps the unfiltered answer
             answer = handle.having.apply(answer)
         if handle.limit is not None:   # after HAVING, like _serve_cached
             answer = handle.limit.apply(answer)
         handle._mark_done(answer)
+        if self.auditor is not None:
+            # AFTER delivery (the client already has its answer; the trace
+            # is finished, so the exact run traces nothing) and against the
+            # base answer — every group the guarantee covered gets checked
+            self.auditor.check(handle, base)
         return True
 
     def _run_handle(self, handle: QueryHandle) -> QueryHandle:
         if handle.done:
             return handle
-        if self._serve_cached(handle):
-            return handle
-        handle._mark_running()
-        gen = self._scan_generations(handle.query)
+        token = _trace.activate(handle._trace)
         try:
-            pilot_est = None
-            if handle.spec is None:
-                ans = self.db.exact(handle.query)
-            else:
-                # run the two TAQA stages separately (instead of db.query)
-                # so the advisory estimate streams the moment stage 1
-                # returns — before any stage-2 dispatch
-                outcome = self.db.run_pilot(handle.query, handle.spec,
-                                            self._pilot_seed_for(handle))
-                pilot_est = advisory_estimate(handle.query, outcome,
-                                              handle.spec.confidence)
-                if pilot_est is not None:
-                    handle._emit(pilot_frame_for(handle.query_id, pilot_est))
-                ans = self.db.finish_from_pilot(handle.query, handle.spec,
-                                                outcome, handle.seed)
-            self._complete_handle(handle, ans, gen, pilot_est=pilot_est)
-        except Exception as e:  # capture, don't raise through the client
-            handle._mark_failed(f"{type(e).__name__}: {e}")
-        return handle
+            if self._serve_cached(handle):
+                return handle
+            handle._mark_running()
+            gen = self._scan_generations(handle.query)
+            try:
+                pilot_est = None
+                if handle.spec is None:
+                    with _trace.span("exact") as sp:
+                        ans = self.db.exact(handle.query)
+                        sp.set(scanned_bytes=ans.report.exact_scanned_bytes)
+                else:
+                    # run the two TAQA stages separately (instead of
+                    # db.query) so the advisory estimate streams the moment
+                    # stage 1 returns — before any stage-2 dispatch
+                    with _trace.span("pilot", shared=False) as sp:
+                        outcome = self.db.run_pilot(
+                            handle.query, handle.spec,
+                            self._pilot_seed_for(handle))
+                        rep = outcome.report
+                        sp.set(table=rep.pilot_table,
+                               theta_pilot=rep.theta_pilot,
+                               n_pilot_blocks=rep.n_pilot_blocks,
+                               scanned_bytes=rep.pilot_scanned_bytes,
+                               fallback=rep.fallback)
+                    pilot_est = advisory_estimate(handle.query, outcome,
+                                                  handle.spec.confidence)
+                    if pilot_est is not None:
+                        handle._emit(pilot_frame_for(handle.query_id,
+                                                     pilot_est))
+                    # finish_from_pilot == run_final(prepare_final(...));
+                    # split here only so each stage gets its own span
+                    with _trace.span("rate_solve") as sp:
+                        stage = self.db.prepare_final(
+                            handle.query, handle.spec, outcome, handle.seed)
+                        rep = stage.report
+                        sp.set(candidates=rep.candidates,
+                               fallback=rep.fallback,
+                               rates=dict(rep.plan.rates)
+                               if rep.plan is not None else None)
+                    with _trace.span("final", batched=False) as sp:
+                        ans = self.db.run_final(stage)
+                        sp.set(scanned_bytes=ans.report.final_scanned_bytes,
+                               fallback=ans.report.fallback)
+                with _trace.span("deliver"):
+                    self._complete_handle(handle, ans, gen,
+                                          pilot_est=pilot_est)
+            except Exception as e:  # capture, don't raise through the client
+                handle._mark_failed(f"{type(e).__name__}: {e}")
+            return handle
+        finally:
+            # worker threads are pooled: a leaked context var would
+            # misattribute the next query's spans
+            _trace.deactivate(token)
 
     def _execute_group(self, handles: List[QueryHandle]) -> None:
         """Run one signature group (runtime workers land here): cached

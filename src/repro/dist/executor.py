@@ -51,6 +51,7 @@ from repro.engine.sampling import SampleInfo, pad_block_ids
 from repro.engine.staged import (DEFAULT_STAGED_RATES, ShardSubdraw,
                                  build_sharded_ladder, prepare_dist_subdraw)
 from repro.engine.table import BlockTable
+from repro.obs import trace as _trace
 
 
 class DistExecutor(Executor):
@@ -258,22 +259,28 @@ class DistExecutor(Executor):
         lad, rung = self._staged_dist_rung(table, sample.rate, sharded)
         seed = sample.seed if lad is None else lad.seed
         stripped = L.strip_samples(plan)
-        if rung is not None:
-            self.staged.note_hit()
-            global_ids, splits = prepare_dist_subdraw(lad, rung, sample.rate)
-            if len(global_ids) == 0:
-                raise EmptySampleError(table, "block", sample.rate)
-            parts = self._dispatch_staged_shards(stripped, table, sharded,
-                                                 splits)
-        else:
-            if lad is not None:
-                self.staged.note_miss()
-            global_ids, parts_ids = shard_block_ids(
-                sharded.num_blocks, sample.rate, seed, sharded)
-            if len(global_ids) == 0:
-                raise EmptySampleError(table, "block", sample.rate)
-            parts = self._dispatch_shards(stripped, table, sharded, executors,
-                                          parts_ids)
+        with _trace.span("shard_fanout", table=table,
+                         shards=sharded.num_shards,
+                         staged=rung is not None) as sp:
+            if rung is not None:
+                self.staged.note_hit()
+                global_ids, splits = prepare_dist_subdraw(lad, rung,
+                                                          sample.rate)
+                if len(global_ids) == 0:
+                    raise EmptySampleError(table, "block", sample.rate)
+                parts = self._dispatch_staged_shards(stripped, table, sharded,
+                                                     splits)
+            else:
+                if lad is not None:
+                    self.staged.note_miss()
+                global_ids, parts_ids = shard_block_ids(
+                    sharded.num_blocks, sample.rate, seed, sharded)
+                if len(global_ids) == 0:
+                    raise EmptySampleError(table, "block", sample.rate)
+                parts = self._dispatch_shards(stripped, table, sharded,
+                                              executors, parts_ids)
+            sp.set(shards_hit=len(parts),
+                   scanned_bytes=sum(p.scanned_bytes for p in parts))
         _, block_sums = merge.merge_block_stats(parts)
         sums, counts = merge.reduce_group_totals(block_sums)
 
@@ -380,21 +387,27 @@ class DistExecutor(Executor):
         replicated = sum(
             self.catalog[t].total_bytes()
             for t in {s.table for s in plan.scans()} if t != pilot_table)
-        if rung is not None:
-            self.staged.note_hit()
-            global_ids, splits = prepare_dist_subdraw(lad, rung, theta_p)
-            parts = (self._dispatch_staged_shards(
-                L.strip_samples(plan), pilot_table, sharded, splits,
-                pair_table) if len(global_ids) else [])
-        else:
-            if lad is not None:
-                self.staged.note_miss()
-            global_ids, parts_ids = shard_block_ids(
-                sharded.num_blocks, theta_p, seed, sharded)
-            parts = (self._dispatch_shards(L.strip_samples(plan), pilot_table,
-                                           sharded, executors, parts_ids,
-                                           pair_table)
-                     if len(global_ids) else [])
+        with _trace.span("shard_fanout", table=pilot_table, pilot=True,
+                         shards=sharded.num_shards,
+                         staged=rung is not None) as sp:
+            if rung is not None:
+                self.staged.note_hit()
+                global_ids, splits = prepare_dist_subdraw(lad, rung, theta_p)
+                parts = (self._dispatch_staged_shards(
+                    L.strip_samples(plan), pilot_table, sharded, splits,
+                    pair_table) if len(global_ids) else [])
+            else:
+                if lad is not None:
+                    self.staged.note_miss()
+                global_ids, parts_ids = shard_block_ids(
+                    sharded.num_blocks, theta_p, seed, sharded)
+                parts = (self._dispatch_shards(L.strip_samples(plan),
+                                               pilot_table, sharded,
+                                               executors, parts_ids,
+                                               pair_table)
+                         if len(global_ids) else [])
+            sp.set(shards_hit=len(parts),
+                   scanned_bytes=sum(p.scanned_bytes for p in parts))
         has_pair = bool(parts) and parts[0].pair_sums is not None
         return merge.merge_pilot_stats(
             table=pilot_table,

@@ -42,6 +42,7 @@ from repro.engine.sampling import (SampleInfo, block_sample, draw_block_ids,
 from repro.engine.staged import (DEFAULT_STAGED_RATES, SampleCatalog,
                                  build_ladder, prepare_mono_subdraw)
 from repro.engine.table import BlockTable
+from repro.obs import trace as _trace
 
 
 class EmptySampleError(RuntimeError):
@@ -334,9 +335,13 @@ class Executor:
     # -- public API ----------------------------------------------------------
     def execute(self, plan: L.Aggregate) -> QueryResult:
         self._count("queries_run")
-        if self.use_compiled:
-            return self._execute_compiled(plan)
-        return self._execute_eager(plan)
+        with _trace.span("scan") as sp:
+            if self.use_compiled:
+                res = self._execute_compiled(plan)
+            else:
+                res = self._execute_eager(plan)
+            sp.set(scanned_bytes=res.scanned_bytes)
+        return res
 
     def _staged_route(self, plan: L.Aggregate):
         """(table, SampleClause, ladder, rung) when ``plan`` can run against
@@ -375,6 +380,8 @@ class Executor:
         origin = self.catalog[table]
         sub = prepare_mono_subdraw(lad, rung, sample.rate)
         self.staged.note_hit()
+        _trace.annotate(staged=True, staged_table=table,
+                        staged_rate=sample.rate, staged_rung=rung.rate)
         if sub.n_real == 0:
             # a fresh draw under the pinned seed would be empty too
             raise EmptySampleError(table, "block", sample.rate)
@@ -614,14 +621,22 @@ class Executor:
         # path (compiled, eager, staged rung), so retries and route changes
         # can never fork the realization.
         seed = self.staged.seed_for(pilot_table, seed)
-        # The compiled lowering traces one pair table; the (currently unused
-        # by TAQA) multi-pair shape takes the eager path so both paths return
-        # pair_sums for every requested table.
-        if self.use_compiled and len(pair_tables) <= 1:
-            return self._execute_pilot_compiled(plan, pilot_table, theta_p,
-                                                seed, pair_tables)
-        return self._execute_pilot_eager(plan, pilot_table, theta_p, seed,
-                                         pair_tables)
+        # One "scan" span per attempt: a stage's undershoot retries show as
+        # sibling spans under the handle's "pilot" span.
+        with _trace.span("scan", pilot=True, table=pilot_table,
+                         theta_pilot=theta_p) as sp:
+            # The compiled lowering traces one pair table; the (currently
+            # unused by TAQA) multi-pair shape takes the eager path so both
+            # paths return pair_sums for every requested table.
+            if self.use_compiled and len(pair_tables) <= 1:
+                stats = self._execute_pilot_compiled(
+                    plan, pilot_table, theta_p, seed, pair_tables)
+            else:
+                stats = self._execute_pilot_eager(
+                    plan, pilot_table, theta_p, seed, pair_tables)
+            sp.set(scanned_bytes=stats.scanned_bytes,
+                   n_blocks=stats.n_sampled_blocks)
+        return stats
 
     def _execute_pilot_compiled(self, plan, pilot_table, theta_p, seed,
                                 pair_tables) -> PilotStats:
@@ -638,6 +653,8 @@ class Executor:
         if rung is not None:
             sub = prepare_mono_subdraw(lad, rung, theta_p)
             self.staged.note_hit()
+            _trace.annotate(staged=True, staged_table=pilot_table,
+                            staged_rate=theta_p, staged_rung=rung.rate)
             ids, n_real = sub.sub_ids, sub.n_real
         else:
             if lad is not None:

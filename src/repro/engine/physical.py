@@ -71,6 +71,7 @@ from repro.engine.expr import And, Between, BinOp, Cmp, Col, Expr, eval_expr
 from repro.engine.table import BlockTable
 from repro.kernels.block_agg import block_agg
 from repro.kernels.filtered_agg import filtered_agg
+from repro.obs import trace as _trace
 
 _BIG_BOUND = 3.0e38       # "unbounded" predicate slot, f32-safe
 _INT_MAX = np.int32(2 ** 31 - 1)
@@ -675,6 +676,10 @@ class PhysicalCompiler:
                 self._cache[key] = placeholder
             else:
                 self.hits += 1  # a waiter did not build — that's a hit
+        if _trace.active() is not None:  # tag the enclosing stage span
+            _trace.annotate_count(
+                "compile_misses" if entry is None else "compile_hits")
+            _trace.annotate(compile_sig=_trace.sig_hash(key))
         if entry is None:
             try:
                 compiled = build()

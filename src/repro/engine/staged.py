@@ -47,6 +47,7 @@ from repro.engine.physical import PhysicalCompiler
 from repro.engine.sampling import (bucket_blocks, draw_block_ids,
                                    restrict_block_ids, subdraw_positions)
 from repro.engine.table import BlockTable
+from repro.obs import trace as _trace
 
 DEFAULT_STAGED_RATES: Tuple[float, ...] = (0.01, 0.04, 0.16)
 
@@ -220,13 +221,17 @@ class SampleCatalog:
         return lad.seed if lad is not None else default
 
     # -- counters -------------------------------------------------------------
+    # The single staged hit/miss choke point (mono and dist routes both land
+    # here), so the trace tags ride along with the counters.
     def note_hit(self) -> None:
         with self._lock:
             self.hits += 1
+        _trace.annotate_count("staged_hits")
 
     def note_miss(self) -> None:
         with self._lock:
             self.misses += 1
+        _trace.annotate_count("staged_misses")
 
     # -- budget ---------------------------------------------------------------
     def _enforce_budget(self) -> None:  # caller holds the lock

@@ -1,0 +1,18 @@
+"""Observability: query-lifecycle tracing, unified metrics, guarantee audit.
+
+Three pieces, each opt-in and read-only over the query path:
+
+* :mod:`repro.obs.trace` — per-query span trees (``SessionConfig.tracing``)
+  exportable as JSON or Chrome trace-event format via ``handle.trace()``.
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry + collector
+  snapshots; Prometheus text exposition via ``gateway.metrics_text()``.
+* :mod:`repro.obs.audit` — EXPLAIN-style reports (``handle.explain()``) and
+  opt-in observed-vs-promised error auditing (``SessionConfig.audit``).
+
+See ``docs/observability.md`` for the span vocabulary, metric names, and
+the audit-mode non-perturbation contract.
+"""
+
+from repro.obs.trace import QueryTrace, span, annotate, annotate_count  # noqa: F401
+from repro.obs.metrics import MetricsRegistry, GLOBAL  # noqa: F401
+from repro.obs.audit import GuaranteeAuditor, AuditRecord, explain  # noqa: F401

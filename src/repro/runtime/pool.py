@@ -130,6 +130,21 @@ class AsyncRuntime:
             return (self.pilot_fanouts, self.pilot_fanout_wall_s,
                     self.pilot_fanout_serial_s)
 
+    def totals(self) -> dict:
+        """One consistent snapshot of the runtime's cumulative counters —
+        the metrics registry's "runtime" collector reads this (one lock
+        acquisition, no torn reads across fields)."""
+        with self._lock:
+            return {
+                "workers": self.workers,
+                "pilot_workers": self.pilot_workers,
+                "in_flight": self._in_flight,
+                "groups_total": self.total_groups,
+                "pilot_fanouts": self.pilot_fanouts,
+                "pilot_fanout_wall_s": self.pilot_fanout_wall_s,
+                "pilot_fanout_serial_s": self.pilot_fanout_serial_s,
+            }
+
     # -- execution -----------------------------------------------------------
     def run_groups(self, groups: List[List["QueryHandle"]],
                    block: bool = True) -> None:

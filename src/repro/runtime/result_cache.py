@@ -213,6 +213,10 @@ class ResultCache:
             self._bytes = 0
 
     def info(self) -> ResultCacheInfo:
+        """One consistent counter snapshot (single lock acquisition).  The
+        session metrics registry's ``result_cache`` collector reads this —
+        the numbers surfaced by ``gateway.stats_payload()["result_cache"]``
+        and the Prometheus exposition are exactly these fields."""
         with self._lock:
             return ResultCacheInfo(
                 hits=self._hits, misses=self._misses,

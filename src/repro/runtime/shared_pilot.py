@@ -50,6 +50,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 from repro.core.taqa import (FinalStage, PilotOutcome, advisory_estimate,
                              pilot_params)
+from repro.obs import trace as _trace
 from repro.stream import pilot_frame_for
 
 if TYPE_CHECKING:  # runtime layering: session owns the runtime
@@ -94,8 +95,18 @@ def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
     submission order."""
     shared: List[List["QueryHandle"]] = []
     for members in subgroup_by_pilot(handles):
-        live = [h for h in members
-                if not h.done and not session._serve_cached(h)]
+        live = []
+        for h in members:
+            if h.done:
+                continue
+            # per-member trace activation: the cache probe's span must land
+            # on ITS handle's tree, not a neighbor's
+            token = _trace.activate(h._trace)
+            try:
+                if not session._serve_cached(h):
+                    live.append(h)
+            finally:
+                _trace.deactivate(token)
         if not live:
             continue
         if live[0].spec is None or not session.config.share_pilots:
@@ -171,19 +182,42 @@ def _pilot_and_prepare(session: "Session",
     gen = session._scan_generations(leader.query)
     for h in live:
         h._mark_running()
+    shared = len(live) > 1
+    # the shared pilot executes ONCE, on the leader's trace: deep tags
+    # (staged rung, shard fan-out, compile hit/miss) annotate the leader's
+    # open "pilot" span; members get a retroactive summary span below
+    token = _trace.activate(leader._trace)
     try:
-        outcome = session.db.run_pilot(leader.query, leader.spec, pilot_seed)
+        with _trace.span("pilot", shared=shared, owner=True,
+                         members=len(live)) as sp:
+            outcome = session.db.run_pilot(leader.query, leader.spec,
+                                           pilot_seed)
+            rep = outcome.report
+            sp.set(table=rep.pilot_table, theta_pilot=rep.theta_pilot,
+                   n_pilot_blocks=rep.n_pilot_blocks,
+                   scanned_bytes=rep.pilot_scanned_bytes,
+                   fallback=rep.fallback)
     except Exception as e:
         # every member's solo pilot would have raised identically
         for h in live:
             h._mark_failed(f"{type(e).__name__}: {e}")
         return []
+    finally:
+        _trace.deactivate(token)
+    for h in live[1:]:
+        if h._trace is not None:
+            h._trace.record(
+                "pilot", duration_s=rep.pilot_time_s, shared=True,
+                owner=False, table=rep.pilot_table,
+                theta_pilot=rep.theta_pilot,
+                n_pilot_blocks=rep.n_pilot_blocks,
+                scanned_bytes=rep.pilot_scanned_bytes,
+                fallback=rep.fallback)
     # fan the shared pilot's advisory estimate out to EVERY member the
     # moment stage 1 returns — before any stage-2 planning or dispatch.
     # Members share pilot statistics but not necessarily confidence, so
     # the t-interval is computed per distinct confidence level.
     ests: Dict[float, Optional[object]] = {}
-    shared = len(live) > 1
     for h in live:
         conf = h.spec.confidence
         if conf not in ests:
@@ -193,26 +227,36 @@ def _pilot_and_prepare(session: "Session",
     pend: List[_Pending] = []
     seen_keys = set()
     for h in live:
-        # an earlier drain's completion may have populated the result cache
-        # with this member's exact (query, spec, seed) answer
-        if session._serve_cached(h):
-            continue
-        p = _Pending(handle=h, gen=gen, outcome=outcome,
-                     est=ests.get(h.spec.confidence))
-        key = session._cache_key(h)
-        if session.result_cache.enabled and key in seen_keys:
-            # identical re-issue inside one drain: the earlier member's
-            # completion will cache the answer — defer instead of paying a
-            # duplicate final execution
-            pend.append(p)
-            continue
-        seen_keys.add(key)
+        token = _trace.activate(h._trace)
         try:
-            p.stage = session.db.prepare_final(h.query, h.spec, outcome,
-                                               seed=h.seed)
-        except Exception as e:  # a member failing alone must not sink peers
-            p.failed = f"{type(e).__name__}: {e}"
-        pend.append(p)
+            # an earlier drain's completion may have populated the result
+            # cache with this member's exact (query, spec, seed) answer
+            if session._serve_cached(h):
+                continue
+            p = _Pending(handle=h, gen=gen, outcome=outcome,
+                         est=ests.get(h.spec.confidence))
+            key = session._cache_key(h)
+            if session.result_cache.enabled and key in seen_keys:
+                # identical re-issue inside one drain: the earlier member's
+                # completion will cache the answer — defer instead of paying
+                # a duplicate final execution
+                pend.append(p)
+                continue
+            seen_keys.add(key)
+            try:
+                with _trace.span("rate_solve") as sp:
+                    p.stage = session.db.prepare_final(h.query, h.spec,
+                                                       outcome, seed=h.seed)
+                    srep = p.stage.report
+                    sp.set(candidates=srep.candidates,
+                           fallback=srep.fallback,
+                           rates=dict(srep.plan.rates)
+                           if srep.plan is not None else None)
+            except Exception as e:  # a failing member must not sink peers
+                p.failed = f"{type(e).__name__}: {e}"
+            pend.append(p)
+        finally:
+            _trace.deactivate(token)
     return pend
 
 
@@ -230,27 +274,41 @@ def _complete_one(session: "Session", p: _Pending, box: dict) -> None:
     h = p.handle
     if h.done:
         return
-    if p.failed is not None:
-        h._mark_failed(p.failed)
-        return
-    # a peer's completion may have cached this member's answer already
-    if session._serve_cached(h):
-        return
+    token = _trace.activate(h._trace)
     try:
-        if p.stage is None:  # deferred duplicate whose peer failed
-            p.stage = session.db.prepare_final(h.query, h.spec,
-                                               p.outcome, seed=h.seed)
-        ans = session.db.run_final(p.stage)
-        ans.report.pilot_shared = not box["owns"]
-        # ownership sticks only to a COMPLETED answer: if completion
-        # fails (mid-flight table replacement), the next member carries
-        # the non-shared report so drain stats still see the stage.
-        # (If every member fails, the stage shows only in
-        # executor.pilots_run — drain stats count completed answers.)
-        if session._complete_handle(h, ans, p.gen, pilot_est=p.est):
-            box["owns"] = False
-    except Exception as e:  # a member failing alone must not sink peers
-        h._mark_failed(f"{type(e).__name__}: {e}")
+        if p.failed is not None:
+            h._mark_failed(p.failed)
+            return
+        # a peer's completion may have cached this member's answer already
+        if session._serve_cached(h):
+            return
+        try:
+            if p.stage is None:  # deferred duplicate whose peer failed
+                with _trace.span("rate_solve", deferred=True):
+                    p.stage = session.db.prepare_final(h.query, h.spec,
+                                                       p.outcome, seed=h.seed)
+            # a stage answered before this sweep means the group's batched
+            # lax.map dispatch landed it (or a rate-solve fallback
+            # short-circuited to exact) — run_final just returns it
+            pre_answered = p.stage.answer is not None
+            with _trace.span("final") as sp:
+                ans = session.db.run_final(p.stage)
+                sp.set(batched=pre_answered and ans.report.fallback is None,
+                       scanned_bytes=ans.report.final_scanned_bytes,
+                       fallback=ans.report.fallback)
+            ans.report.pilot_shared = not box["owns"]
+            # ownership sticks only to a COMPLETED answer: if completion
+            # fails (mid-flight table replacement), the next member carries
+            # the non-shared report so drain stats still see the stage.
+            # (If every member fails, the stage shows only in
+            # executor.pilots_run — drain stats count completed answers.)
+            with _trace.span("deliver"):
+                if session._complete_handle(h, ans, p.gen, pilot_est=p.est):
+                    box["owns"] = False
+        except Exception as e:  # a member failing alone must not sink peers
+            h._mark_failed(f"{type(e).__name__}: {e}")
+    finally:
+        _trace.deactivate(token)
 
 
 def _complete_subgroup(session: "Session", pend: List[_Pending],

@@ -25,6 +25,7 @@ request is refused, not failed — the client retries after results drain):
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
@@ -61,6 +62,11 @@ class GatewayStats:
         return out
 
 
+# Distinguishes collector names when several gateways share one session's
+# metrics registry (each gateway keeps separate GatewayStats).
+_GATEWAY_SEQ = itertools.count()
+
+
 class SqlGateway:
     def __init__(self, session: Session, *, batch_size: Optional[int] = None,
                  max_pending: Optional[int] = None,
@@ -86,6 +92,12 @@ class SqlGateway:
         # session, and two gateways over one session keep separate stats.
         self.scheduler = QueryScheduler(session)
         self.stats = GatewayStats()
+        # Expose this gateway's counters through the session's metrics
+        # registry: the collector holds the gateway only weakly (owner), so
+        # a dropped gateway disappears from scrapes instead of leaking.
+        self._collector_name = f"gateway_{next(_GATEWAY_SEQ)}"
+        session.metrics.register_collector(
+            self._collector_name, self.stats.as_dict, owner=self)
         self._tickets: Dict[int, Tuple[str, QueryHandle]] = {}
         # per-client bounded frame queues (submit_streaming tickets push
         # here from runtime workers; frames_for drains on the client's turn)
@@ -220,58 +232,66 @@ class SqlGateway:
         return delivered
 
     def stats_payload(self) -> Dict[str, object]:
-        """One serving-stats payload: this gateway's request counters plus
-        the session-level caches and distribution state callers previously
-        had to assemble from session internals.
+        """One serving-stats payload — a VIEW over the session's metrics
+        registry (:meth:`repro.obs.MetricsRegistry.tree`) plus this
+        gateway's own request counters.  The key schema below is PINNED
+        (tests/test_serve.py asserts it recursively); new keys are additive
+        only, existing keys never change type or disappear.
 
-        * ``gateway``       — the per-gateway :class:`GatewayStats` counters;
+        * ``gateway``       — the per-gateway :class:`GatewayStats` counters:
+          ``requests`` / ``rejected`` (parse failures) / ``throttled``
+          (backpressure refusals) / ``served`` / ``drains`` /
+          ``compile_misses`` / ``compile_hits`` / ``pilots_run`` /
+          ``result_hits`` / ``streams`` / ``frames_pushed`` /
+          ``frames_dropped`` / derived ``cache_hit_rate``;
         * ``compile_cache`` — :meth:`repro.engine.Executor.compile_cache_info`
-          (hits / misses / resident executables, session-global);
-        * ``result_cache``  — result-cache hit/miss/eviction AND byte
-          counters (``bytes_used`` / ``max_bytes``, session-global);
-        * ``shard_scanned_bytes`` — per-shard sampled-slab attribution per
-          partitioned table (``repro.dist``), empty when nothing is sharded;
+          (``hits`` / ``misses`` / ``size`` resident executables plus
+          ``staged_hits`` / ``staged_misses``, session-global);
+        * ``result_cache``  — result-cache ``hits`` / ``misses`` /
+          ``evictions`` / ``invalidations`` / ``size`` / ``capacity`` AND
+          byte counters ``bytes_used`` / ``max_bytes`` / derived
+          ``hit_rate`` (session-global);
+        * ``shard_scanned_bytes`` — per-shard sampled-slab byte attribution
+          per partitioned table (``repro.dist``), empty when nothing is
+          sharded;
         * ``staged``        — the materialized sample-catalog state
-          (:meth:`repro.engine.Executor.staged_info`: hit/miss/eviction
-          counters, per-table ladders, resident bytes).  ALWAYS present with
-          the full key schema — a session with no ladders (or an executor
+          (:meth:`repro.engine.Executor.staged_info`: ``hits`` / ``misses``
+          / ``evictions`` counters, ``resident_bytes`` / ``max_bytes``,
+          per-table ladders under ``tables``).  ALWAYS present with the
+          full key schema — a session with no ladders (or an executor
           without a staged catalog) reports zero counters and empty
-          ``tables``, so payload consumers never key-check.
+          ``tables``, so payload consumers never key-check;
+        * ``runtime``       — async-runtime totals (``workers`` /
+          ``pilot_workers`` / ``in_flight`` / ``groups_total`` / pilot
+          fan-out counters) plus executor ``queries_run`` / ``pilots_run``;
+        * ``audit``         — guarantee-auditor summary (``runs`` /
+          ``violations`` / ``errors`` / ``max_error_ratio``; zeros when
+          :attr:`SessionConfig.audit` is off).
         """
-        compile_info = self.session.compile_cache_info()
-        result_info = self.session.result_cache_info()
-        shard_info = getattr(self.session.executor, "shard_scan_info",
-                             lambda: {})()
-        # pinned payload schema: merge whatever the executor reports over a
+        tree = self.session.metrics.tree()
+        # pinned payload schema: merge the registry's staged snapshot over a
         # full-key skeleton (duck-typed executors may lack staged_info)
         staged_info = {"hits": 0, "misses": 0, "evictions": 0,
                        "resident_bytes": 0, "max_bytes": None, "tables": {}}
-        staged_info.update(getattr(self.session.executor, "staged_info",
-                                   lambda: {})())
+        staged_info.update(tree.get("staged") or {})
+        audit_info = {"runs": 0, "violations": 0, "errors": 0,
+                      "max_error_ratio": 0.0}
+        audit_info.update(tree.get("audit") or {})
         return {
             "gateway": self.stats.as_dict(),
-            "compile_cache": {
-                "hits": compile_info.hits,
-                "misses": compile_info.misses,
-                "size": compile_info.size,
-                "staged_hits": compile_info.staged_hits,
-                "staged_misses": compile_info.staged_misses,
-            },
-            "result_cache": {
-                "hits": result_info.hits,
-                "misses": result_info.misses,
-                "evictions": result_info.evictions,
-                "invalidations": result_info.invalidations,
-                "size": result_info.size,
-                "capacity": result_info.capacity,
-                "bytes_used": result_info.bytes_used,
-                "max_bytes": result_info.max_bytes,
-                "hit_rate": result_info.hit_rate,
-            },
-            "shard_scanned_bytes": {t: list(v)
-                                    for t, v in shard_info.items()},
+            "compile_cache": tree.get("compile_cache") or {},
+            "result_cache": tree.get("result_cache") or {},
+            "shard_scanned_bytes": tree.get("shard_scanned_bytes") or {},
             "staged": staged_info,
+            "runtime": tree.get("runtime") or {},
+            "audit": audit_info,
         }
+
+    def metrics_text(self) -> str:
+        """The session's full metrics registry — first-class instruments
+        plus every live collector snapshot (this gateway's counters
+        included) — rendered in Prometheus text exposition format."""
+        return self.session.metrics.to_text()
 
     def results_for(self, client_id: str) -> List[QueryHandle]:
         """This client's not-yet-delivered handles (pending or undelivered

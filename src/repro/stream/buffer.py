@@ -31,8 +31,12 @@ from repro.stream.frames import Frame
 
 
 class FrameBuffer:
-    def __init__(self, query_id: int):
+    def __init__(self, query_id: int, t0: Optional[float] = None):
         self.query_id = query_id
+        # the zero point of every frame's relative `emitted_at` stamp —
+        # handles pass their submission instant (QueryHandle.t_submit);
+        # default: buffer creation
+        self.t0 = time.perf_counter() if t0 is None else t0
         self._cond = threading.Condition()
         self._frames: List[Frame] = []
         self._callbacks: List[Callable[[Frame], None]] = []
@@ -49,6 +53,8 @@ class FrameBuffer:
                 return frame
             frame.seq = len(self._frames)
             frame.t_emit = time.perf_counter()
+            # submit-relative latency stamp, monotone in seq (one clock)
+            frame.emitted_at = frame.t_emit - self.t0
             self._frames.append(frame)
             if frame.terminal:
                 self._closed = True

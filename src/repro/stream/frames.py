@@ -21,9 +21,9 @@ advisory frames followed by exactly one terminal frame.
   a frame, never raised through a streaming client (mirroring
   ``QueryHandle``'s failure-capture contract).
 
-``seq`` and ``t_emit`` are assigned by the :class:`repro.stream.FrameBuffer`
-at emission (monotone per query); frames are immutable by convention after
-that point.
+``seq``, ``t_emit`` and ``emitted_at`` are assigned by the
+:class:`repro.stream.FrameBuffer` at emission (monotone per query); frames
+are immutable by convention after that point.
 """
 
 from __future__ import annotations
@@ -41,6 +41,11 @@ class Frame:
     query_id: int = -1
     seq: int = -1                 # 0-based emission index within the stream
     t_emit: float = 0.0           # time.perf_counter() at emission
+    # seconds since the query was SUBMITTED (the buffer's t0, which handles
+    # pin to QueryHandle.t_submit): a client-computable latency stamp —
+    # TTFF is the first frame's emitted_at, time-to-final the terminal
+    # frame's — monotone in seq by construction (one emission clock)
+    emitted_at: float = 0.0
 
     advisory: ClassVar[bool] = False
     terminal: ClassVar[bool] = False

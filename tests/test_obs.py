@@ -1,0 +1,470 @@
+"""Observability layer (repro.obs): tracing, metrics registry, auditor.
+
+The hard contracts under test:
+
+* tracing OFF (the default) carries NO trace object anywhere — today's
+  path, byte for byte;
+* tracing ON changes no answer: bit-identical to the untraced equal-seed
+  session across solo / herd / batched / cached / staged / sharded runs
+  (spans only observe — perf_counter + attr dicts);
+* every COMPLETED, FALLBACK, or FAILED query yields a CLOSED span tree
+  (open_spans() == []), including mid-group captured failures, and the
+  ErrorFrame path still terminates a blocked stream();
+* the metrics registry absorbs the scattered counters (collectors match
+  their sources) and renders Prometheus text; collectors die with their
+  owners;
+* audit mode perturbs nothing (bit-identical answers, untouched cache
+  keys) while recording observed <= promised error for honest runs.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import ErrorFrame, FinalFrame, PilotFrame, Session, \
+    SessionConfig
+from repro.core.taqa import PilotDB
+from repro.engine.datagen import tpch_catalog
+from repro.obs import GLOBAL, GuaranteeAuditor, MetricsRegistry, QueryTrace
+from repro.obs import trace as trace_mod
+from repro.obs.audit import provenance_of
+from repro.serve.sql_gateway import SqlGateway
+
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_quantity < 24 ERROR 8% CONFIDENCE 95%")
+GROUPED_SQL = ("SELECT SUM(l_quantity) AS q, COUNT(*) AS n FROM lineitem "
+               "WHERE l_quantity < 30 GROUP BY l_returnflag MAXGROUPS 3 "
+               "ERROR 10% CONFIDENCE 90%")
+
+SERIAL_CFG = SessionConfig(async_workers=0, share_pilots=False,
+                           result_cache_size=0)
+NOCACHE_CFG = SessionConfig(async_workers=4, result_cache_size=0)
+TRACE_SERIAL = SessionConfig(async_workers=0, share_pilots=False,
+                             result_cache_size=0, tracing=True)
+TRACE_HERD = SessionConfig(async_workers=4, result_cache_size=0,
+                           tracing=True)
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(scale_rows=200_000, block_rows=32, seed=0)
+
+
+def _assert_bitwise(a, b):
+    assert np.array_equal(a.values, b.values)
+    assert np.array_equal(a.group_present, b.group_present)
+    assert list(a.names) == list(b.names)
+
+
+# ---------------------------------------------------------------------------
+# Zero-overhead default: tracing OFF is today's path
+# ---------------------------------------------------------------------------
+
+def test_tracing_off_by_default(catalog):
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    h = s.sql(HERD_SQL)
+    assert h._trace is None
+    assert h.trace() is None and h.trace("chrome") is None
+    assert trace_mod.active() is None
+    # instrumentation points degrade to the shared no-op span
+    assert trace_mod.span("anything") is trace_mod.NULL_SPAN
+
+
+def test_trace_format_validated(catalog):
+    s = Session(catalog, seed=3, config=TRACE_SERIAL)
+    h = s.sql(HERD_SQL)
+    with pytest.raises(ValueError):
+        h.trace(fmt="protobuf")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: tracing observes, never steers
+# ---------------------------------------------------------------------------
+
+def test_traced_solo_bitwise_identical(catalog):
+    plain = Session(catalog, seed=3, config=SERIAL_CFG).sql(HERD_SQL)
+    traced = Session(catalog, seed=3, config=TRACE_SERIAL).sql(HERD_SQL)
+    assert traced.fallback is None
+    _assert_bitwise(traced.answer, plain.answer)
+
+
+def test_traced_herd_bitwise_identical(catalog):
+    solo = Session(catalog, seed=11, config=SERIAL_CFG).sql(HERD_SQL)
+    rt = Session(catalog, seed=11, config=TRACE_HERD)
+    handles = [rt.submit(HERD_SQL) for _ in range(5)]
+    p0 = rt.executor.pilots_run
+    rt.drain()
+    assert rt.executor.pilots_run - p0 == 1  # tracing kept pilot sharing
+    for h in handles:
+        _assert_bitwise(h.answer, solo.answer)
+        assert h._trace is not None and h._trace.open_spans() == []
+    rt.close()
+
+
+def test_traced_batched_finals_bitwise(catalog):
+    template = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+                "WHERE l_quantity < {} ERROR 10% CONFIDENCE 90%")
+    cuts = [18, 24, 30, 36]
+    serial = Session(catalog, seed=9, config=SERIAL_CFG)
+    want = {c: serial.sql(template.format(c)).answer for c in cuts}
+    rt = Session(catalog, seed=9, config=TRACE_HERD)
+    handles = {c: rt.submit(template.format(c)) for c in cuts}
+    rt.drain()
+    for c, h in handles.items():
+        _assert_bitwise(h.answer, want[c])
+        assert h._trace.open_spans() == []
+    rt.close()
+
+
+def test_traced_cached_reissue_bitwise_and_provenance(catalog):
+    s = Session(catalog, seed=13, config=SessionConfig(tracing=True))
+    first = s.sql(HERD_SQL)
+    again = s.sql(HERD_SQL)
+    assert again.cached
+    _assert_bitwise(again.answer, first.answer)
+    assert again._trace.open_spans() == []
+    hits = [sp for sp in again._trace.find("cache_lookup")
+            if sp.attrs.get("hit")]
+    assert hits  # the trace recorded the cache serve
+    assert provenance_of(again) == "cached"
+    s.close()
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_traced_sharded_bitwise_with_fanout_span(catalog, shards):
+    mono = Session(catalog, seed=31, config=SERIAL_CFG).sql(GROUPED_SQL)
+    s = Session(seed=31, config=TRACE_SERIAL)
+    for name, tab in catalog.items():
+        s.register_table(name, tab,
+                         shards=shards if name == "lineitem" else None)
+    h = s.sql(GROUPED_SQL)
+    _assert_bitwise(h.answer, mono.answer)
+    fanouts = h._trace.find("shard_fanout")
+    if mono.fallback is None:
+        assert fanouts and fanouts[0].attrs["shards"] == shards
+        assert "+dist" in provenance_of(h)
+
+
+def test_traced_staged_bitwise_with_staged_tags(catalog):
+    def _run(rates, cfg):
+        s = Session(seed=41, config=cfg)
+        for name, tab in catalog.items():
+            s.register_table(name, tab,
+                             staged_rates=rates if name == "lineitem"
+                             else None)
+        return s, s.sql(HERD_SQL)
+
+    _, ref = _run([1e-9], SERIAL_CFG)      # ladder that never serves
+    s, hot = _run(True, TRACE_SERIAL)      # default ladder, traced
+    assert s.executor.staged_info()["hits"] > 0
+    _assert_bitwise(hot.answer, ref.answer)
+    tagged = [sp for sp in hot._trace.find("scan")
+              if sp.attrs.get("staged")]
+    assert tagged  # staged-rung serves are visible in the trace
+    assert "+staged" in provenance_of(hot)
+
+
+# ---------------------------------------------------------------------------
+# Span tree: vocabulary, closure, export
+# ---------------------------------------------------------------------------
+
+def test_solo_span_vocabulary_and_attrs(catalog):
+    s = Session(catalog, seed=3, config=TRACE_SERIAL)
+    h = s.sql(HERD_SQL)
+    tr = h._trace
+    assert tr.status == "ok" and tr.open_spans() == []
+    names = set(tr.span_names())
+    assert {"query", "parse", "lower", "pilot", "rate_solve",
+            "final", "deliver"} <= names
+    pilot, = tr.find("pilot")
+    assert pilot.attrs["table"] == "lineitem"
+    assert pilot.attrs["scanned_bytes"] > 0
+    assert pilot.attrs["shared"] is False
+    final, = tr.find("final")
+    assert final.attrs["scanned_bytes"] > 0
+    lower, = tr.find("lower")
+    assert lower.attrs["seed"] == h.seed
+    # nested engine scans attach under their stages
+    assert any(c.name == "scan" for c in pilot.children)
+
+
+def test_scheduled_drain_closes_schedule_span(catalog):
+    s = Session(catalog, seed=3, config=TRACE_HERD)
+    h = s.submit(HERD_SQL)
+    assert "schedule" in h._trace.open_spans()
+    s.drain()
+    assert h._trace.open_spans() == []
+    sched, = h._trace.find("schedule")
+    assert sched.t1 is not None
+    s.close()
+
+
+def test_trace_exports_json_and_chrome(catalog):
+    s = Session(catalog, seed=3, config=TRACE_SERIAL)
+    h = s.sql(HERD_SQL)
+    tree = h.trace()
+    json.dumps(tree)  # JSON-able throughout
+    assert tree["status"] == "ok" and tree["root"]["name"] == "query"
+    assert tree["root"]["attrs"]["sql"] == HERD_SQL
+    events = h.trace("chrome")
+    json.dumps(events)
+    assert all(e["ph"] == "X" and e["pid"] == h.query_id for e in events)
+    assert {e["name"] for e in events} >= {"query", "pilot", "final"}
+    # durations in microseconds, start times relative to the trace
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in events)
+
+
+def test_failed_query_trace_closed_with_error_status(catalog):
+    s = Session(catalog, seed=3, config=TRACE_HERD)
+    h = s.submit("SELECT COUNT(*) AS n FROM not_a_table GROUP BY g")
+    s.drain()
+    assert h.status == "failed"
+    assert h._trace.status == "error" and h._trace.open_spans() == []
+    assert h.trace()["root"]["attrs"]["error"] == h.error
+    s.close()
+
+
+def test_mid_group_failure_traced_closes_spans_and_error_frame(
+        catalog, monkeypatch):
+    """Satellite: a mid-group failure under tracing must close the failed
+    member's span tree AND emit its terminal ErrorFrame — stream() ends."""
+    base = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+            "WHERE l_shipdate < 2000 ")
+    sqls = [base + f"ERROR {e}% CONFIDENCE 95%" for e in (8, 7, 6)]
+    session = Session(catalog, seed=5, config=TRACE_HERD)
+    real = PilotDB.prepare_final
+
+    def flaky(self, q, spec, outcome, seed, shared=False):
+        if abs(spec.error - 0.07) < 1e-12:
+            raise RuntimeError("worker exploded mid-group")
+        return real(self, q, spec, outcome, seed, shared=shared)
+
+    monkeypatch.setattr(PilotDB, "prepare_final", flaky)
+    handles = [session.submit(s, stream=True) for s in sqls]
+    session.drain()
+    assert [h.status for h in handles] == ["done", "failed", "done"]
+    for h in handles:
+        assert h._trace.open_spans() == []  # every tree closed
+        frames = list(h.stream())           # terminates, never hangs
+        assert frames[-1].terminal
+    failed = handles[1]
+    assert failed._trace.status == "error"
+    assert isinstance(failed.frames()[-1], ErrorFrame)
+    # siblings still completed with full span trees and pilot sharing
+    assert {"pilot", "final"} <= set(handles[0]._trace.span_names())
+    session.close()
+
+
+def test_trace_mechanics_null_span_after_finish():
+    tr = QueryTrace(0)
+    with tr.span("a", k=1) as sp:
+        assert tr.open_spans() == ["query", "a"]
+        sp.set(extra=2)
+    assert tr.open_spans() == ["query"]
+    tr.finish("ok")
+    assert tr.finished and tr.open_spans() == []
+    # post-finish instrumentation degrades to no-ops
+    assert tr.span("late") is trace_mod.NULL_SPAN
+    before = tr.span_names()
+    tr.record("late2")
+    tr.finish("error")  # idempotent: first status wins
+    assert tr.span_names() == before and tr.status == "ok"
+
+
+def test_trace_span_error_status_on_exception():
+    tr = QueryTrace(1)
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("bad")
+    sp, = tr.find("boom")
+    assert sp.status == "error" and "RuntimeError: bad" in sp.attrs["error"]
+    assert not sp.open
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_instruments_get_or_create_and_kinds():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "help text")
+    c.inc()
+    c.inc(2)
+    assert reg.counter("x_total").value == 3
+    g = reg.gauge("x_now")
+    g.set(1.5)
+    assert g.value == 1.5
+    hist = reg.histogram("x_seconds")
+    hist.observe(0.003)
+    hist.observe(0.3)
+    assert hist.count == 2 and hist.max == 0.3
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")  # kind mismatch is a bug, not a new metric
+
+
+def test_registry_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests").inc(4)
+    reg.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(0.5)
+    reg.register_collector("cache", lambda: {"hits": 2, "nested": {"n": 1},
+                                             "name": "dropme"})
+    text = reg.to_text()
+    assert "# TYPE req_total counter" in text
+    assert "req_total 4" in text
+    assert '# HELP req_total requests' in text
+    assert 'lat_seconds_bucket{le="0.1"} 0' in text
+    assert 'lat_seconds_bucket{le="1"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "lat_seconds_count 1" in text
+    # collector snapshots flatten to path-joined gauges; strings dropped
+    assert "cache_hits 2" in text and "cache_nested_n 1" in text
+    assert "dropme" not in text
+    assert text.endswith("\n")
+
+
+def test_registry_collector_dies_with_owner():
+    reg = MetricsRegistry()
+
+    class Owner:
+        pass
+
+    o = Owner()
+    reg.register_collector("mine", lambda: {"v": 1}, owner=o)
+    assert reg.tree() == {"mine": {"v": 1}}
+    del o
+    assert reg.tree() == {}  # pruned at read, never a dead scrape
+
+
+def test_session_collectors_match_sources(catalog):
+    s = Session(catalog, seed=5)
+    s.sql(HERD_SQL)
+    tree = s.metrics.tree()
+    info = s.compile_cache_info()
+    assert tree["compile_cache"]["hits"] == info.hits
+    assert tree["compile_cache"]["misses"] == info.misses
+    rc = s.result_cache_info()
+    assert tree["result_cache"]["hits"] == rc.hits
+    assert tree["result_cache"]["bytes_used"] == rc.bytes_used
+    assert tree["staged"]["tables"] == {}
+    assert tree["runtime"]["queries_run"] == s.executor.queries_run
+    assert tree["runtime"]["pilots_run"] == s.executor.pilots_run
+    assert tree["audit"] == {"runs": 0, "violations": 0, "errors": 0,
+                             "max_error_ratio": 0.0}
+    s.close()
+
+
+def test_drain_counters_land_in_registry(catalog):
+    s = Session(catalog, seed=5, config=NOCACHE_CFG)
+    s.submit(HERD_SQL)
+    s.submit(HERD_SQL)
+    s.drain()
+    assert s.metrics.counter("pilotdb_drains_total").value == 1
+    assert s.metrics.counter("pilotdb_drained_queries_total").value == 2
+    assert s.metrics.histogram("pilotdb_drain_wall_seconds").count == 1
+    s.close()
+
+
+def test_gateway_metrics_text_includes_gateway_counters(catalog):
+    s = Session(catalog, seed=5)
+    gw = SqlGateway(s)
+    gw.submit("c0", HERD_SQL)
+    gw.run()
+    text = gw.metrics_text()
+    assert f"{gw._collector_name}_requests 1" in text
+    assert "compile_cache_hits" in text
+    assert "result_cache_bytes_used" in text
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# Guarantee auditor
+# ---------------------------------------------------------------------------
+
+def test_audit_mode_bit_identical_and_honest(catalog):
+    plain = Session(catalog, seed=7, config=SERIAL_CFG).sql(HERD_SQL)
+    audit_cfg = SessionConfig(async_workers=0, share_pilots=False,
+                              result_cache_size=0, tracing=True, audit=True)
+    s = Session(catalog, seed=7, config=audit_cfg)
+    h = s.sql(HERD_SQL)
+    # non-perturbation: the audited answer is the unaudited one, bitwise
+    _assert_bitwise(h.answer, plain.answer)
+    rec = h.audit_record
+    assert rec is not None and rec.skipped is None
+    assert rec.passed and rec.observed_error <= rec.promised_error
+    assert 0.0 <= rec.error_ratio <= 1.0
+    assert rec.provenance == "fresh"
+    summ = s.auditor.summary()
+    assert summ["runs"] == 1 and summ["violations"] == 0
+    assert summ["max_error_ratio"] == rec.error_ratio
+    # the ratio landed in the registry histogram + gauge
+    assert s.metrics.histogram("pilotdb_audit_error_ratio").count == 1
+    assert s.metrics.gauge(
+        "pilotdb_audit_max_error_ratio").value == rec.error_ratio
+
+
+def test_audit_skips_exact_answers_without_second_scan(catalog):
+    s = Session(catalog, seed=7, config=SessionConfig(audit=True))
+    h = s.sql("SELECT COUNT(*) AS n FROM lineitem")  # no spec: exact
+    rec = h.audit_record
+    assert rec.skipped == "answer is exact"
+    assert rec.observed_error == 0.0 and rec.passed
+    assert rec.exact_wall_s == 0.0  # no extra scan was paid
+    assert s.auditor.summary()["skipped_exact"] == 1
+    s.close()
+
+
+def test_audit_grouped_checks_every_covered_group(catalog):
+    cfg = SessionConfig(async_workers=0, share_pilots=False,
+                        result_cache_size=0, audit=True)
+    s = Session(catalog, seed=21, config=cfg)
+    h = s.sql(GROUPED_SQL)
+    rec = h.audit_record
+    if h.fallback is None:
+        assert rec.skipped is None
+        assert rec.groups_checked >= 1
+        assert rec.passed
+
+
+def test_audit_never_raises_into_query_path(catalog, monkeypatch):
+    cfg = SessionConfig(async_workers=0, share_pilots=False,
+                        result_cache_size=0, audit=True)
+    s = Session(catalog, seed=7, config=cfg)
+
+    def broken_exact(self, q):
+        raise RuntimeError("audit scan died")
+
+    monkeypatch.setattr(PilotDB, "exact", broken_exact)
+    h = s.sql(HERD_SQL)
+    assert h.status == "done"  # the client still got its answer
+    assert h.audit_record is None
+    assert s.auditor.summary()["errors"] == 1
+    assert s.metrics.counter("pilotdb_audit_errors_total").value == 1
+
+
+def test_explain_reports_guarantee_and_audit(catalog):
+    cfg = SessionConfig(async_workers=0, share_pilots=False,
+                        result_cache_size=0, tracing=True, audit=True)
+    s = Session(catalog, seed=7, config=cfg)
+    h = s.sql(HERD_SQL)
+    text = h.explain()
+    assert f"Query {h.query_id}:" in text
+    assert "ERROR 8% CONFIDENCE 95%" in text
+    assert "provenance: fresh" in text
+    assert "pilot: table=lineitem" in text
+    assert "solved rates" in text
+    assert "audit: observed=" in text and "[OK]" in text
+
+
+def test_explain_failed_handle(catalog):
+    s = Session(catalog, seed=3)
+    h = s.failed_handle("SELEKT 1", "SqlSyntaxError: nope")
+    text = h.explain()
+    assert "FAILED" in text and "SqlSyntaxError" in text
+    s.close()
+
+
+def test_global_registry_exists():
+    # the process-wide registry is importable and scrapes cleanly even
+    # when empty
+    assert isinstance(GLOBAL.to_text(), str)

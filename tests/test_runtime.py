@@ -184,6 +184,35 @@ def test_drain_stats_report_resolved_pool_widths(catalog):
         session.close()
 
 
+def test_drain_stats_reset_per_drain(catalog):
+    """Satellite contract (pinned by DrainStats' docstring): every field is
+    PER DRAIN — ``last_drain`` is replaced wholesale each call, counters
+    never carry over; cumulative totals live in ``scheduler.total_drained``
+    and the session metrics registry."""
+    session = Session(catalog, seed=5, config=NOCACHE_CFG)
+    session.submit(HERD_SQL)
+    session.submit(HERD_SQL)
+    session.drain()
+    first = session.scheduler.last_drain
+    assert first.n_queries == 2 and first.pilots_run == 1
+    session.submit(HERD_SQL)
+    session.drain()
+    second = session.scheduler.last_drain
+    assert second is not first            # replaced wholesale, not mutated
+    assert second.n_queries == 1          # this drain's batch only
+    assert second.pilots_run == 1         # NOT 2: no carry-over from drain 1
+    assert first.n_queries == 2           # the first snapshot is untouched
+    # cumulative totals accumulate elsewhere
+    assert session.scheduler.total_drained == 3
+    assert session.metrics.counter("pilotdb_drains_total").value == 2
+    assert session.metrics.counter(
+        "pilotdb_drained_queries_total").value == 3
+    # an empty drain still reports a fresh zeroed snapshot
+    session.drain()
+    assert session.scheduler.last_drain.n_queries == 0
+    session.close()
+
+
 # ---------------------------------------------------------------------------
 # Failure capture under the runtime
 # ---------------------------------------------------------------------------

@@ -216,10 +216,72 @@ def test_gateway_stats_payload_one_stop(aqp_session):
     assert payload["staged"]["tables"] == {}
     # the payload's top-level sections are a pinned contract too
     assert set(payload) == {"gateway", "compile_cache", "result_cache",
-                            "shard_scanned_bytes", "staged"}
+                            "shard_scanned_bytes", "staged", "runtime",
+                            "audit"}
     # streaming counters ride the gateway section
     assert {"streams", "frames_pushed",
             "frames_dropped"} <= set(payload["gateway"])
+
+
+# The full stats_payload() schema, every key documented in
+# SqlGateway.stats_payload's docstring.  SCHEMA-STABILITY CONTRACT: keys are
+# additive-only — extend these sets when adding a metric, never remove or
+# retype an existing key (dashboards key into this payload).
+_PAYLOAD_SCHEMA = {
+    "gateway": {"requests", "rejected", "throttled", "served", "drains",
+                "compile_misses", "compile_hits", "pilots_run",
+                "result_hits", "streams", "frames_pushed", "frames_dropped",
+                "cache_hit_rate"},
+    "compile_cache": {"hits", "misses", "size", "staged_hits",
+                      "staged_misses"},
+    "result_cache": {"hits", "misses", "evictions", "invalidations", "size",
+                     "capacity", "bytes_used", "max_bytes", "hit_rate"},
+    "shard_scanned_bytes": None,   # dict of table -> per-shard byte lists
+    "staged": {"hits", "misses", "evictions", "resident_bytes", "max_bytes",
+               "tables"},
+    "runtime": {"queries_run", "pilots_run", "workers", "pilot_workers",
+                "in_flight", "groups_total", "pilot_fanouts",
+                "pilot_fanout_wall_s", "pilot_fanout_serial_s"},
+    "audit": {"runs", "violations", "errors", "max_error_ratio"},
+}
+
+
+def test_gateway_stats_payload_schema_stable(aqp_session):
+    """Satellite contract: the payload schema is pinned recursively — every
+    documented section and key is present (with numeric leaves JSON-able)
+    on a warm gateway, so payload consumers never key-check."""
+    import json
+    gw = SqlGateway(aqp_session)
+    gw.submit("c0", "SELECT SUM(l_quantity) AS q FROM lineitem "
+                    "WHERE l_quantity < 30 ERROR 10% CONFIDENCE 90%")
+    gw.run()
+    payload = gw.stats_payload()
+    assert set(payload) == set(_PAYLOAD_SCHEMA)
+    for section, keys in _PAYLOAD_SCHEMA.items():
+        assert isinstance(payload[section], dict)
+        if keys is not None:
+            assert keys <= set(payload[section]), \
+                f"{section} lost keys: {keys - set(payload[section])}"
+    json.dumps(payload)  # the whole payload serves over the wire as-is
+    # the payload is a view over the metrics registry: same numbers
+    tree = aqp_session.metrics.tree()
+    assert payload["compile_cache"] == tree["compile_cache"]
+    assert payload["result_cache"] == tree["result_cache"]
+    assert payload["runtime"] == tree["runtime"]
+
+
+def test_gateway_metrics_text_prometheus(aqp_session):
+    """metrics_text() renders the session registry — gateway counters
+    included — in Prometheus text exposition format."""
+    gw = SqlGateway(aqp_session)
+    gw.submit("c0", "SELECT COUNT(*) AS n FROM lineitem")
+    gw.run()
+    text = gw.metrics_text()
+    assert text.endswith("\n")
+    for line in text.splitlines():
+        assert line.startswith("#") or len(line.split()) == 2
+    assert f"{gw._collector_name}_served 1" in text
+    assert "compile_cache_hits" in text
 
 
 def test_gateway_stats_payload_shard_attribution():

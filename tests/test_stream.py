@@ -61,6 +61,27 @@ def test_frame_buffer_orders_and_closes():
     assert [f.seq for f in buf.stream()] == [0, 1]
 
 
+def test_frames_carry_monotone_emitted_at(catalog):
+    """Satellite contract: every frame is stamped with ``emitted_at`` —
+    seconds since the query's submission (the buffer's t0 is the handle's
+    ``t_submit``) — non-negative and monotone in seq, so TTFF is simply the
+    first frame's stamp, with no cross-frame arithmetic."""
+    s = Session(catalog, seed=3, config=SERIAL_CFG)
+    h = s.sql(HERD_SQL, stream=True)
+    frames = list(h.stream())
+    assert len(frames) == 2
+    stamps = [f.emitted_at for f in frames]
+    assert all(t >= 0.0 for t in stamps)
+    assert stamps == sorted(stamps)  # monotone in seq
+    # emitted_at is the t_emit clock rebased to the handle's submit epoch
+    for f in frames:
+        assert f.emitted_at == f.t_emit - h.t_submit
+    # a standalone buffer (no explicit t0) self-anchors at construction
+    buf = FrameBuffer(9)
+    f = buf.push(Frame(query_id=9))
+    assert f.emitted_at >= 0.0
+
+
 def test_frame_buffer_callback_replays_backlog():
     buf = FrameBuffer(1)
     early = Frame(query_id=1)
