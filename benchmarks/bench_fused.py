@@ -1,0 +1,185 @@
+"""Fused single-launch TAQA benchmark: one device program vs two stages.
+
+Measures the headline of the fused path (``PilotDB.run_fused`` /
+``physical.compile_fused``): pilot scan -> BSAP rate solve -> final sampled
+aggregation as ONE device dispatch with zero host syncs between the stages,
+against the two-stage oracle (``PilotDB.query``: pilot launch, host round
+trip for the f64 rate solve, final launch).
+
+Bit-identity is asserted BEFORE any timing — the fused program must deliver
+``np.array_equal`` values and an identical error report for every seed, and
+exactly one ``device_dispatches`` increment per query (the oracle takes >=
+2).  A violation raises, which ``benchmarks.run --only fused`` turns into a
+nonzero exit — this is the CI smoke gate for the single-launch contract.
+
+A second section drives the same contract through the session: a
+constant-varied herd under ``SessionConfig(fused_taqa=True)`` (each
+singleton pilot subgroup routes through the fused program) vs the default
+two-stage drain (whose pilots ride the stacked batched-pilot dispatch).
+
+Emits ``BENCH_fused.json`` at the repo root for trajectory tracking.
+
+  PYTHONPATH=src python -m benchmarks.run --only fused
+  BENCH_ROWS=200000 PYTHONPATH=src python -m benchmarks.bench_fused
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE_ROWS, catalog, csv_row, save_results
+from repro.api import Session, SessionConfig
+from repro.core import CompositeAgg, ErrorSpec, PilotDB, Query
+from repro.engine import logical as L
+from repro.engine.executor import Executor
+from repro.engine.expr import And, Col
+
+BENCH_FUSED_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_fused.json")
+
+N_SEEDS = int(os.environ.get("BENCH_FUSED_SEEDS", 4))
+REPS = int(os.environ.get("BENCH_FUSED_REPS", 5))  # median-of, warm caches
+
+# ERROR 10% keeps the sampled plan feasible for EVERY pilot draw down to
+# the CI smoke scale (BENCH_ROWS=200000, seeds 0..7 checked); a tighter
+# target there solves some seeds to "no feasible plan cheaper than exact",
+# which routes the answer through the exact fallback (2 launches) and the
+# single-launch assertion would not be measuring the fused compose at all.
+SPEC = ErrorSpec(error=0.10, confidence=0.95)
+HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+            "WHERE l_shipdate BETWEEN 100 AND {hi} "
+            "AND l_discount BETWEEN 0.02 AND 0.08 AND l_quantity < 24 "
+            "ERROR 10% CONFIDENCE 95%")
+HERD_N = 4
+
+
+def _q6() -> Query:
+    pred = And(Col("l_shipdate").between(100, 1500),
+               And(Col("l_discount").between(0.02, 0.08),
+                   Col("l_quantity") < 24))
+    return Query(child=L.Filter(L.Scan("lineitem"), pred),
+                 aggs=(CompositeAgg("revenue", "sum",
+                                    Col("l_extendedprice") * Col("l_discount")),))
+
+
+def _measure_query(tables) -> dict:
+    """Per-seed PilotDB-level pairs: identity gate first, then warm wall."""
+    seeds, two_wall, fused_wall = [], [], []
+    for seed in range(N_SEEDS):
+        ex_two, ex_fused = Executor(tables), Executor(tables)
+        db_two = PilotDB(ex_two, large_table_rows=100_000)
+        db_fused = PilotDB(ex_fused, large_table_rows=100_000)
+
+        # ---- identity gate (warms both executors' compile caches) --------
+        ans_two = db_two.query(_q6(), SPEC, seed=seed)
+        launches_two = ex_two.device_dispatches
+        ans_fused = db_fused.run_fused(_q6(), SPEC, seed=seed)
+        launches_fused = ex_fused.device_dispatches
+        assert ans_fused is not None, "fused path did not engage"
+        assert launches_fused == 1, (
+            f"fused must be ONE launch, saw {launches_fused} (seed {seed})")
+        assert launches_two >= 2, launches_two
+        assert np.array_equal(ans_two.values, ans_fused.values), \
+            f"fused answer is not bit-identical to two-stage (seed {seed})"
+        rt, rf = ans_two.report, ans_fused.report
+        assert rt.fallback == rf.fallback and rt.theta_pilot == rf.theta_pilot
+        assert dict(rt.plan.rates) == dict(rf.plan.rates)
+
+        # ---- warm wall (executables cached; every call re-dispatches) ----
+        tw, fw = [], []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            db_two.query(_q6(), SPEC, seed=seed)
+            tw.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            db_fused.run_fused(_q6(), SPEC, seed=seed)
+            fw.append(time.perf_counter() - t0)
+        two_wall.append(float(np.median(tw)))
+        fused_wall.append(float(np.median(fw)))
+        seeds.append({
+            "seed": seed,
+            "launches_two_stage": launches_two,
+            "launches_fused": launches_fused,
+            # host round trips the statistics cross between stages: each
+            # extra launch implies one (pilot -> host solve -> final)
+            "host_syncs_between_stages_fused": launches_fused - 1,
+            "two_stage_s": two_wall[-1],
+            "fused_s": fused_wall[-1],
+            "bit_identical": True,
+        })
+    two_s, fused_s = float(np.median(two_wall)), float(np.median(fused_wall))
+    return {"n_seeds": N_SEEDS, "reps": REPS,
+            "two_stage_s": two_s, "fused_s": fused_s,
+            "fused_speedup": two_s / fused_s if fused_s else float("nan"),
+            "launches_fused_per_query": 1,
+            "host_syncs_between_stages_fused": 0,
+            "per_seed": seeds}
+
+
+def _run_session(tables, fused: bool) -> dict:
+    cfg = SessionConfig(async_workers=0, result_cache_size=0,
+                        large_table_rows=100_000, fused_taqa=fused)
+    session = Session(tables, seed=17, config=cfg)
+    sqls = [HERD_SQL.format(hi=1500 + 40 * i) for i in range(HERD_N)]
+    for s in sqls:  # warm compile caches
+        session.submit(s)
+    session.drain()
+    d0 = session.executor.device_dispatches
+    walls = []
+    for _ in range(REPS):
+        handles = [session.submit(s) for s in sqls]
+        t0 = time.perf_counter()
+        session.drain()
+        walls.append(time.perf_counter() - t0)
+    assert all(h.status == "done" for h in handles)
+    info = session.compile_cache_info()
+    out = {
+        "wall_s": float(np.median(walls)),
+        "queries": HERD_N,
+        "launches_per_drain": (session.executor.device_dispatches - d0) // REPS,
+        "fused_engaged": info.fused_hits + info.fused_misses,
+        "values": [np.asarray(h.result().values) for h in handles],
+    }
+    session.close()
+    return out
+
+
+def run() -> dict:
+    tables = {k: v for k, v in catalog().items() if k != "skewed"}
+    doc = {"bench": "fused", "rows": SCALE_ROWS,
+           "query": _measure_query(tables)}
+
+    base = _run_session(tables, fused=False)
+    fused = _run_session(tables, fused=True)
+    for a, b in zip(base.pop("values"), fused.pop("values")):
+        assert np.array_equal(a, b), \
+            "fused_taqa=True session herd is not bit-identical to default"
+    assert fused["fused_engaged"] >= HERD_N, fused
+    assert base["fused_engaged"] == 0, base
+    doc["herd_two_stage"] = base
+    doc["herd_fused"] = fused
+    doc["herd_fused_speedup"] = (base["wall_s"] / fused["wall_s"]
+                                 if fused["wall_s"] else float("nan"))
+    doc["bit_identical"] = True
+
+    with open(BENCH_FUSED_PATH, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    print(f"# wrote {os.path.normpath(BENCH_FUSED_PATH)}", file=sys.stderr)
+    save_results("fused", doc)
+
+    q = doc["query"]
+    print(csv_row("fused_query", q["fused_s"] * 1e6,
+                  f"launches=1;speedup={q['fused_speedup']:.2f}x"))
+    print(csv_row("fused_herd", fused["wall_s"] / HERD_N * 1e6,
+                  f"n={HERD_N};launches_per_drain={fused['launches_per_drain']};"
+                  f"speedup={doc['herd_fused_speedup']:.2f}x"))
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -49,14 +49,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench: guarantees|naive_clt|scan|"
                          "speedup|quickr|ablation|kernels|compiled|runtime|"
-                         "dist|staged|stream|obs")
+                         "dist|staged|stream|obs|fused")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_compiled, bench_dist,
-                            bench_guarantees, bench_kernels, bench_naive_clt,
-                            bench_obs, bench_quickr, bench_runtime,
-                            bench_scan, bench_speedup, bench_staged,
-                            bench_stream)
+                            bench_fused, bench_guarantees, bench_kernels,
+                            bench_naive_clt, bench_obs, bench_quickr,
+                            bench_runtime, bench_scan, bench_speedup,
+                            bench_staged, bench_stream)
 
     benches = {
         "scan": bench_scan.run,              # Fig. 4
@@ -72,6 +72,7 @@ def main() -> None:
         "staged": bench_staged.run,          # pre-staged sample-catalog ladders
         "stream": bench_stream.run,          # progressive frames: TTFF vs final
         "obs": bench_obs.run,                # tracing overhead + audit honesty
+        "fused": bench_fused.run,            # single-launch TAQA vs two-stage
     }
     todo = [args.only] if args.only else list(benches)
     print("name,us_per_call,derived")

@@ -370,6 +370,17 @@ class SessionConfig:
     # session metrics registry (see repro.obs.audit — never perturbs seeds,
     # cache keys, or delivered answers; adds exact scan cost per query).
     audit: bool = False
+    # Fuse both TAQA stages into ONE device program per query (pilot scan
+    # -> rate solve -> final aggregation with no host sync between stages;
+    # see engine/physical.py compile_fused).  Answers stay bit-identical
+    # to the two-stage path: the fused program replays the same
+    # content-derived draws in the same reduction order, and delivery
+    # verifies the device-side final draw against the host oracle before
+    # trusting fused sums — any mismatch, fallback decision, or
+    # ineligible query shape (groups, joins, kernels, shards) re-routes
+    # to the two-stage path.  Off (default) is byte-for-byte today's
+    # two-launch execution.
+    fused_taqa: bool = False
 
     def resolve_workers(self) -> int:
         """The worker count ``async_workers=None`` auto-sizes to.
@@ -928,6 +939,28 @@ class Session:
             self.auditor.check(handle, base)
         return True
 
+    def _run_fused(self, handle: QueryHandle) -> Optional[ApproxAnswer]:
+        """Attempt the single-launch fused TAQA program for ``handle``.
+
+        Returns the answer (bit-identical to the two-stage path by the
+        fused-path verification contract — see :meth:`PilotDB.run_fused`)
+        or None when the query's shape is ineligible, in which case the
+        caller falls through to the two-stage path having executed
+        nothing."""
+        with _trace.span("fused") as sp:
+            try:
+                ans = self.db.run_fused(
+                    handle.query, handle.spec, seed=handle.seed,
+                    pilot_seed=self._pilot_seed_for(handle))
+            except Exception:
+                # fusion is an optimization, never a failure mode: the
+                # two-stage path re-runs the query from scratch and captures
+                # any genuine execution failure on the handle itself
+                ans = None
+            sp.set(engaged=ans is not None,
+                   fallback=None if ans is None else ans.report.fallback)
+        return ans
+
     def _run_handle(self, handle: QueryHandle) -> QueryHandle:
         if handle.done:
             return handle
@@ -943,6 +976,9 @@ class Session:
                     with _trace.span("exact") as sp:
                         ans = self.db.exact(handle.query)
                         sp.set(scanned_bytes=ans.report.exact_scanned_bytes)
+                elif self.config.fused_taqa and (
+                        fused := self._run_fused(handle)) is not None:
+                    ans = fused
                 else:
                     # run the two TAQA stages separately (instead of
                     # db.query) so the advisory estimate streams the moment

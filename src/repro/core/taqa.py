@@ -24,7 +24,11 @@ from repro.core.planner import Constraint, pick_plan, solve_candidates
 from repro.core.spec import CompositeAgg, ErrorSpec, SamplingPlan
 from repro.engine import cost as cost_mod
 from repro.engine import logical as L
-from repro.engine.executor import EmptySampleError, Executor, PilotStats
+from repro.engine.executor import (EmptySampleError, Executor, PilotStats,
+                                   QueryResult)
+from repro.engine.physical import ScanRuntime
+from repro.engine.sampling import draw_block_ids, pad_block_ids
+from repro.stats import chi2_ppf, normal_ppf, student_t_ppf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -353,6 +357,18 @@ class PilotDB:
         those fields and on the sampling-stripped plan signature can share
         one outcome and finish independently via :meth:`finish_from_pilot`.
         """
+        outcome, theta_p = self._pilot_prelude(q, spec)
+        if outcome.fallback is not None:
+            return outcome
+        return self._pilot_scan(outcome, spec, theta_p, pilot_seed)
+
+    def _pilot_prelude(self, q: Query,
+                       spec: ErrorSpec) -> Tuple["PilotOutcome", float]:
+        """Everything stage 1 decides BEFORE any device work: cost model,
+        pilot-table election, theta_p, group-coverage checks, pair tables.
+        Pure host computation with no counters — a prelude-level fallback
+        (no large table, strict coverage violated) never counts as a pilot
+        stage, matching the pre-refactor ``run_pilot``."""
         plan, comp_channels = self._engine_plan(q)
         report = TaqaReport()
         report.exact_cost = cost_mod.exact_cost(plan, self.ex.catalog)
@@ -366,7 +382,7 @@ class PilotDB:
         large = self._large_tables(plan)
         if not large:
             outcome.fallback = "no large table to sample"
-            return outcome
+            return outcome, 0.0
         pilot_table = large[0]
         report.pilot_table = pilot_table
         outcome.pilot_table = pilot_table
@@ -385,7 +401,7 @@ class PilotDB:
                     outcome.fallback = (
                         f"group coverage for g={spec.group_min_size} needs "
                         f"theta_p={theta_cov:.3f} > pilot cap (strict mode)")
-                    return outcome
+                    return outcome, theta_p
                 report.group_coverage_guaranteed = False
                 theta_p = max(theta_p, spec.max_pilot_rate)
             else:
@@ -396,7 +412,15 @@ class PilotDB:
         if q.group_by is None and len(large) > 1:
             pair_tables = (large[1],)
         outcome.pair_tables = pair_tables
+        return outcome, theta_p
 
+    def _pilot_scan(self, outcome: "PilotOutcome", spec: ErrorSpec,
+                    theta_p: float, pilot_seed: int) -> "PilotOutcome":
+        """The device half of stage 1: the pilot scan with its Bernoulli
+        undershoot retries (one pilot STAGE however many retries), then the
+        shared postlude."""
+        plan, pilot_table = outcome.plan, outcome.pilot_table
+        n_blocks = self.ex.table_blocks(pilot_table)
         pilot: Optional[PilotStats] = None
         # one pilot STAGE, however many undershoot retries it takes — the
         # counter the runtime's sharing tests and benchmarks assert against
@@ -405,11 +429,20 @@ class PilotDB:
         for attempt in range(3):
             pilot = self.ex.execute_pilot(plan, pilot_table, theta_p,
                                           pilot_seed + 101 * attempt,
-                                          pair_tables=pair_tables)
+                                          pair_tables=outcome.pair_tables)
             if pilot.n_sampled_blocks >= min(spec.min_pilot_blocks, n_blocks):
                 break
             theta_p = min(theta_p * 4.0, 1.0)
-        report.pilot_time_s = time.perf_counter() - t0
+        return self._pilot_postlude(outcome, pilot, theta_p,
+                                    time.perf_counter() - t0)
+
+    def _pilot_postlude(self, outcome: "PilotOutcome", pilot: PilotStats,
+                        theta_p: float, elapsed_s: float) -> "PilotOutcome":
+        """Fill the report from one pilot stage's statistics and apply the
+        too-small / no-groups fallbacks — shared by the solo loop, the
+        batched-pilot path, and the fused program's host postlude."""
+        report = outcome.report
+        report.pilot_time_s = elapsed_s
         report.theta_pilot = theta_p
         report.n_pilot_blocks = pilot.n_sampled_blocks
         report.pilot_scanned_bytes = pilot.scanned_bytes
@@ -422,6 +455,238 @@ class PilotDB:
         if len(np.nonzero(pilot.group_present)[0]) == 0:
             outcome.fallback = "no groups in pilot"
         return outcome
+
+    def run_pilots_batched(self, reqs: List[Tuple[Query, ErrorSpec, int]]
+                           ) -> List[object]:
+        """Stage 1 for many independent pilot subgroups at once, stacking
+        same-shape pilot scans into single device dispatches
+        (``Executor.execute_pilots_batched``).
+
+        ``reqs`` holds one ``(query, spec, pilot_seed)`` per subgroup
+        leader; the returned list is position-aligned and each entry is the
+        :class:`PilotOutcome` :meth:`run_pilot` would have produced — or
+        the exception it would have raised (captured per member, so one
+        failing subgroup cannot sink its siblings).
+
+        Stacking eligibility mirrors the batched pilot lowering's envelope:
+        compiled XLA route, no join-pair statistics, no staged ladder
+        serving the pilot table, not sharded.  Undershoot retries are a
+        pure host-RNG computation — the draw sizes are known before any
+        device work — so eligible members arrive at the stacked dispatch
+        with their final block ids and the retry loop costs zero launches.
+        Ineligible members, singleton shapes, and any member whose stacked
+        dispatch fails take the solo loop; either way the pilot seeds are
+        content-derived, so the answers are bit-identical.
+        """
+        ex = self.ex
+        results: List[object] = [None] * len(reqs)
+        prel: List[Optional[Tuple[PilotOutcome, float]]] = [None] * len(reqs)
+        solo: List[int] = []
+        pend: Dict[tuple, List[tuple]] = {}
+        for i, (q, spec, pseed) in enumerate(reqs):
+            try:
+                outcome, theta_p = self._pilot_prelude(q, spec)
+            except Exception as e:  # noqa: BLE001 — per-member capture
+                results[i] = e
+                continue
+            prel[i] = (outcome, theta_p)
+            if outcome.fallback is not None:
+                results[i] = outcome
+                continue
+            pt = outcome.pilot_table
+            if (not ex.use_compiled or ex.physical._use_pallas()
+                    or outcome.pair_tables
+                    or ex.staged.ladder(pt) is not None
+                    or ex.is_sharded(pt)):
+                solo.append(i)
+                continue
+            # host-resolve the member's draw, undershoot retries included —
+            # the exact seeds and x4 bumps of the solo loop
+            n_blocks = ex.table_blocks(pt)
+            need = min(spec.min_pilot_blocks, n_blocks)
+            th, drawn_th = theta_p, theta_p
+            ids = np.zeros(0, np.int64)
+            for attempt in range(3):
+                ids = draw_block_ids(n_blocks, th, pseed + 101 * attempt)
+                drawn_th = th
+                if len(ids) >= need:
+                    break
+                th = min(th * 4.0, 1.0)
+            if len(ids) == 0:
+                solo.append(i)  # solo path owns empty-draw bookkeeping
+                continue
+            phys, n_real, n_phys = pad_block_ids(ids, n_blocks)
+            runtime = ScanRuntime("block", n_real, n_phys, phys)
+            key = ex.physical.query_signature(outcome.plan, {pt: runtime})
+            pend.setdefault((pt, key), []).append((i, runtime, th, drawn_th))
+
+        for (pt, _), members in pend.items():
+            if len(members) < 2:
+                solo.extend(m[0] for m in members)
+                continue
+            idxs = [m[0] for m in members]
+            try:
+                stats = ex.execute_pilots_batched(
+                    [prel[i][0].plan for i in idxs], pt,
+                    [m[3] for m in members],
+                    [{pt: m[1]} for m in members])
+            except Exception:
+                # stacking is an optimization, never a failure mode: these
+                # members re-run solo, bit-identical by seed derivation
+                solo.extend(idxs)
+                continue
+            for (i, _, th, _), st in zip(members, stats):
+                ex._count("pilots_run")
+                results[i] = self._pilot_postlude(prel[i][0], st, th,
+                                                  st.wall_time_s)
+
+        for i in solo:
+            _, spec, pseed = reqs[i]
+            outcome, theta_p = prel[i]
+            try:
+                results[i] = self._pilot_scan(outcome, spec, theta_p, pseed)
+            except Exception as e:  # noqa: BLE001 — per-member capture
+                results[i] = e
+        return results
+
+    def run_fused(self, q: Query, spec: ErrorSpec, seed: int = 0,
+                  pilot_seed: Optional[int] = None) -> Optional[ApproxAnswer]:
+        """Single-launch TAQA: pilot scan, BSAP rate solve, and the final
+        sampled aggregation as ONE device program with no host sync between
+        the stages (``physical.compile_fused``).
+
+        Returns None when the query is outside the fused envelope — eager
+        executor, Pallas kernel mode, grouped queries, join-pair sampling,
+        a sharded pilot table, no (or more than one) large table, or a
+        pilot draw too small to bound — and the caller runs the ordinary
+        two-stage path, which is the semantic and bitwise oracle.
+
+        Bit-identity is by construction, not hope: the device solve is an
+        ADVISORY f32 twin; the pilot block statistics come back from the
+        same launch and feed the SAME f64 ``prepare_final`` as the
+        two-stage path, and the device's final block draw is verified
+        against the host RNG (same content-derived uniforms) before its
+        sums are trusted.  Any disagreement — e.g. f32 rounding of the
+        solved rate flipping a Bernoulli comparison — discards the fused
+        final sums and re-runs stage 2 solo.
+        """
+        ex = self.ex
+        if not ex.use_compiled or ex.physical._use_pallas():
+            return None
+        if q.group_by is not None or q.max_groups != 1:
+            return None
+        outcome, theta_p = self._pilot_prelude(q, spec)
+        if outcome.fallback is not None or outcome.pair_tables:
+            return None
+        pilot_table = outcome.pilot_table
+        if ex.is_sharded(pilot_table):
+            return None
+        plan, report = outcome.plan, outcome.report
+        psd = seed if pilot_seed is None else pilot_seed
+        n_blocks = ex.table_blocks(pilot_table)
+
+        # Host-resolved pilot draw, undershoot retries included: draw sizes
+        # are pure host RNG, so the retry loop costs zero launches.  Seeds,
+        # the x4 bump (applied even past a failed last attempt), and the
+        # staged-seed pinning replicate the two-stage loop exactly.
+        need = min(spec.min_pilot_blocks, n_blocks)
+        ids = np.zeros(0, np.int64)
+        theta_drawn = theta_p
+        for attempt in range(3):
+            eff = ex.staged.seed_for(pilot_table, psd + 101 * attempt)
+            ids = draw_block_ids(n_blocks, theta_p, eff)
+            theta_drawn = theta_p
+            if len(ids) >= need:
+                break
+            theta_p = min(theta_p * 4.0, 1.0)
+        if len(ids) < 2:
+            return None  # two-stage takes its "pilot sample too small" path
+
+        phys, n_real, n_phys = pad_block_ids(ids, n_blocks)
+        runtimes = {pilot_table: ScanRuntime("block", n_real, n_phys, phys)}
+        for s in plan.scans():
+            if s.table != pilot_table:
+                runtimes.setdefault(s.table, ScanRuntime("none"))
+
+        # Per-channel quantile rows for the on-device solve: the exact
+        # constants prepare_final's f64 solve will use (one group, g=0).
+        n_constraints = sum(len(idxs) for idxs in outcome.comp_channels)
+        solve_rows: List[List[float]] = []
+        solve_channels: List[int] = []
+        for comp, idxs in zip(q.aggs, outcome.comp_channels):
+            e_part = propagation.split_budget(comp.kind, spec.error)
+            for ch in idxs:
+                budget = allocate(spec.confidence, n_constraints, e_part)
+                solve_rows.append([
+                    student_t_ppf(1.0 - budget.delta1, n_real - 1),
+                    chi2_ppf(budget.delta2 / 2.0, n_real - 1),
+                    bsap.z_for(budget.p_prime),
+                    normal_ppf(1.0 - budget.delta2 / 2.0),
+                    budget.error,
+                ])
+                solve_channels.append(ch)
+
+        # plan_cost is linear in the single table's rate: two probes give
+        # the device its whole cost line
+        cost_b = cost_mod.plan_cost(plan, ex.catalog, {pilot_table: 0.0})
+        cost_a = cost_mod.plan_cost(plan, ex.catalog,
+                                    {pilot_table: 1.0}) - cost_b
+        scal = [float(n_blocks), float(spec.max_final_rate), 1e-6,
+                cost_a, cost_b, report.exact_cost]
+        fseed = ex.staged.seed_for(pilot_table, seed + 977)
+        u = np.random.default_rng(fseed).random(n_blocks)
+
+        ex._count("pilots_run")
+        t0 = time.perf_counter()
+        out, compiled = ex.execute_fused(
+            plan, pilot_table, runtimes, np.asarray(solve_rows, np.float64),
+            np.asarray(scal, np.float64), u, tuple(solve_channels))
+        launch_wall = time.perf_counter() - t0
+
+        names = [a.name for a in plan.aggs] + ["__rows"]
+        pilot = PilotStats(
+            table=pilot_table, theta_p=theta_drawn, n_sampled_blocks=n_real,
+            n_total_blocks=n_blocks, block_rows=ex.block_rows(pilot_table),
+            agg_names=names, block_sums=out["block_sums"][:n_real],
+            group_present=out["present"], pair_sums={},
+            right_total_blocks={},
+            scanned_bytes=compiled.scanned_bytes(runtimes),
+            wall_time_s=launch_wall)
+        self._pilot_postlude(outcome, pilot, theta_p, launch_wall)
+
+        # Authoritative f64 re-solve: the same stage-2 code path as
+        # two-stage, fed the same (device-computed) pilot statistics.
+        stage = self.prepare_final(q, spec, outcome, seed)
+        if stage.answer is not None:
+            # exact fallback (no groups, infeasible bounds, plan costlier
+            # than exact): prepare_final already executed it, identically
+            # to the two-stage path — the fused final sums are discarded
+            return stage.answer
+        rate = stage.report.plan.rates.get(pilot_table, 1.0)
+        host_ids = draw_block_ids(n_blocks, rate, fseed) if rate < 1.0 \
+            else np.zeros(0, np.int64)
+        nsel = out["nsel"]
+        if (rate >= 1.0 or nsel < 1 or len(host_ids) != nsel
+                or not np.array_equal(out["padded"][:nsel], host_ids)):
+            # the device draw disagrees with the f64 plan (or the final is
+            # unsampled): run stage 2 solo — bit-identical, one extra launch
+            return self.run_final(stage)
+
+        # The device's final draw IS the host draw: compose the answer from
+        # the fused launch's sums exactly as the solo final dispatch would.
+        t1 = time.perf_counter()
+        ex._count("queries_run")
+        runtimes_f, infos = ex._scan_runtimes(stage.final_plan)
+        sums, counts = out["sums"], out["counts"]
+        values = Executor._compose_values(stage.final_plan, sums, counts,
+                                          Executor._upscale(infos))
+        res = QueryResult(
+            agg_names=[a.name for a in stage.final_plan.aggs],
+            values=values, raw_sums=sums, group_counts=counts,
+            group_present=counts > 0,
+            scanned_bytes=compiled.scanned_bytes(runtimes_f),
+            sample_infos=infos, wall_time_s=launch_wall)
+        return self._finish_result(stage, res, time.perf_counter() - t1)
 
     def finish_from_pilot(self, q: Query, spec: ErrorSpec,
                           outcome: "PilotOutcome", seed: int,

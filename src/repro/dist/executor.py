@@ -46,7 +46,8 @@ from repro.dist.shard import Shard, ShardedTable, shard_block_ids
 from repro.engine import logical as L
 from repro.engine.executor import (EmptySampleError, Executor, PilotStats,
                                    QueryResult)
-from repro.engine.physical import ScanRuntime, plan_constants, scan_cost_bytes
+from repro.engine.physical import (ScanRuntime, SharedBuildStore,
+                                   plan_constants, scan_cost_bytes)
 from repro.engine.sampling import SampleInfo, pad_block_ids
 from repro.engine.staged import (DEFAULT_STAGED_RATES, ShardSubdraw,
                                  build_sharded_ladder, prepare_dist_subdraw)
@@ -63,6 +64,12 @@ class DistExecutor(Executor):
         super().__init__(catalog, use_compiled=use_compiled,
                          kernel_mode=kernel_mode, staged_bytes=staged_bytes)
         self._sharded: Dict[str, ShardedTable] = {}
+        # Cross-shard executable store: same-geometry shard compilers (the
+        # common case — equal block ranges shard into identical slab
+        # shapes) adopt each other's built executables, so N shards pay
+        # ONE trace+compile per plan shape.  Adoptions surface as
+        # ``shared_hits`` in compile_cache_info().
+        self._shared_builds = SharedBuildStore()
         # one engine Executor per shard: its catalog holds the shard slice
         # under the table's name plus every other table's monolithic arrays
         self._shard_executors: Dict[str, List[Executor]] = {}
@@ -86,7 +93,8 @@ class DistExecutor(Executor):
             cat = {t: v for t, v in self.catalog.items() if t != name}
             cat[name] = s.table
             executors.append(Executor(cat, use_compiled=self.use_compiled,
-                                      kernel_mode=self.physical.kernel_mode))
+                                      kernel_mode=self.physical.kernel_mode,
+                                      shared_builds=self._shared_builds))
         with self._shard_lock:
             self._sharded[name] = sharded
             self._shard_executors[name] = executors
@@ -134,10 +142,19 @@ class DistExecutor(Executor):
         with self._shard_lock:
             return {t: st.num_shards for t, st in self._sharded.items()}
 
+    def is_sharded(self, name: str) -> bool:
+        """Whether ``name`` currently executes as sharded sub-scans (the
+        fused single-launch program gates itself off such tables — its one
+        device program cannot span shard dispatches)."""
+        with self._shard_lock:
+            return name in self._sharded
+
     def compile_cache_info(self):
         """Aggregate compile-cache counters: the monolithic compiler PLUS
         every shard executor's compiler — dist dispatches compile there, and
-        session/gateway/drain stats must see them."""
+        session/gateway/drain stats must see them.  Per-kind breakouts
+        (pilot/batched/fused) and cross-shard build adoptions
+        (``shared_hits``) aggregate the same way."""
         info = super().compile_cache_info()
         with self._shard_lock:
             executors = [ex for exs in self._shard_executors.values()
@@ -147,6 +164,15 @@ class DistExecutor(Executor):
             info.hits += shard_info.hits
             info.misses += shard_info.misses
             info.size += shard_info.size
+            info.staged_hits += shard_info.staged_hits
+            info.staged_misses += shard_info.staged_misses
+            info.pilot_hits += shard_info.pilot_hits
+            info.pilot_misses += shard_info.pilot_misses
+            info.batched_hits += shard_info.batched_hits
+            info.batched_misses += shard_info.batched_misses
+            info.fused_hits += shard_info.fused_hits
+            info.fused_misses += shard_info.fused_misses
+            info.shared_hits += shard_info.shared_hits
         return info
 
     def shard_scan_info(self) -> Dict[str, Tuple[int, ...]]:

@@ -103,10 +103,14 @@ class PilotStats:
 class Executor:
     def __init__(self, catalog: Dict[str, BlockTable], *,
                  use_compiled: bool = True, kernel_mode: str = "auto",
-                 staged_bytes: Optional[int] = None):
+                 staged_bytes: Optional[int] = None, shared_builds=None):
         self.catalog = dict(catalog)
         self.use_compiled = use_compiled
-        self.physical = PhysicalCompiler(self.catalog, kernel_mode=kernel_mode)
+        # shared_builds: an optional physical.SharedBuildStore letting
+        # same-geometry compilers (dist shards) adopt each other's built
+        # executables instead of tracing+compiling N times.
+        self.physical = PhysicalCompiler(self.catalog, kernel_mode=kernel_mode,
+                                         shared_builds=shared_builds)
         # Pre-staged block-sample ladders (repro.engine.staged): tables
         # opted in via register_staged() serve covered sampled scans from
         # materialized rungs; staged_bytes bounds rung-array residency.
@@ -121,6 +125,10 @@ class Executor:
         self._counter_lock = threading.Lock()
         self.pilots_run = 0
         self.queries_run = 0
+        # device_dispatches counts compiled-executable invocations (solo,
+        # staged, batched bucket, pilot, fused) — the launch inventory the
+        # fused-TAQA benchmark derives its host-sync count from.
+        self.device_dispatches = 0
 
     def _count(self, attr: str) -> None:
         with self._counter_lock:
@@ -175,13 +183,26 @@ class Executor:
     def block_rows(self, name: str) -> int:
         return self.catalog[name].block_rows
 
+    def is_sharded(self, name: str) -> bool:
+        """Whether ``name`` executes as sharded sub-scans (DistExecutor
+        overrides).  A monolithic executor never shards."""
+        return False
+
     def table_bytes(self, name: str) -> int:
         return self.catalog[name].total_bytes()
 
     def compile_cache_info(self):
         """Hit/miss/size counters of the physical-plan compile cache
         (including every staged rung's compiler) plus staged-path
-        hit/miss counters."""
+        hit/miss counters.
+
+        ``hits``/``misses`` are grand totals; pilot lowerings (solo and
+        batched), drain-group batch executables, and fused TAQA programs are
+        additionally broken out into ``pilot_*`` / ``batched_*`` /
+        ``fused_*`` pairs, and ``shared_hits`` counts local misses served by
+        adopting another same-geometry compiler's build (dist shard dedup).
+        Rung compilers contribute to the totals only (their keys are plain
+        query shapes)."""
         info = self.physical.cache_info()
         rung_hits, rung_misses, rung_size = self.staged.compile_totals()
         info.hits += rung_hits
@@ -395,6 +416,7 @@ class Executor:
             sub.sub_ids,
             scanned_bytes=scan_cost_bytes(origin, "block", sub.n_real))
         compiled = rung.compiler.compile_query(plan, runtimes)
+        self._count("device_dispatches")
         sums_d, counts_d = compiled(runtimes, plan_constants(plan))
         sums = np.asarray(sums_d, dtype=np.float64)
         counts = np.asarray(counts_d, dtype=np.float64)
@@ -420,6 +442,7 @@ class Executor:
         compiled = self.physical.compile_query(plan, runtimes)
         # Predicate/expression constants ride as a runtime operand: the
         # compiled executable is shared across every constant variant.
+        self._count("device_dispatches")
         sums_d, counts_d = compiled(runtimes, plan_constants(plan))
         # Single device→host boundary: the whole scan→aggregate pipeline ran
         # as one executable.
@@ -499,9 +522,12 @@ class Executor:
         Returns one entry per plan, position-aligned: a
         :class:`QueryResult`, or the :class:`EmptySampleError` that member's
         sampled scan raised — callers take their per-member exact fallback,
-        matching the serial path's semantics.  Singleton groups, the eager
-        executor, and Pallas kernel routes fall back to per-member
-        execution.
+        matching the serial path's semantics.  Singleton groups and the eager
+        executor fall back to per-member execution.  Pallas kernel routes
+        batch too: shapes the solo path runs through ``filtered_agg`` /
+        ``block_agg`` compile to a megacore-style batched kernel grid (one
+        launch for the whole bucket); shapes the kernels cannot take use the
+        ``lax.map`` XLA twin, exactly like the solo route's fallback.
 
         Buckets split greedily into power-of-two chunks (11 members → 8+2+1)
         rather than padding up: batch executables recur in log-many sizes
@@ -519,8 +545,7 @@ class Executor:
                 except Exception:
                     pass
 
-        if (not self.use_compiled or self.physical._use_pallas()
-                or len(plans) < 2):
+        if not self.use_compiled or len(plans) < 2:
             for i, p in enumerate(plans):
                 _land(i, self._execute_captured(p))
             return results
@@ -578,6 +603,7 @@ class Executor:
         t0 = time.perf_counter()
         compiled = self.physical.compile_batched_query(
             plans[idxs[0]], drawn[idxs[0]][0], len(idxs))
+        self._count("device_dispatches")
         sums_b, counts_b = compiled.call_batch(
             [drawn[i][0] for i in idxs],
             [plan_constants(plans[i]) for i in idxs])
@@ -691,6 +717,7 @@ class Executor:
                                           pair_table)
         # One executable from sampled scan to per-block statistics — zero
         # host syncs in between; the conversions below are the boundary.
+        self._count("device_dispatches")
         bs_d, present_d, pair_d = compiled({pilot_table: runtime},
                                            plan_constants(plan))
         block_sums = np.asarray(bs_d, dtype=np.float64)[:n_real]
@@ -763,3 +790,99 @@ class Executor:
             scanned_bytes=scanned,
             wall_time_s=time.perf_counter() - t0,
         )
+
+    # -- batched pilots (shared-pilot drain groups) --------------------------
+    def execute_pilots_batched(
+        self,
+        plans: List[L.Aggregate],
+        pilot_table: str,
+        thetas: List[float],
+        runtimes_list: List[Dict[str, ScanRuntime]],
+    ) -> List[PilotStats]:
+        """One stacked device dispatch for B same-signature pilot scans.
+
+        Callers (``core.taqa.PilotDB.run_pilots_batched``) have already
+        host-resolved each member's Bernoulli draw — including undershoot
+        retries, which are a pure host-RNG computation — so every lane
+        arrives with its final block ids.  Lane k runs the solo tracer-route
+        pilot body under ``lax.map`` and is bit-identical to member k's solo
+        ``execute_pilot``.  Pair-table, Pallas-route, staged-ladder and
+        sharded pilots never reach here (the caller gates them to solo).
+        """
+        batch = len(plans)
+        compiled = self.physical.compile_batched_pilot(
+            plans[0], pilot_table, runtimes_list[0][pilot_table], batch)
+        names_l = [[a.name for a in p.aggs] + ["__rows"] for p in plans]
+        t0 = time.perf_counter()
+        with _trace.span("scan", pilot=True, table=pilot_table,
+                         batched=batch) as sp:
+            self._count("device_dispatches")
+            bs_d, present_d = compiled.call_batch(
+                runtimes_list, [plan_constants(p) for p in plans])
+            # one device→host boundary for the whole pilot group
+            bs_b = np.asarray(bs_d, dtype=np.float64)
+            present_b = np.asarray(present_d, dtype=bool)
+            sp.set(n_blocks=sum(r[pilot_table].n_real for r in runtimes_list))
+        wall = time.perf_counter() - t0
+        table = self.catalog[pilot_table]
+        out: List[PilotStats] = []
+        for k in range(batch):
+            runtime = runtimes_list[k][pilot_table]
+            out.append(PilotStats(
+                table=pilot_table,
+                theta_p=thetas[k],
+                n_sampled_blocks=runtime.n_real,
+                n_total_blocks=table.num_blocks,
+                block_rows=table.block_rows,
+                agg_names=names_l[k],
+                block_sums=bs_b[k, :runtime.n_real],
+                group_present=present_b[k],
+                pair_sums={},
+                right_total_blocks={},
+                scanned_bytes=compiled.scanned_bytes(runtimes_list[k]),
+                wall_time_s=wall,
+            ))
+        return out
+
+    # -- fused single-launch TAQA --------------------------------------------
+    def execute_fused(
+        self,
+        plan: L.Aggregate,
+        pilot_table: str,
+        runtimes: Dict[str, ScanRuntime],
+        solve: np.ndarray,
+        scal: np.ndarray,
+        u: np.ndarray,
+        solve_channels: Tuple[int, ...],
+    ):
+        """Dispatch the single-launch TAQA program and return its raw device
+        outputs (converted at one host boundary).
+
+        The caller (``core.taqa.PilotDB.run_fused``) owns every host-side
+        decision: it precomputed the pilot draw, the per-constraint quantile
+        table, the cost line, and the final-draw uniforms; it re-solves the
+        rate in f64 afterwards and verifies the device's final draw before
+        trusting the returned sums.  This method is exactly ONE compiled
+        dispatch — no host sync between pilot, solve, and final.
+        """
+        compiled = self.physical.compile_fused(plan, pilot_table, runtimes,
+                                               tuple(solve_channels))
+        with _trace.span("scan", fused=True, table=pilot_table) as sp:
+            self._count("device_dispatches")
+            bs_d, present_d, theta_d, flags_d, nsel_d, padded_d, sums_d, counts_d = \
+                compiled.call_fused(runtimes, plan_constants(plan),
+                                    solve, scal, u)
+            # the fused program's single device→host boundary
+            out = {
+                "block_sums": np.asarray(bs_d, dtype=np.float64),
+                "present": np.asarray(present_d, dtype=bool),
+                "theta": float(theta_d),
+                "flags": int(flags_d),
+                "nsel": int(nsel_d),
+                "padded": np.asarray(padded_d),
+                "sums": np.asarray(sums_d, dtype=np.float64),
+                "counts": np.asarray(counts_d, dtype=np.float64),
+            }
+            sp.set(n_blocks=runtimes[pilot_table].n_real,
+                   theta_final=out["theta"], fused_flags=out["flags"])
+        return out, compiled

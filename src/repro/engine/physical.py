@@ -69,8 +69,8 @@ import numpy as np
 from repro.engine import logical as L
 from repro.engine.expr import And, Between, BinOp, Cmp, Col, Expr, eval_expr
 from repro.engine.table import BlockTable
-from repro.kernels.block_agg import block_agg
-from repro.kernels.filtered_agg import filtered_agg
+from repro.kernels.block_agg import block_agg, block_agg_batched
+from repro.kernels.filtered_agg import filtered_agg, filtered_agg_batched
 from repro.obs import trace as _trace
 
 _BIG_BOUND = 3.0e38       # "unbounded" predicate slot, f32-safe
@@ -613,6 +613,63 @@ class CompiledBatch(_CompiledBase):
 
 
 @dataclasses.dataclass
+class CompiledPilotBatch(CompiledBatch):
+    """A batched pilot executable: ``lax.map`` over B same-signature pilot
+    scans inside ONE jitted dispatch (the shared-pilot drain-group path).
+
+    ``call_batch`` stacks the member pilot runtimes (block-id matrix, nreal
+    vector, params matrix) and returns
+    (block_sums (B, n_phys, max_groups, num_channels), present (B, max_groups));
+    lane k is bit-identical to member k's solo tracer-route pilot."""
+
+
+def fused_buckets(num_blocks: int) -> Tuple[int, ...]:
+    """Static id-length buckets of the fused final stage.
+
+    Mirrors ``sampling.pad_block_ids``: for any real sampled count n in
+    [0, num_blocks], ``min(bucket_blocks(max(n, 1)), num_blocks)`` is one of
+    these values — so the on-device ``lax.switch`` branch the fused program
+    picks has exactly the physical id length the solo path would pad to.
+    """
+    out: List[int] = []
+    b = 64
+    while b < num_blocks:
+        out.append(b)
+        b <<= 1
+    out.append(num_blocks)
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class CompiledFused(_CompiledBase):
+    """The single-launch TAQA program (pilot -> rate solve -> final).
+
+    fn(rt) -> (block_sums (n_phys_p, max_groups, n_ch), present (max_groups,),
+               theta f32, flags int32 bitmask (1 no-groups | 2 bad L_mu |
+               4 no feasible plan), nsel int32, padded_ids (num_blocks,) int32,
+               sums (n_ch, max_groups), counts (max_groups,)).
+
+    ``call_fused`` adds the three fused-only runtime operands to the standard
+    runtime dict: the per-constraint quantile table ``solve`` (n_solve, 5)
+    rows [t_q, chi_q, z, z_bin, e], the shared scalar vector ``scal`` (6,)
+    [N, max_rate, min_rate, cost_a, cost_b, exact_cost], and the final-draw
+    uniform vector ``u`` (num_blocks,) — all host-precomputed, none requiring
+    a sync between the stages.
+    """
+
+    buckets: Tuple[int, ...] = ()
+
+    def call_fused(self, runtimes: Dict[str, ScanRuntime], params,
+                   solve, scal, u):
+        rt = self._runtime_args(runtimes, params)
+        rt["solve"] = jnp.asarray(
+            np.asarray(solve, np.float32).reshape(-1, 5))
+        rt["scal"] = jnp.asarray(np.asarray(scal, np.float32))
+        rt["u"] = jnp.asarray(np.asarray(u, np.float32))
+        return self.fn(rt)
+
+
+@dataclasses.dataclass
 class CacheInfo:
     hits: int = 0
     misses: int = 0
@@ -621,17 +678,66 @@ class CacheInfo:
     # in by Executor.compile_cache_info; zero for a bare compiler.
     staged_hits: int = 0
     staged_misses: int = 0
+    # Per-kind attribution of the hit/miss totals above.  ``hits``/``misses``
+    # remain the grand totals (existing dashboards keep working); these pairs
+    # break out pilot lowerings (solo + batched), drain-group batch
+    # executables, and fused TAQA programs so stats_payload() can attribute
+    # compilation traffic per path.  Plain query compiles are the remainder.
+    pilot_hits: int = 0
+    pilot_misses: int = 0
+    batched_hits: int = 0
+    batched_misses: int = 0
+    fused_hits: int = 0
+    fused_misses: int = 0
+    # Local-cache misses that adopted an executable from a cross-shard
+    # SharedBuildStore instead of tracing+compiling (still counted in
+    # ``misses``: the local cache did miss — the BUILD was deduplicated).
+    shared_hits: int = 0
+
+
+class SharedBuildStore:
+    """Cross-compiler executable store keyed by compile signature.
+
+    Dist shards with identical slab geometry produce identical compile keys
+    (keys embed block_rows / padded_rows / bucketed block counts and column
+    dtypes, never column data — data enters executables as runtime
+    operands).  Same-geometry shard compilers therefore adopt each other's
+    built executables: the jitted ``fn`` (and its XLA executable cache) is
+    shared and only the catalog binding is rebound per shard, so N
+    same-shape shards pay ONE trace+compile instead of N.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._store: Dict[tuple, object] = {}
+
+    def get(self, key):
+        with self._lock:
+            return self._store.get(key)
+
+    def put(self, key, compiled) -> None:
+        with self._lock:
+            self._store.setdefault(key, compiled)
+
+
+# key[0] -> CacheInfo counter kind ("query" keys are the untagged remainder)
+_KEY_KIND = {"pilot": "pilot", "pilot_batched": "pilot",
+             "batched": "batched", "fused": "fused"}
 
 
 class PhysicalCompiler:
     """Lowers logical plans to compiled executables, with a signature cache."""
 
-    def __init__(self, catalog: Dict[str, BlockTable], kernel_mode: str = "auto"):
+    def __init__(self, catalog: Dict[str, BlockTable], kernel_mode: str = "auto",
+                 shared_builds: Optional[SharedBuildStore] = None):
         if kernel_mode not in ("auto", "pallas", "xla"):
             raise ValueError(
                 f"kernel_mode must be 'auto', 'pallas', or 'xla', got {kernel_mode!r}")
         self.catalog = catalog
         self.kernel_mode = kernel_mode
+        # Optional cross-compiler build store (dist shard dedup): consulted
+        # on local-cache misses before building, populated after builds.
+        self._shared = shared_builds
         # Values are compiled executables, or a pending Future while one
         # worker builds that key.  The concurrent runtime compiles from
         # worker threads: the lock covers only dict bookkeeping and the
@@ -643,12 +749,23 @@ class PhysicalCompiler:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.shared_hits = 0
+        self._kind_hits = {"pilot": 0, "batched": 0, "fused": 0}
+        self._kind_misses = {"pilot": 0, "batched": 0, "fused": 0}
 
     def cache_info(self) -> CacheInfo:
         with self._lock:
             size = sum(1 for v in self._cache.values()
                        if not isinstance(v, Future))
-            return CacheInfo(self.hits, self.misses, size)
+            return CacheInfo(
+                self.hits, self.misses, size,
+                pilot_hits=self._kind_hits["pilot"],
+                pilot_misses=self._kind_misses["pilot"],
+                batched_hits=self._kind_hits["batched"],
+                batched_misses=self._kind_misses["batched"],
+                fused_hits=self._kind_hits["fused"],
+                fused_misses=self._kind_misses["fused"],
+                shared_hits=self.shared_hits)
 
     # -- route policy --------------------------------------------------------
     def _use_pallas(self) -> bool:
@@ -668,21 +785,39 @@ class PhysicalCompiler:
         return tuple(out)
 
     def _lookup(self, key, build):
+        kind = _KEY_KIND.get(key[0])
         with self._lock:
             entry = self._cache.get(key)
             if entry is None:  # this thread builds; others wait on the Future
                 self.misses += 1
+                if kind is not None:
+                    self._kind_misses[kind] += 1
                 placeholder: Future = Future()
                 self._cache[key] = placeholder
             else:
                 self.hits += 1  # a waiter did not build — that's a hit
+                if kind is not None:
+                    self._kind_hits[kind] += 1
         if _trace.active() is not None:  # tag the enclosing stage span
             _trace.annotate_count(
                 "compile_misses" if entry is None else "compile_hits")
             _trace.annotate(compile_sig=_trace.sig_hash(key))
         if entry is None:
             try:
-                compiled = build()
+                compiled = None
+                if self._shared is not None:
+                    proto = self._shared.get(key)
+                    if proto is not None:
+                        # adopt the shared executable: same jitted fn (one
+                        # XLA compilation serves all same-geometry shards),
+                        # rebound to THIS compiler's catalog for data
+                        compiled = dataclasses.replace(proto, catalog=self.catalog)
+                        with self._lock:
+                            self.shared_hits += 1
+                if compiled is None:
+                    compiled = build()
+                    if self._shared is not None:
+                        self._shared.put(key, compiled)
             except BaseException as e:
                 with self._lock:  # let a later call retry the build
                     if self._cache.get(key) is placeholder:
@@ -763,15 +898,30 @@ class PhysicalCompiler:
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         needed = _needed_by_table(plan, self.catalog)
-        key = ("batched", batch,
+        key = ("batched", self._use_pallas(), batch,
                plan_signature(plan, runtimes, self._geometry_sig(plan, needed)))
         return self._lookup(key, lambda: self._build_batched(
             plan_template(plan), runtimes, needed, batch))
 
     def _build_batched(self, template, runtimes, needed, batch) -> CompiledBatch:
         methods = {t: r.method for t, r in runtimes.items()}
-        # lax.map over a Pallas grid is not a supported lowering; the batch
-        # path always maps the member's XLA graph.
+        if self._use_pallas():
+            # Megacore-style batched kernel grid: shapes the solo path routes
+            # through filtered_agg/block_agg run all B members' finals as ONE
+            # kernel launch (grid (B, n_sampled), ids/bounds tables stacked
+            # across lanes).  The matcher mirrors _match_query_kernel exactly,
+            # so a shape falls through to the lax.map twin below only when
+            # the solo route also used xla_gather — lanes stay bit-identical
+            # to solo runs either way.
+            kb = self._match_batched_query_kernel(template, runtimes)
+            if kb is not None:
+                run_b, route = kb
+                return CompiledBatch(fn=jax.jit(run_b), catalog=self.catalog,
+                                     needed=needed, methods=methods,
+                                     route=route, batch=batch)
+        # lax.map over a Pallas grid is not a supported lowering; shapes the
+        # batched kernels cannot take (and every non-pallas route) map the
+        # member's XLA graph.
         run, _ = self._query_run_fn(template, runtimes, needed,
                                     allow_kernel=False)
 
@@ -818,6 +968,37 @@ class PhysicalCompiler:
 
         return run, route
 
+    def _match_batched_query_kernel(self, plan, runtimes):
+        """Batched whole-query kernel route (the megacore-style grid).
+
+        Same admission conditions as :meth:`_match_query_kernel` — ONE
+        block-sampled table, no groups, Filter*(Scan), kernel-computable
+        channels — so the batched kernel engages exactly when the solo
+        kernel would.  The per-lane reduction (``sum(axis=1)``) runs in the
+        same order as the solo route's ``sum(axis=0)``, keeping each lane
+        bit-identical to its member's solo kernel run.
+        """
+        exprs = tuple(None if a.op == "count" else a.expr for a in plan.aggs)
+        if plan.max_groups != 1 or plan.group_by is not None:
+            return None
+        sampled = [t for t, r in runtimes.items() if r.method != "none"]
+        if len(runtimes) != 1 or len(sampled) != 1 or runtimes[sampled[0]].method != "block":
+            return None
+        table = sampled[0]
+        preds = _single_table_chain(plan.child, table)
+        if preds is None:
+            return None
+        lowered = self._lower_block_stats_batched(table, preds, exprs)
+        if lowered is None:
+            return None
+        stats_fn, route = lowered
+
+        def run(rt):
+            ch, cnt = stats_fn(rt)      # (B, n_phys, n_ch), (B, n_phys)
+            return ch.sum(axis=1)[:, :, None], cnt.sum(axis=1)[:, None]
+
+        return run, route
+
     # -- pilot queries -------------------------------------------------------
     def compile_pilot(self, plan: L.Aggregate, pilot_table: str,
                       runtime: ScanRuntime,
@@ -858,6 +1039,22 @@ class PhysicalCompiler:
                                          needed=needed, methods=methods,
                                          route=route, has_pair=False)
 
+        run = self._pilot_tracer_run(plan, pilot_table, n_phys, pair_table,
+                                     needed, has_pair)
+        return CompiledPilot(fn=jax.jit(run), catalog=self.catalog, needed=needed,
+                             methods=methods, route="xla_gather", has_pair=has_pair)
+
+    def _pilot_tracer_run(self, plan, pilot_table, n_phys, pair_table, needed,
+                          has_pair):
+        """The tracer-route pilot body: rt -> (block_sums, present, pair).
+
+        Shared verbatim by the solo pilot lowering, each lane of the batched
+        pilot executable, and the pilot half of the fused TAQA program — one
+        body, so the three paths cannot drift apart bitwise.
+        """
+        methods = {pilot_table: "block"}
+        mg = plan.max_groups
+        exprs = tuple([None if a.op == "count" else a.expr for a in plan.aggs] + [None])
         tracer = _Tracer(self.catalog, needed, methods, pilot_table=pilot_table,
                          n_phys_pilot=n_phys, pair_table=pair_table)
         n_right = self.catalog[pair_table].num_blocks if has_pair else 0
@@ -887,8 +1084,161 @@ class PhysicalCompiler:
                     len(exprs), n_phys, n_right).transpose(1, 2, 0)
             return block_sums, present, pair
 
-        return CompiledPilot(fn=jax.jit(run), catalog=self.catalog, needed=needed,
-                             methods=methods, route="xla_gather", has_pair=has_pair)
+        return run
+
+    # -- batched pilots (shared-pilot drain groups) ---------------------------
+    def compile_batched_pilot(self, plan: L.Aggregate, pilot_table: str,
+                              runtime: ScanRuntime,
+                              batch: int) -> "CompiledPilotBatch":
+        """One executable running ``batch`` same-signature pilot scans per
+        dispatch (``lax.map`` over the solo tracer pilot body).  Pair-table
+        shapes and Pallas pilot routes stay solo — callers gate on both."""
+        if batch < 2:
+            raise ValueError(f"batch must be >= 2, got {batch}")
+        needed = _needed_by_table(plan, self.catalog)
+        key = ("pilot_batched", batch, pilot_table,
+               plan_signature(plan, {pilot_table: runtime},
+                              self._geometry_sig(plan, needed)))
+        return self._lookup(key, lambda: self._build_batched_pilot(
+            plan_template(plan), pilot_table, runtime.n_phys, needed, batch))
+
+    def _build_batched_pilot(self, plan, pilot_table, n_phys, needed,
+                             batch) -> "CompiledPilotBatch":
+        methods = {pilot_table: "block"}
+        run = self._pilot_tracer_run(plan, pilot_table, n_phys, None, needed,
+                                     False)
+
+        def run_batched(rt):
+            member = {"ids": rt["ids"], "nreal": rt["nreal"],
+                      "mask": rt["mask"], "params": rt["params"]}
+            shared = {"cols": rt["cols"], "valid": rt["valid"], "bid": rt["bid"]}
+
+            def one(m):
+                bs, present, _ = run({**shared, **m})
+                return bs, present
+
+            # lax.map, not vmap: lane k executes the solo pilot body
+            # sequentially inside ONE dispatch — bit-identical to solo.
+            return jax.lax.map(one, member)
+
+        return CompiledPilotBatch(fn=jax.jit(run_batched), catalog=self.catalog,
+                                  needed=needed, methods=methods,
+                                  route="xla_batched_pilot", batch=batch)
+
+    # -- fused single-launch TAQA ---------------------------------------------
+    def compile_fused(self, plan: L.Aggregate, pilot_table: str,
+                      runtimes: Dict[str, ScanRuntime],
+                      solve_channels: Tuple[int, ...]) -> "CompiledFused":
+        """The single-launch TAQA program: pilot scan -> BSAP rate solve ->
+        final sampled aggregation, one device dispatch, no host sync between
+        the stages.  Gated by callers to the ungrouped / single-sampled-table
+        / XLA-route shape; the rate solve on device is ADVISORY (f32) — the
+        host re-solves in f64 and verifies the device's final draw before
+        trusting its sums (see ``core.taqa.PilotDB.run_fused``)."""
+        needed = _needed_by_table(plan, self.catalog)
+        num_blocks = self.catalog[pilot_table].num_blocks
+        key = ("fused", pilot_table, tuple(solve_channels), num_blocks,
+               plan_signature(plan, runtimes, self._geometry_sig(plan, needed)))
+        return self._lookup(key, lambda: self._build_fused(
+            plan_template(plan), pilot_table, runtimes, needed,
+            tuple(solve_channels), num_blocks))
+
+    def _build_fused(self, template, pilot_table, runtimes, needed,
+                     solve_channels, num_blocks) -> "CompiledFused":
+        methods = {t: r.method for t, r in runtimes.items()}
+        n_phys_pilot = runtimes[pilot_table].n_phys
+        buckets = fused_buckets(num_blocks)
+        pilot_run = self._pilot_tracer_run(template, pilot_table, n_phys_pilot,
+                                           None, needed, False)
+        # The final body is the member's solo XLA lowering (allow_kernel=False
+        # matches the solo path: fused is gated off Pallas routes), traced
+        # once per bucket branch with that bucket's static id length.
+        final_run, _ = self._query_run_fn(template, runtimes, needed,
+                                          allow_kernel=False)
+        ch_idx = np.asarray(solve_channels, np.int32)
+
+        def run(rt):
+            bs, present, _ = pilot_run(rt)        # (n_phys_p, 1, n_ch), (1,)
+
+            # --- BSAP rate solve, f32 (advisory twin of the f64 host path) --
+            # Padding rows of bs are exactly zero, so the moment sums over the
+            # full n_phys_p axis equal the n_real-row sums bit-for-bit.
+            n = rt["nreal"][pilot_table].astype(jnp.float32)
+            solve = rt["solve"]                   # (n_solve, 5) per-constraint
+            scal = rt["scal"]                     # (6,) shared scalars
+            N, max_rate, min_rate = scal[0], scal[1], scal[2]
+            cost_a, cost_b, exact_cost = scal[3], scal[4], scal[5]
+            y = bs[:, 0, :][:, ch_idx]            # (n_phys_p, n_solve)
+            s1 = y.sum(axis=0)
+            s2 = (y * y).sum(axis=0)
+            mean = s1 / n
+            var = jnp.maximum((s2 - s1 * s1 / n) / jnp.maximum(n - 1.0, 1.0), 0.0)
+            t_q, chi_q, z, z_bin, e = (solve[:, i] for i in range(5))
+            # L_mu of the population total: N * (block-mean lower bound)
+            L_mu = N * (mean - t_q * jnp.sqrt(var) / jnp.sqrt(n))
+            var_ub = (n - 1.0) / jnp.maximum(chi_q, 1e-12) * var
+            L_ok = jnp.all((L_mu > 0.0) & jnp.isfinite(L_mu))
+
+            def feasible(theta):
+                # binomial lower bound on the final sample size, then U_V[θ]
+                n_lb = jnp.maximum(
+                    N * theta - z_bin * jnp.sqrt(
+                        jnp.maximum(N * theta * (1.0 - theta), 0.0)), 0.0)
+                u_v = jnp.where(n_lb > 1.0,
+                                N * N * (1.0 - theta) * var_ub
+                                / jnp.maximum(n_lb, 1e-30), jnp.inf)
+                u_v = jnp.where(theta >= 1.0, 0.0, u_v)
+                # phi rearranged sync-free: z*sqrt(U_V)/L_mu <= e, L_mu > 0
+                ok = (L_mu > 0.0) & (z * jnp.sqrt(jnp.maximum(u_v, 0.0))
+                                     <= e * L_mu)
+                return jnp.all(ok)
+
+            feas_max = feasible(max_rate)
+
+            def body(_, lohi):
+                lo, hi = lohi
+                mid = jnp.sqrt(lo * hi)  # geometric: rates span decades
+                f = feasible(mid)
+                return (jnp.where(f, lo, mid), jnp.where(f, mid, hi))
+
+            _, theta = jax.lax.fori_loop(0, 48, body, (min_rate, max_rate))
+            have_plan = feas_max & (cost_a * theta + cost_b < exact_cost)
+            go = present[0] & L_ok & have_plan
+            flags = (jnp.where(present[0], 0, 1) + jnp.where(L_ok, 0, 2)
+                     + jnp.where(have_plan, 0, 4)).astype(jnp.int32)
+            theta_eff = jnp.where(go, theta, jnp.float32(0.0))
+
+            # --- final Bernoulli draw + stream compaction (on device) -------
+            keep = rt["u"] < theta_eff            # (num_blocks,) f32 uniforms
+            nsel = keep.sum().astype(jnp.int32)
+            pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            padded = jnp.zeros(num_blocks, jnp.int32).at[
+                jnp.where(keep, pos, num_blocks)].set(
+                jnp.arange(num_blocks, dtype=jnp.int32), mode="drop")
+
+            branch_idx = jnp.zeros((), jnp.int32)
+            for b in buckets[:-1]:
+                branch_idx = branch_idx + (nsel > b).astype(jnp.int32)
+
+            shared = {"cols": rt["cols"], "valid": rt["valid"],
+                      "bid": rt["bid"], "mask": rt["mask"],
+                      "params": rt["params"]}
+
+            def make_branch(b):
+                def br(_):
+                    frt = dict(shared)
+                    frt["ids"] = {pilot_table: padded[:b]}
+                    frt["nreal"] = {pilot_table: nsel}
+                    return final_run(frt)
+                return br
+
+            sums, counts = jax.lax.switch(
+                branch_idx, [make_branch(b) for b in buckets], None)
+            return bs, present, theta, flags, nsel, padded, sums, counts
+
+        return CompiledFused(fn=jax.jit(run), catalog=self.catalog,
+                             needed=needed, methods=methods, route="xla_fused",
+                             buckets=buckets)
 
     # -- Pallas lowering of per-block stats ----------------------------------
     def _lower_block_stats(self, table: str, preds: List[Expr],
@@ -960,6 +1310,78 @@ class PhysicalCompiler:
             return jnp.stack(chans, axis=1) * mask[:, None], cnt * mask
 
         return stats_fn, "pallas_block"
+
+    def _lower_block_stats_batched(self, table: str, preds: List[Expr],
+                                   exprs: Sequence[Optional[Expr]]):
+        """Batched-lane twin of :meth:`_lower_block_stats`.
+
+        ``rt["ids"][table]`` is (B, n_phys), ``rt["nreal"][table]`` (B,),
+        ``rt["params"]`` (B, P).  Returns (stats_fn, route) with
+        ``stats_fn(rt)`` yielding ``(channel_sums (B, n_phys, n_ch),
+        counts (B, n_phys))`` — per lane exactly the solo stats — or None
+        when the shape doesn't fit the kernels.  Per-lane predicate bounds
+        resolve from the stacked params matrix (vmapped slot evaluation) and
+        ride the scalar-prefetch path next to the stacked block-id table.
+        """
+        tab = self.catalog[table]
+        br = tab.block_rows
+        if preds:
+            q6 = _match_q6_bounds(preds)
+            specs = _match_channels(exprs, products=True)
+            if q6 is None or specs is None:
+                return None
+            (f1, f2, f3), slots = q6
+
+            def stats_fn(rt):
+                cols = rt["cols"][table]
+                valid = rt["valid"][table].astype(jnp.float32)
+                ids = rt["ids"][table]
+                nreal = rt["nreal"][table]
+                n_phys = ids.shape[1]
+                bounds = jax.vmap(lambda p: _bounds_vector(slots, p))(rt["params"])
+                ones = jnp.ones(tab.padded_rows, jnp.float32)
+                outs = {}
+                for spec in specs:
+                    if spec[0] != "prod" or spec[1:] in outs:
+                        continue
+                    x = cols[spec[1]]
+                    y = ones if spec[2] is None else cols[spec[2]]
+                    outs[spec[1:]] = filtered_agg_batched(
+                        x, y, cols[f1], cols[f2], cols[f3], valid, br, ids, bounds)
+                if not outs:  # COUNT-only query: any column works for cnt
+                    c0 = cols[f1]
+                    outs[None] = filtered_agg_batched(
+                        c0, c0, cols[f1], cols[f2], cols[f3], valid, br, ids, bounds)
+                cnt = next(iter(outs.values()))[:, :, 0]
+                chans = [cnt if s[0] == "count" else outs[s[1:]][:, :, 1]
+                         for s in specs]
+                mask = (jnp.arange(n_phys)[None, :] < nreal[:, None]).astype(jnp.float32)
+                return jnp.stack(chans, axis=2) * mask[:, :, None], cnt * mask
+
+            return stats_fn, "pallas_filtered_batched"
+
+        specs = _match_channels(exprs, products=False)
+        if specs is None:
+            return None
+
+        def stats_fn(rt):
+            cols = rt["cols"][table]
+            valid = rt["valid"][table].astype(jnp.float32)
+            ids = rt["ids"][table]
+            nreal = rt["nreal"][table]
+            n_phys = ids.shape[1]
+            outs = {}
+            for spec in specs:
+                if spec[0] == "prod" and spec[1] not in outs:
+                    outs[spec[1]] = block_agg_batched(cols[spec[1]], valid, br, ids)
+            if not outs:  # COUNT-only: the cnt lane ignores the value column
+                outs[None] = block_agg_batched(valid, valid, br, ids)
+            cnt = next(iter(outs.values()))[:, :, 0]
+            chans = [cnt if s[0] == "count" else outs[s[1]][:, :, 1] for s in specs]
+            mask = (jnp.arange(n_phys)[None, :] < nreal[:, None]).astype(jnp.float32)
+            return jnp.stack(chans, axis=2) * mask[:, :, None], cnt * mask
+
+        return stats_fn, "pallas_block_batched"
 
 
 def _walk(plan: L.Plan):

@@ -1,4 +1,4 @@
-from repro.kernels.block_agg.ops import block_agg
+from repro.kernels.block_agg.ops import block_agg, block_agg_batched
 from repro.kernels.block_agg.ref import block_agg_ref
 
-__all__ = ["block_agg", "block_agg_ref"]
+__all__ = ["block_agg", "block_agg_batched", "block_agg_ref"]

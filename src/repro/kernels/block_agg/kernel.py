@@ -43,6 +43,51 @@ def _kernel(ids_ref, vals_ref, valid_ref, out_ref):
     out_ref[0, :] = jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])
 
 
+def _kernel_batched(ids_ref, vals_ref, valid_ref, out_ref):
+    # Batched-grid twin of _kernel: lane b of the (batch, n_sampled) grid
+    # scans ITS sampled blocks (ids_ref[b, i]); per-block math is identical.
+    v = vals_ref[0, :].astype(jnp.float32)
+    m = valid_ref[0, :].astype(jnp.float32)
+    cnt = jnp.sum(m)
+    s = jnp.sum(v * m)
+    ss = jnp.sum(v * v * m)
+    big = jnp.float32(3.4e38)
+    nan = jnp.float32(jnp.nan)
+    mn = jnp.where(cnt > 0, jnp.min(jnp.where(m > 0, v, big)), nan)
+    mx = jnp.where(cnt > 0, jnp.max(jnp.where(m > 0, v, -big)), nan)
+    zero = jnp.float32(0.0)
+    out_ref[0, 0, :] = jnp.stack([cnt, s, ss, mn, mx, zero, zero, zero])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def block_agg_batched_kernel(values: jax.Array, valid: jax.Array,
+                             ids: jax.Array, *, block_rows: int,
+                             interpret: bool = False) -> jax.Array:
+    """values/valid: (num_blocks, block_rows); ids: (batch, n_sampled) int32.
+
+    One launch, megacore-style batched grid: lane b's sampled blocks are
+    driven by row b of the stacked scalar-prefetch id table.  Returns
+    (batch, n_sampled, 8) per-block stats, each lane bit-identical to the
+    solo ``block_agg_kernel`` on its id row.
+    """
+    batch, n_sampled = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch, n_sampled),
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda b, i, ids: (ids[b, i], 0)),
+            pl.BlockSpec((1, block_rows), lambda b, i, ids: (ids[b, i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, STATS), lambda b, i, ids: (b, i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, n_sampled, STATS), jnp.float32),
+        interpret=interpret,
+    )(ids, values, valid)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def block_agg_kernel(values: jax.Array, valid: jax.Array, ids: jax.Array,
                      *, block_rows: int, interpret: bool = False) -> jax.Array:

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.block_agg.kernel import block_agg_kernel
+from repro.kernels.block_agg.kernel import (block_agg_batched_kernel,
+                                            block_agg_kernel)
 from repro.kernels.block_agg.ref import block_agg_ref
 
 LANE = 128  # TPU lane width: pad block_rows up to a multiple
@@ -48,3 +49,24 @@ def block_agg(column: jax.Array, valid: jax.Array, block_rows: int,
         out = block_agg_kernel(v2, m2, ids, block_rows=block_rows + pad,
                                interpret=_auto_interpret(interpret))
     return out[:, :5]
+
+
+def block_agg_batched(column: jax.Array, valid: jax.Array, block_rows: int,
+                      ids, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Batched per-sampled-block stats: B lanes share the column slabs.
+
+    column/valid: (num_blocks * block_rows,); ids: (B, n_sampled) per-lane
+    sampled block indices.  One launch serves a whole drain group; returns
+    (B, n_sampled, 5), each lane bit-identical to its solo ``block_agg``.
+    """
+    n_blocks = column.shape[0] // block_rows
+    v2 = column.reshape(n_blocks, block_rows).astype(jnp.float32)
+    m2 = valid.reshape(n_blocks, block_rows).astype(jnp.float32)
+    pad = (-block_rows) % LANE
+    if pad:
+        v2 = jnp.pad(v2, ((0, 0), (0, pad)))
+        m2 = jnp.pad(m2, ((0, 0), (0, pad)))
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    out = block_agg_batched_kernel(v2, m2, ids, block_rows=block_rows + pad,
+                                   interpret=_auto_interpret(interpret))
+    return out[:, :, :5]

@@ -1,4 +1,4 @@
-from repro.kernels.filtered_agg.ops import filtered_agg
+from repro.kernels.filtered_agg.ops import filtered_agg, filtered_agg_batched
 from repro.kernels.filtered_agg.ref import filtered_agg_ref
 
-__all__ = ["filtered_agg", "filtered_agg_ref"]
+__all__ = ["filtered_agg", "filtered_agg_batched", "filtered_agg_ref"]

@@ -52,6 +52,62 @@ def _kernel(ids_ref, bounds_ref, x_ref, y_ref, f1_ref, f2_ref, f3_ref,
     out_ref[0, :] = jnp.stack([cnt, s, ss, zero, zero, zero, zero, zero])
 
 
+def _kernel_batched(ids_ref, bounds_ref, x_ref, y_ref, f1_ref, f2_ref, f3_ref,
+                    valid_ref, out_ref):
+    # Megacore-style batched grid (batch, n_sampled): lane b scans ITS
+    # sampled blocks (ids_ref[b, i]) under ITS predicate bounds
+    # (bounds_ref[b]); per-block math is byte-identical to _kernel.
+    b = pl.program_id(0)
+    lo1 = bounds_ref[b, 0]
+    hi1 = bounds_ref[b, 1]
+    lo2 = bounds_ref[b, 2]
+    hi2 = bounds_ref[b, 3]
+    c3 = bounds_ref[b, 4]
+    x = x_ref[0, :].astype(jnp.float32)
+    y = y_ref[0, :].astype(jnp.float32)
+    f1 = f1_ref[0, :].astype(jnp.float32)
+    f2 = f2_ref[0, :].astype(jnp.float32)
+    f3 = f3_ref[0, :].astype(jnp.float32)
+    m = valid_ref[0, :].astype(jnp.float32)
+    keep = ((f1 >= lo1) & (f1 <= hi1) & (f2 >= lo2) & (f2 <= hi2)
+            & (f3 < c3)).astype(jnp.float32) * m
+    prod = x * y
+    cnt = jnp.sum(keep)
+    s = jnp.sum(prod * keep)
+    ss = jnp.sum(prod * prod * keep)
+    zero = jnp.float32(0.0)
+    out_ref[0, 0, :] = jnp.stack([cnt, s, ss, zero, zero, zero, zero, zero])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "interpret"))
+def filtered_agg_batched_kernel(x, y, f1, f2, f3, valid, ids, bounds, *,
+                                block_rows: int,
+                                interpret: bool = False) -> jax.Array:
+    """Batched lanes over shared column slabs.
+
+    ids: (batch, n_sampled) int32 — each lane's sampled block ids;
+    bounds: (batch, BOUNDS) f32 — each lane's predicate bounds.  Both ride
+    scalar prefetch (stacked tables).  One kernel launch covers a whole
+    drain group's finals: out (batch, n_sampled, STATS).
+    """
+    batch, n_sampled = ids.shape
+    col_spec = pl.BlockSpec((1, block_rows), lambda b, i, ids, bounds: (ids[b, i], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # stacked block-id table + stacked bounds table
+        grid=(batch, n_sampled),
+        in_specs=[col_spec] * 6,
+        out_specs=pl.BlockSpec((1, 1, STATS), lambda b, i, ids, bounds: (b, i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, n_sampled, STATS), jnp.float32),
+        interpret=interpret,
+    )(ids, jnp.asarray(bounds, jnp.float32), x, y, f1, f2, f3, valid)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block_rows", "interpret"))

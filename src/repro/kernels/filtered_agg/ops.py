@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.filtered_agg.kernel import filtered_agg_kernel
+from repro.kernels.filtered_agg.kernel import (filtered_agg_batched_kernel,
+                                               filtered_agg_kernel)
 from repro.kernels.filtered_agg.ref import filtered_agg_ref
 
 LANE = 128
@@ -47,3 +48,29 @@ def filtered_agg(x, y, f1, f2, f3, valid, block_rows: int, ids: np.ndarray,
                               block_rows=block_rows + pad,
                               interpret=_auto_interpret(interpret))
     return out[:, :3]
+
+
+def filtered_agg_batched(x, y, f1, f2, f3, valid, block_rows: int, ids,
+                         bounds, *,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Batched fused Q6 scan: B lanes share the column slabs.
+
+    ids: (B, n_sampled) per-lane sampled block ids; bounds: (B, 5) per-lane
+    predicate bounds.  One kernel launch computes every lane's per-block
+    stats — the drain-group finals path.  Returns (B, n_sampled, 3)
+    cnt/sum/sumsq, each lane bit-identical to its solo ``filtered_agg``.
+    """
+    n_blocks = x.shape[0] // block_rows
+    pad = (-block_rows) % LANE
+
+    def prep(col):
+        c = jnp.asarray(col).reshape(n_blocks, block_rows).astype(jnp.float32)
+        return jnp.pad(c, ((0, 0), (0, pad))) if pad else c
+
+    cols = [prep(c) for c in (x, y, f1, f2, f3, valid)]
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    bounds = jnp.asarray(bounds, jnp.float32)
+    out = filtered_agg_batched_kernel(*cols, ids, bounds,
+                                      block_rows=block_rows + pad,
+                                      interpret=_auto_interpret(interpret))
+    return out[:, :, :3]

@@ -280,6 +280,17 @@ def register_session_collectors(registry: MetricsRegistry, session) -> None:
             "size": info.size,
             "staged_hits": info.staged_hits,
             "staged_misses": info.staged_misses,
+            # per-path attribution of the totals above (hits/misses stay the
+            # grand totals): pilot lowerings (solo + batched), drain-group
+            # batch executables, fused single-launch programs, and local
+            # misses whose BUILD was served by a cross-shard adoption
+            "pilot_hits": info.pilot_hits,
+            "pilot_misses": info.pilot_misses,
+            "batched_hits": info.batched_hits,
+            "batched_misses": info.batched_misses,
+            "fused_hits": info.fused_hits,
+            "fused_misses": info.fused_misses,
+            "shared_hits": info.shared_hits,
         }
 
     def result_cache() -> Dict:

@@ -115,7 +115,30 @@ def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
             for h in live:
                 session._run_handle(h)
             continue
+        if session.config.fused_taqa and len(live) == 1 \
+                and _try_fused(session, live[0]):
+            continue  # single-launch program delivered the answer
         shared.append(live)
+
+    # Batched pilots: when the group holds several pilot subgroups, their
+    # stage-1 scans dispatch FIRST through PilotDB.run_pilots_batched —
+    # same-shape pilot scans (same pilot table, same plan signature under
+    # the drawn geometry) stack into ONE device launch; ineligible members
+    # run their bit-identical solo pilots inside the same call.  Each
+    # subgroup's precomputed outcome (or captured exception) then threads
+    # into the fan-out below, which keeps only the stage-2 planning.
+    # Generation snapshots are taken BEFORE the batched dispatch so the
+    # mid-flight table-replacement guard keeps covering the pilot stage.
+    pre: List[Optional[object]] = [None] * len(shared)
+    gens: List[Optional[tuple]] = [None] * len(shared)
+    if len(shared) >= 2:
+        for live in shared:
+            for h in live:
+                h._mark_running()
+        gens = [session._scan_generations(live[0].query) for live in shared]
+        pre = session.db.run_pilots_batched(
+            [(live[0].query, live[0].spec, session._pilot_seed_for(live[0]))
+             for live in shared])
 
     # Stage-1 fan-out: a template group may hold MANY pilot subgroups (a
     # constant-varied herd runs one pilot per constant — selectivity shapes
@@ -126,15 +149,18 @@ def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
     # content-derived — concurrency changes wall-clock, never answers.
     durations: List[float] = []
 
-    def _stage1(live: List["QueryHandle"]) -> List[_Pending]:
+    def _stage1(args: Tuple[List["QueryHandle"], Optional[object],
+                            Optional[tuple]]) -> List[_Pending]:
+        live, outcome, gen = args
         t0 = time.perf_counter()
         try:
-            return _pilot_and_prepare(session, live)
+            return _pilot_and_prepare(session, live, pre=outcome, gen=gen)
         finally:
             durations.append(time.perf_counter() - t0)
 
     t0 = time.perf_counter()
-    pend_lists = session.runtime.map_pilot_subgroups(_stage1, shared)
+    pend_lists = session.runtime.map_pilot_subgroups(
+        _stage1, list(zip(shared, pre, gens)))
     if len(shared) >= 2:
         session.runtime.record_pilot_fanout(
             time.perf_counter() - t0, sum(durations))
@@ -174,36 +200,65 @@ def execute_group(session: "Session", handles: List["QueryHandle"]) -> None:
         _complete_subgroup(session, pend, box)
 
 
-def _pilot_and_prepare(session: "Session",
-                       live: List["QueryHandle"]) -> List[_Pending]:
-    """Run the subgroup's one pilot stage and plan every member's final."""
+def _pilot_and_prepare(session: "Session", live: List["QueryHandle"],
+                       pre: Optional[object] = None,
+                       gen: Optional[tuple] = None) -> List[_Pending]:
+    """Run the subgroup's one pilot stage and plan every member's final.
+
+    ``pre`` threads a pilot already executed by the group-wide batched
+    dispatch (``PilotDB.run_pilots_batched``) into this subgroup: a
+    :class:`PilotOutcome` skips the pilot stage here (the leader gets a
+    retroactive summary span), a captured exception fails every member —
+    exactly what the solo pilot's except-branch below would have done —
+    and None runs the pilot as before.  ``gen`` carries the
+    table-generation snapshot taken before that batched dispatch.
+    """
     leader = live[0]
     pilot_seed = session._pilot_seed_for(leader)
-    gen = session._scan_generations(leader.query)
+    if gen is None:
+        gen = session._scan_generations(leader.query)
     for h in live:
         h._mark_running()
     shared = len(live) > 1
-    # the shared pilot executes ONCE, on the leader's trace: deep tags
-    # (staged rung, shard fan-out, compile hit/miss) annotate the leader's
-    # open "pilot" span; members get a retroactive summary span below
-    token = _trace.activate(leader._trace)
-    try:
-        with _trace.span("pilot", shared=shared, owner=True,
-                         members=len(live)) as sp:
-            outcome = session.db.run_pilot(leader.query, leader.spec,
-                                           pilot_seed)
-            rep = outcome.report
-            sp.set(table=rep.pilot_table, theta_pilot=rep.theta_pilot,
-                   n_pilot_blocks=rep.n_pilot_blocks,
-                   scanned_bytes=rep.pilot_scanned_bytes,
-                   fallback=rep.fallback)
-    except Exception as e:
+    if isinstance(pre, Exception):
         # every member's solo pilot would have raised identically
         for h in live:
-            h._mark_failed(f"{type(e).__name__}: {e}")
+            h._mark_failed(f"{type(pre).__name__}: {pre}")
         return []
-    finally:
-        _trace.deactivate(token)
+    if pre is not None:
+        outcome = pre
+        rep = outcome.report
+        if leader._trace is not None:
+            leader._trace.record(
+                "pilot", duration_s=rep.pilot_time_s, shared=shared,
+                owner=True, members=len(live), batched=True,
+                table=rep.pilot_table, theta_pilot=rep.theta_pilot,
+                n_pilot_blocks=rep.n_pilot_blocks,
+                scanned_bytes=rep.pilot_scanned_bytes,
+                fallback=rep.fallback)
+    else:
+        # the shared pilot executes ONCE, on the leader's trace: deep tags
+        # (staged rung, shard fan-out, compile hit/miss) annotate the
+        # leader's open "pilot" span; members get a retroactive summary
+        # span below
+        token = _trace.activate(leader._trace)
+        try:
+            with _trace.span("pilot", shared=shared, owner=True,
+                             members=len(live)) as sp:
+                outcome = session.db.run_pilot(leader.query, leader.spec,
+                                               pilot_seed)
+                rep = outcome.report
+                sp.set(table=rep.pilot_table, theta_pilot=rep.theta_pilot,
+                       n_pilot_blocks=rep.n_pilot_blocks,
+                       scanned_bytes=rep.pilot_scanned_bytes,
+                       fallback=rep.fallback)
+        except Exception as e:
+            # every member's solo pilot would have raised identically
+            for h in live:
+                h._mark_failed(f"{type(e).__name__}: {e}")
+            return []
+        finally:
+            _trace.deactivate(token)
     for h in live[1:]:
         if h._trace is not None:
             h._trace.record(
@@ -258,6 +313,27 @@ def _pilot_and_prepare(session: "Session",
         finally:
             _trace.deactivate(token)
     return pend
+
+
+def _try_fused(session: "Session", h: "QueryHandle") -> bool:
+    """Attempt the single-launch fused TAQA program for a singleton
+    subgroup.  True when the handle completed (answer delivered, or failed
+    on the completion guard); False when the query's shape is ineligible —
+    the caller then falls through to the shared-pilot path having executed
+    nothing (``Session._run_fused`` swallows fused-path exceptions, so a
+    False return really means "nothing happened")."""
+    token = _trace.activate(h._trace)
+    try:
+        h._mark_running()
+        gen = session._scan_generations(h.query)
+        ans = session._run_fused(h)
+        if ans is None:
+            return False
+        with _trace.span("deliver"):
+            session._complete_handle(h, ans, gen)
+        return True
+    finally:
+        _trace.deactivate(token)
 
 
 def _complete_one(session: "Session", p: _Pending, box: dict) -> None:

@@ -246,7 +246,13 @@ class SqlGateway:
           ``frames_dropped`` / derived ``cache_hit_rate``;
         * ``compile_cache`` — :meth:`repro.engine.Executor.compile_cache_info`
           (``hits`` / ``misses`` / ``size`` resident executables plus
-          ``staged_hits`` / ``staged_misses``, session-global);
+          ``staged_hits`` / ``staged_misses``, session-global); the grand
+          totals additionally break out per path as ``pilot_hits`` /
+          ``pilot_misses`` (solo and batched pilot lowerings),
+          ``batched_hits`` / ``batched_misses`` (drain-group batch
+          executables), ``fused_hits`` / ``fused_misses`` (single-launch
+          fused TAQA programs), and ``shared_hits`` (local misses whose
+          build was adopted from a same-geometry dist shard);
         * ``result_cache``  — result-cache ``hits`` / ``misses`` /
           ``evictions`` / ``invalidations`` / ``size`` / ``capacity`` AND
           byte counters ``bytes_used`` / ``max_bytes`` / derived

@@ -229,6 +229,47 @@ def test_executor_execute_batch_matches_solo(catalog):
     assert ex_batch.queries_run == 9
 
 
+def _plain_plan(seedless_tag):
+    # no filter chain: routes to block_agg (the no-predicate kernel); the
+    # tag keeps the sweep's plans distinct without changing the template
+    return L.Aggregate(
+        child=L.Scan("lineitem"),
+        aggs=(L.AggSpec("sum", Col("l_extendedprice"), "rev"),
+              L.AggSpec("count", None, "cnt")))
+
+
+@pytest.mark.parametrize("shape,route", [
+    ("filtered", "pallas_filtered_batched"),
+    ("block", "pallas_block_batched"),
+])
+def test_pallas_batched_lanes_bitwise_match_solo(catalog, shape, route):
+    """Interpret-mode pinning of the batched kernel grid: every lane of the
+    megacore-style batched filtered_agg/block_agg launch is BITWISE the
+    member's solo kernel run — same per-block partials, same f32 reduction
+    order — and the whole pow2 set costs ONE batched kernel compilation."""
+    ex_batch = Executor(catalog, kernel_mode="pallas")
+    ex_solo = Executor(catalog, kernel_mode="pallas")
+
+    def make(i):
+        base = (_q6_plan(100 + 10 * i, 1600, 20 + i) if shape == "filtered"
+                else _plain_plan(i))
+        return L.rewrite_scans(
+            base, {"lineitem": L.SampleClause("block", 0.3, seed=i)})
+
+    plans = [make(i) for i in range(4)]
+    outs = ex_batch.execute_batch(plans)
+    for plan, out in zip(plans, outs):
+        ref = ex_solo.execute(plan)
+        np.testing.assert_array_equal(out.values, ref.values)
+        np.testing.assert_array_equal(out.raw_sums, ref.raw_sums)
+        np.testing.assert_array_equal(out.group_counts, ref.group_counts)
+        assert out.scanned_bytes == ref.scanned_bytes
+    info = ex_batch.compile_cache_info()
+    assert info.misses == info.batched_misses == 1, info
+    routes = {c.route for c in ex_batch.physical._cache.values()}
+    assert routes == {route}
+
+
 def test_execute_batch_surfaces_empty_samples_per_member(catalog):
     ex = Executor(catalog)
     good = L.rewrite_scans(_q6_plan(100, 1500, 24),

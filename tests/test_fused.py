@@ -1,0 +1,199 @@
+"""Fused single-launch TAQA: bit-identity against the two-stage oracle.
+
+The fused program (``physical.compile_fused``) runs pilot scan -> BSAP rate
+solve -> final sampled aggregation as ONE device dispatch with no host sync
+between the stages.  The two-stage path is the oracle: for every cell of the
+matrix below — solo, constant-varied herd, cached re-issue, staged ladder,
+1-shard and 2-shard registrations — ``fused_taqa=True`` must deliver answers
+``np.array_equal`` to ``fused_taqa=False`` (same content-derived draws, same
+f32/f64 reduction order).  Sharded cells pass trivially by construction: the
+fused envelope gates sharded pilot tables off, so both sessions execute the
+identical two-stage path there.
+"""
+
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.api import Session, SessionConfig
+from repro.core import CompositeAgg, ErrorSpec, PilotDB, Query
+from repro.engine import logical as L
+from repro.engine.datagen import tpch_catalog
+from repro.engine.executor import Executor
+from repro.engine.expr import And, Col
+
+BASE = SessionConfig(async_workers=0)
+FUSED = dc.replace(BASE, fused_taqa=True)
+
+SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+       "WHERE l_shipdate BETWEEN 100 AND 1500 "
+       "AND l_discount BETWEEN 0.02 AND 0.08 AND l_quantity < 24 "
+       "ERROR 8% CONFIDENCE 95%")
+HERD = [SQL.replace("BETWEEN 100 AND 1500", f"BETWEEN 100 AND {1500 + 40 * i}")
+        for i in range(4)]
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return tpch_catalog(scale_rows=600_000, block_rows=32, seed=0)
+
+
+def q6():
+    pred = And(Col("l_shipdate").between(100, 1500),
+               And(Col("l_discount").between(0.02, 0.08),
+                   Col("l_quantity") < 24))
+    return Query(child=L.Filter(L.Scan("lineitem"), pred),
+                 aggs=(CompositeAgg("revenue", "sum",
+                                    Col("l_extendedprice") * Col("l_discount")),))
+
+
+def _run(catalog, cfg, sqls, *, shards=None, staged=None, sequential=False):
+    s = Session(seed=11, config=cfg)
+    for name, tab in catalog.items():
+        s.register_table(name, tab,
+                         shards=shards if name == "lineitem" else None,
+                         staged_rates=staged if name == "lineitem" else None)
+    if sequential:  # drain each query on its own (cached re-issue shape)
+        handles = []
+        for q in sqls:
+            handles.append(s.submit(q))
+            s.drain()
+    else:
+        handles = [s.submit(q) for q in sqls]
+        s.drain()
+    vals = []
+    for h in handles:
+        assert h.status == "done", h.error
+        vals.append(h.result().values)
+    info = s.compile_cache_info()
+    s.close()
+    return vals, info
+
+
+MATRIX = {
+    "solo": dict(sqls=[SQL]),
+    "herd": dict(sqls=HERD),
+    # sequential re-issue: the second drain answers from the result cache
+    # (a fused-computed entry must rebuild the identical answer)
+    "cached": dict(sqls=[SQL, SQL], sequential=True),
+    "staged": dict(sqls=[SQL], staged=True),
+    "shard1": dict(sqls=[SQL], shards=1),
+    "shard2": dict(sqls=[SQL], shards=2),
+}
+
+
+@pytest.mark.parametrize("cell", list(MATRIX))
+def test_fused_bitwise_matrix(catalog, cell):
+    kw = dict(MATRIX[cell])
+    sqls = kw.pop("sqls")
+    base_vals, _ = _run(catalog, BASE, sqls, **kw)
+    fused_vals, info = _run(catalog, FUSED, sqls, **kw)
+    for a, b in zip(base_vals, fused_vals):
+        np.testing.assert_array_equal(a, b)
+    engaged = info.fused_hits + info.fused_misses
+    if cell in ("shard1", "shard2"):
+        # sharded pilot tables are outside the fused envelope: the fused
+        # session must have executed the identical two-stage path
+        assert engaged == 0, info
+    else:
+        assert engaged >= 1, info
+
+
+def test_run_fused_is_one_dispatch_and_bitwise(catalog):
+    """PilotDB-level pinning: the fused program answers in exactly ONE
+    device dispatch (the two-stage oracle takes >= 2: pilot + final), with
+    values, report statistics, and scanned-bytes attribution bitwise equal
+    — across several seeds so the rate solve lands on different draws."""
+    spec = ErrorSpec(error=0.08, confidence=0.95)
+    for seed in range(4):
+        ex_a, ex_b = Executor(catalog), Executor(catalog)
+        db_a = PilotDB(ex_a, large_table_rows=50_000)
+        db_b = PilotDB(ex_b, large_table_rows=50_000)
+        ans_a = db_a.query(q6(), spec, seed=seed)
+        ans_b = db_b.run_fused(q6(), spec, seed=seed)
+        assert ans_b is not None, "fused path did not engage"
+        assert ex_a.device_dispatches >= 2
+        assert ex_b.device_dispatches == 1, (seed, ex_b.device_dispatches)
+        np.testing.assert_array_equal(ans_a.values, ans_b.values)
+        ra, rb = ans_a.report, ans_b.report
+        assert ra.fallback == rb.fallback
+        assert ra.theta_pilot == rb.theta_pilot
+        assert ra.n_pilot_blocks == rb.n_pilot_blocks
+        assert ra.pilot_scanned_bytes == rb.pilot_scanned_bytes
+        assert ra.final_scanned_bytes == rb.final_scanned_bytes
+        assert dict(ra.plan.rates) == dict(rb.plan.rates)
+
+
+def test_run_fused_gates_to_none_outside_envelope(catalog):
+    """Ineligible shapes return None BEFORE any device work, so the caller
+    falls through to the two-stage path having executed nothing."""
+    spec = ErrorSpec(error=0.08, confidence=0.95)
+    ex = Executor(catalog)
+    db = PilotDB(ex, large_table_rows=50_000)
+    grouped = Query(child=L.Scan("lineitem"),
+                    aggs=(CompositeAgg("qty", "sum", Col("l_quantity")),),
+                    group_by="l_returnflag", max_groups=3)
+    join = Query(child=L.Filter(
+        L.Join(L.Scan("lineitem"), L.Scan("orders"),
+               "l_orderkey", "o_orderkey"),
+        Col("o_orderdate") < 1200),
+        aggs=(CompositeAgg("rev", "sum", Col("l_extendedprice")),))
+    assert db.run_fused(grouped, spec, seed=0) is None
+    assert db.run_fused(join, spec, seed=0) is None
+    assert ex.device_dispatches == 0
+    assert ex.pilots_run == 0
+    # eager executors never fuse
+    db_eager = PilotDB(Executor(catalog, use_compiled=False),
+                       large_table_rows=50_000)
+    assert db_eager.run_fused(q6(), spec, seed=0) is None
+
+
+def test_batched_pilots_bitwise_match_solo(catalog):
+    """run_pilots_batched stacks same-shape pilot scans into one dispatch;
+    every member's statistics must be bitwise the solo run_pilot's."""
+    reqs = []
+    for i in range(3):
+        pred = And(Col("l_shipdate").between(100, 1500 + 40 * i),
+                   And(Col("l_discount").between(0.02, 0.08),
+                       Col("l_quantity") < 24))
+        q = Query(child=L.Filter(L.Scan("lineitem"), pred),
+                  aggs=(CompositeAgg("revenue", "sum",
+                                     Col("l_extendedprice") * Col("l_discount")),))
+        reqs.append((q, ErrorSpec(error=0.08, confidence=0.95), 1000 + i))
+    ex_solo = Executor(catalog)
+    db_solo = PilotDB(ex_solo, large_table_rows=50_000)
+    solo = [db_solo.run_pilot(q, spec, psd) for q, spec, psd in reqs]
+    d_solo = ex_solo.device_dispatches
+
+    ex_b = Executor(catalog)
+    db_b = PilotDB(ex_b, large_table_rows=50_000)
+    batched = db_b.run_pilots_batched(reqs)
+    assert ex_b.device_dispatches == 1 < d_solo == len(reqs)
+    assert ex_b.pilots_run == len(reqs)
+    for a, b in zip(solo, batched):
+        assert not isinstance(b, Exception), b
+        assert a.report.fallback == b.report.fallback
+        np.testing.assert_array_equal(a.pilot.block_sums, b.pilot.block_sums)
+        np.testing.assert_array_equal(a.pilot.group_present,
+                                      b.pilot.group_present)
+        assert a.pilot.theta_p == b.pilot.theta_p
+        assert a.report.pilot_scanned_bytes == b.report.pilot_scanned_bytes
+        assert a.report.n_pilot_blocks == b.report.n_pilot_blocks
+
+
+def test_fused_session_matches_streaming_off_and_on(catalog):
+    """fused_taqa composes with streaming: the terminal frame's answer is
+    the same object result() returns, bitwise equal to the base session."""
+    base, _ = _run(catalog, BASE, [SQL])
+    s = Session(seed=11, config=FUSED)
+    for name, tab in catalog.items():
+        s.register_table(name, tab)
+    h = s.submit(SQL)
+    h.enable_streaming()
+    s.drain()
+    assert h.status == "done", h.error
+    frames = h.frames()
+    assert frames, "no terminal frame"
+    np.testing.assert_array_equal(h.result().values, base[0])
+    s.close()

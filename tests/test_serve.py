@@ -200,7 +200,12 @@ def test_gateway_stats_payload_one_stop(aqp_session):
     info = aqp_session.compile_cache_info()
     assert payload["compile_cache"] == {
         "hits": info.hits, "misses": info.misses, "size": info.size,
-        "staged_hits": info.staged_hits, "staged_misses": info.staged_misses}
+        "staged_hits": info.staged_hits, "staged_misses": info.staged_misses,
+        "pilot_hits": info.pilot_hits, "pilot_misses": info.pilot_misses,
+        "batched_hits": info.batched_hits,
+        "batched_misses": info.batched_misses,
+        "fused_hits": info.fused_hits, "fused_misses": info.fused_misses,
+        "shared_hits": info.shared_hits}
     rc = aqp_session.result_cache_info()
     assert payload["result_cache"]["hits"] == rc.hits >= 2
     assert payload["result_cache"]["bytes_used"] == rc.bytes_used > 0
@@ -233,7 +238,9 @@ _PAYLOAD_SCHEMA = {
                 "result_hits", "streams", "frames_pushed", "frames_dropped",
                 "cache_hit_rate"},
     "compile_cache": {"hits", "misses", "size", "staged_hits",
-                      "staged_misses"},
+                      "staged_misses", "pilot_hits", "pilot_misses",
+                      "batched_hits", "batched_misses", "fused_hits",
+                      "fused_misses", "shared_hits"},
     "result_cache": {"hits", "misses", "evictions", "invalidations", "size",
                      "capacity", "bytes_used", "max_bytes", "hit_rate"},
     "shard_scanned_bytes": None,   # dict of table -> per-shard byte lists
