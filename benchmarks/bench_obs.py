@@ -10,11 +10,22 @@ Contract checks run BEFORE any timing is reported (each raises, so
 * audit mode records observed <= promised error for the whole seeded
   workload (zero violations) without perturbing a single answer.
 
+Continuous-telemetry section (same pre-timing contract discipline):
+
+* a warm herd drain with FULL telemetry on — per-template time-series,
+  flight recorder, ``trace_sample=0.05`` — is bitwise identical to the
+  plain session AND its overhead stays below the same budget;
+* an injected absurd SLO target round-trips: breach counter, recorder
+  ``slo_breach`` event, and a breached ``SloMonitor.report()`` row;
+* trace-sampling decisions are identical across equal-seed sessions.
+
 Reported: warm herd drain wall time with tracing OFF vs ON and the
 relative overhead — asserted below ``BENCH_OBS_MAX_OVERHEAD`` (default
 5%).  Emits the machine-readable ``BENCH_obs.json`` at the repo root plus
-one sample Chrome trace (``BENCH_obs_trace.json``, loadable in
-``chrome://tracing`` / Perfetto) as a workflow artifact.
+three workflow artifacts: one sample Chrome trace
+(``BENCH_obs_trace.json``, loadable in ``chrome://tracing`` / Perfetto),
+the rendered ops dashboard (``BENCH_obs_dashboard.html``), and the
+telemetry run's flight-recorder log (``BENCH_obs_flightrec.jsonl``).
 
   PYTHONPATH=src python -m benchmarks.run --only obs
   BENCH_ROWS=200000 PYTHONPATH=src python -m benchmarks.bench_obs
@@ -35,9 +46,11 @@ from repro.api import Session, SessionConfig
 _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 BENCH_OBS_PATH = os.path.join(_ROOT, "BENCH_obs.json")
 SAMPLE_TRACE_PATH = os.path.join(_ROOT, "BENCH_obs_trace.json")
+DASHBOARD_PATH = os.path.join(_ROOT, "BENCH_obs_dashboard.html")
+FLIGHTREC_PATH = os.path.join(_ROOT, "BENCH_obs_flightrec.jsonl")
 
 HERD_N = int(os.environ.get("BENCH_HERD_N", 12))
-REPS = int(os.environ.get("BENCH_OBS_REPS", 5))  # median-of over drains
+REPS = int(os.environ.get("BENCH_OBS_REPS", 9))  # best-of interleaved drains
 MAX_OVERHEAD = float(os.environ.get("BENCH_OBS_MAX_OVERHEAD", 0.05))
 
 HERD_SQL = ("SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
@@ -53,6 +66,13 @@ TRACE_CFG = SessionConfig(async_workers=None, share_pilots=True,
 AUDIT_CFG = SessionConfig(async_workers=0, share_pilots=False,
                           result_cache_size=0, large_table_rows=100_000,
                           tracing=True, audit=True)
+# full continuous telemetry: time-series + flight recorder + 5% sampled
+# tracing — the always-on serving posture the overhead budget prices
+TELEMETRY_CFG = SessionConfig(async_workers=None, share_pilots=True,
+                              batch_finals=True, result_cache_size=0,
+                              large_table_rows=100_000, telemetry=True,
+                              trace_sample=0.05,
+                              flight_recorder=FLIGHTREC_PATH)
 
 
 def _workload():
@@ -71,24 +91,40 @@ def _warm_session(cfg) -> Session:
     return session
 
 
-def _timed_drains(session) -> tuple:
-    """Median warm-drain wall time over REPS; returns (median_s, handles of
-    the last rep)."""
-    walls, handles = [], []
+def _timed_drains_interleaved(sessions: dict) -> tuple:
+    """Best warm-drain wall time per session over REPS INTERLEAVED rounds
+    (round-robin across the sessions, min per session): back-to-back
+    medians confound the comparison with thermal/background drift on a
+    busy host — interleaving exposes every session to the same drift, and
+    the min is the standard noise-robust point estimate for a
+    deterministic workload.  Returns ({name: best_s}, {name: last-rep
+    handles})."""
+    walls = {k: [] for k in sessions}
+    handles = {}
     for _ in range(REPS):
-        handles = [session.submit(s) for s in _workload()]
-        t0 = time.perf_counter()
-        session.drain()
-        walls.append(time.perf_counter() - t0)
-    return float(np.median(walls)), handles
+        for k, session in sessions.items():
+            hs = [session.submit(s) for s in _workload()]
+            t0 = time.perf_counter()
+            session.drain()
+            walls[k].append(time.perf_counter() - t0)
+            handles[k] = hs
+    return {k: float(np.min(v)) for k, v in walls.items()}, handles
 
 
 def run() -> dict:
+    for p in (FLIGHTREC_PATH, f"{FLIGHTREC_PATH}.1", f"{FLIGHTREC_PATH}.2"):
+        if os.path.exists(p):
+            os.remove(p)
     plain = _warm_session(CFG)
     traced = _warm_session(TRACE_CFG)
+    telemetry = _warm_session(TELEMETRY_CFG)
 
-    off_s, off_handles = _timed_drains(plain)
-    on_s, on_handles = _timed_drains(traced)
+    best, reps_handles = _timed_drains_interleaved(
+        {"off": plain, "on": traced, "telemetry": telemetry})
+    off_s, on_s, tele_s = best["off"], best["on"], best["telemetry"]
+    off_handles = reps_handles["off"]
+    on_handles = reps_handles["on"]
+    tele_handles = reps_handles["telemetry"]
 
     # -- contract checks (before any timing is trusted) --------------------
     for hp, ht in zip(off_handles, on_handles):
@@ -134,6 +170,69 @@ def run() -> dict:
     assert summary["audited"] > 0 or summary["skipped_exact"] > 0
     assert summary["max_error_ratio"] <= 1.0 or summary["audited"] == 0
 
+    # -- continuous telemetry: bit-identity, overhead, SLO round-trip ------
+    from repro.obs.events import replay
+    from repro.obs.slo import SloTarget
+    from repro.serve.dashboard import write_dashboard
+
+    # bit-identity BEFORE timing is trusted: full telemetry ON must match
+    # the plain session's answers exactly
+    for hp, ht in zip(off_handles, tele_handles):
+        ap, at = hp.result(), ht.result()
+        assert np.array_equal(np.asarray(ap.values), np.asarray(at.values)), \
+            "telemetry-ON answers must be bitwise identical to OFF"
+        assert np.array_equal(np.asarray(ap.group_present),
+                              np.asarray(at.group_present))
+    tele_overhead = (tele_s - off_s) / off_s if off_s > 0 else 0.0
+    assert tele_overhead < MAX_OVERHEAD, \
+        f"telemetry-ON overhead {tele_overhead:.1%} exceeds the " \
+        f"{MAX_OVERHEAD:.0%} budget (off={off_s * 1e3:.2f}ms " \
+        f"on={tele_s * 1e3:.2f}ms)"
+
+    # sampling determinism: an equal-seed session makes the IDENTICAL
+    # trace-sampling decision for every workload query
+    twin = _warm_session(TELEMETRY_CFG)
+    decisions = [telemetry._trace_sampled(h.signature)
+                 for h in tele_handles]
+    twin_handles = [twin.submit(s) for s in _workload()]
+    twin.drain()
+    twin_decisions = [h._trace_sampled for h in twin_handles]
+    assert decisions == twin_decisions, \
+        "equal-seed sessions must sample the identical query set"
+    twin.close()
+
+    # SLO round-trip: an absurd injected target breaches on the very next
+    # delivery — counter, recorder event, and report row all see it
+    telemetry.slo.set_target(SloTarget(p95_latency_s=1e-9))
+    for s in _workload():
+        telemetry.submit(s)
+    telemetry.drain()
+    n_breaches = telemetry.metrics.counter(
+        "pilotdb_slo_breaches_total").value
+    assert n_breaches >= 1, "injected SLO target did not breach"
+    slo_rows = telemetry.slo.report()
+    assert any(r["breached"] and r["metric"] == "p95_latency_s"
+               for r in slo_rows), "breach missing from slo report"
+
+    # time-series landed every delivery; the recorder logged the breach
+    ts_snap = telemetry.timeseries.snapshot()
+    total_deliveries = sum(t["deliveries"]
+                           for t in ts_snap["templates"].values())
+    assert total_deliveries >= (REPS + 1) * HERD_N
+    rec_stats = telemetry.recorder.stats()
+    assert rec_stats["emitted"] > 0 and rec_stats["dropped"] == 0
+    events = list(replay(FLIGHTREC_PATH))
+    assert any(e["ev"] == "slo_breach" for e in events), \
+        "slo_breach event missing from the flight recorder"
+    assert any(e["ev"] == "deliver" for e in events)
+
+    # workflow artifacts: the rendered ops dashboard + the recorder log
+    assert write_dashboard(DASHBOARD_PATH, telemetry,
+                           title="bench_obs telemetry run") is not None
+    print(f"# wrote {os.path.normpath(DASHBOARD_PATH)}", file=sys.stderr)
+    print(f"# wrote {os.path.normpath(FLIGHTREC_PATH)}", file=sys.stderr)
+
+    telemetry.close()
     plain.close()
     traced.close()
     audit_session.close()
@@ -148,7 +247,21 @@ def run() -> dict:
            "span_trees_closed": True,
            "audit": {k: summary[k] for k in
                      ("runs", "audited", "skipped_exact", "violations",
-                      "errors", "max_error_ratio", "mean_error_ratio")}}
+                      "errors", "max_error_ratio", "mean_error_ratio")},
+           "telemetry": {
+               "drain_on_s": tele_s,
+               "overhead": tele_overhead,
+               "max_overhead_budget": MAX_OVERHEAD,
+               "bit_identical_on_vs_off": True,
+               "sampling_deterministic": True,
+               "trace_sample": TELEMETRY_CFG.trace_sample,
+               "deliveries_recorded": total_deliveries,
+               "templates_tracked": len(ts_snap["templates"]),
+               "slo_breaches": n_breaches,
+               "slo_round_trip": True,
+               "flight_recorder": {k: rec_stats[k] for k in
+                                   ("emitted", "dropped", "rotations")},
+           }}
 
     with open(BENCH_OBS_PATH, "w") as f:
         json.dump(doc, f, indent=1, default=float)
@@ -158,6 +271,9 @@ def run() -> dict:
     print(csv_row("obs_tracing_overhead", on_s * 1e6,
                   f"off={off_s * 1e6:.1f}us;overhead={overhead:.2%};"
                   f"audit_max_ratio={summary['max_error_ratio']:.3f}"))
+    print(csv_row("obs_telemetry_overhead", tele_s * 1e6,
+                  f"off={off_s * 1e6:.1f}us;overhead={tele_overhead:.2%};"
+                  f"deliveries={total_deliveries};breaches={n_breaches:g}"))
     return doc
 
 

@@ -1,0 +1,183 @@
+"""Benchmark trajectory gate: fail CI when a key scalar regresses > 25%.
+
+The ``BENCH_*.json`` files the benchmarks drop at the repo root are a
+longitudinal record of what the engine can do — dispatch speedups, cache
+behaviour, streaming latency, tracing/telemetry overhead.  Each one already
+asserts its own *correctness* contract internally (bit-identity, audit
+bounds); what nothing guarded until now is the *trajectory*: a refactor
+that keeps every answer bitwise identical but quietly halves the batched
+dispatch speedup sails through the whole suite.
+
+This module closes that gap.  ``benchmarks/baselines/`` holds committed
+copies of the BENCH files from a known-good run; ``python -m
+benchmarks.trajectory`` compares the fresh repo-root files against them on
+a curated metric list and exits nonzero when any metric moved more than
+``--threshold`` (default 25%) in its bad direction.  Improvements never
+fail, and metrics are curated for stability: raw wall-clock seconds are
+deliberately absent (CI hardware varies run to run); the gate watches
+*ratios* the benchmarks compute between two configurations measured on the
+same machine in the same process (speedups, overheads), plus exact counts
+(compile misses) that must never drift at all.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.trajectory            # gate
+    PYTHONPATH=src python -m benchmarks.trajectory --update   # re-baseline
+
+``--update`` copies the current repo-root BENCH files over the committed
+baselines — run it after an intentional performance change and commit the
+result, which makes the accepted trade-off reviewable in the diff.
+
+Semantics per metric kind:
+
+* ``higher`` (speedups): regression when ``new < base * (1 - threshold)``.
+* ``lower`` (overheads): regression when ``new > base + threshold`` —
+  compared *additively* because these are small ratios that legitimately
+  hover around zero (a -1% baseline overhead would make any multiplicative
+  comparison degenerate).
+* ``exact`` (counts): any change at all fails; these encode structural
+  invariants (a constant sweep costs exactly 2 compilations), not timings.
+
+Missing fresh files are skipped with a note (the gate only judges what the
+current CI run produced); missing *baselines* fail loudly — an unbaselined
+metric is an unguarded metric.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO_ROOT, "benchmarks", "baselines")
+
+# (file, json-path, kind) — kind in {"higher", "lower", "exact"}.
+# Curated for cross-run stability: configuration-vs-configuration ratios
+# measured within one process, and exact structural counts.  No raw seconds.
+METRICS: List[Tuple[str, str, str]] = [
+    ("BENCH_runtime.json", "final_dispatch/dispatch_speedup", "higher"),
+    ("BENCH_runtime.json", "full/result_hits", "exact"),
+    ("BENCH_compiled.json", "q6_pair/steady_speedup", "higher"),
+    ("BENCH_compiled.json", "constant_sweep/compile_misses", "exact"),
+    ("BENCH_dist.json", "pilot_fanout_speedup", "higher"),
+    ("BENCH_staged.json", "warm_dispatch/dispatch_speedup", "higher"),
+    ("BENCH_stream.json", "first_frame_speedup", "higher"),
+    ("BENCH_fused.json", "query/launches_fused_per_query", "exact"),
+    ("BENCH_obs.json", "tracing_overhead", "lower"),
+    ("BENCH_obs.json", "audit/violations", "exact"),
+    ("BENCH_obs.json", "telemetry/overhead", "lower"),
+    ("BENCH_obs.json", "telemetry/flight_recorder/dropped", "exact"),
+]
+
+DEFAULT_THRESHOLD = 0.25
+
+
+def _lookup(doc: dict, path: str) -> Optional[float]:
+    node: object = doc
+    for part in path.split("/"):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    if isinstance(node, bool) or not isinstance(node, (int, float)):
+        return None
+    return float(node)
+
+
+def _load(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def update_baselines() -> int:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    copied = 0
+    for fname in sorted({f for f, _, _ in METRICS}):
+        src = os.path.join(REPO_ROOT, fname)
+        if not os.path.exists(src):
+            print(f"trajectory: skip {fname} (no fresh file at repo root)")
+            continue
+        shutil.copyfile(src, os.path.join(BASELINE_DIR, fname))
+        print(f"trajectory: baselined {fname}")
+        copied += 1
+    if not copied:
+        print("trajectory: nothing to baseline — run the benchmarks first",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def check(threshold: float = DEFAULT_THRESHOLD) -> int:
+    failures: List[str] = []
+    fresh_cache: dict = {}
+    base_cache: dict = {}
+    for fname, path, kind in METRICS:
+        if fname not in fresh_cache:
+            fresh_cache[fname] = _load(os.path.join(REPO_ROOT, fname))
+        fresh_doc = fresh_cache[fname]
+        if fresh_doc is None:
+            print(f"trajectory: skip {fname}:{path} (fresh file absent)")
+            continue
+        if fname not in base_cache:
+            base_cache[fname] = _load(os.path.join(BASELINE_DIR, fname))
+        base_doc = base_cache[fname]
+        if base_doc is None:
+            failures.append(f"{fname}: no committed baseline — run "
+                            f"`python -m benchmarks.trajectory --update` "
+                            f"and commit benchmarks/baselines/")
+            continue
+        new = _lookup(fresh_doc, path)
+        base = _lookup(base_doc, path)
+        if new is None or base is None:
+            failures.append(f"{fname}:{path} missing "
+                            f"(fresh={new}, baseline={base})")
+            continue
+        if kind == "exact":
+            ok = new == base
+            verdict = "ok" if ok else "REGRESSED (exact metric changed)"
+        elif kind == "higher":
+            ok = new >= base * (1.0 - threshold)
+            verdict = "ok" if ok else \
+                f"REGRESSED (> {threshold:.0%} below baseline)"
+        else:  # lower: additive — overhead baselines hover around zero
+            ok = new <= base + threshold
+            verdict = "ok" if ok else \
+                f"REGRESSED (> {threshold:+.0%} above baseline)"
+        line = (f"{fname}:{path}  baseline={base:.6g}  "
+                f"now={new:.6g}  {verdict}")
+        print("trajectory:", line)
+        if not ok:
+            failures.append(line)
+    if failures:
+        print(f"\ntrajectory: {len(failures)} metric(s) regressed:",
+              file=sys.stderr)
+        for f in failures:
+            print("  -", f, file=sys.stderr)
+        return 1
+    print("trajectory: all tracked metrics within budget")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        description="Gate BENCH_*.json scalars against committed baselines")
+    parser.add_argument("--update", action="store_true",
+                        help="copy fresh BENCH files over the baselines "
+                             "instead of checking")
+    parser.add_argument("--threshold", type=float,
+                        default=DEFAULT_THRESHOLD,
+                        help="fractional regression budget (default 0.25)")
+    args = parser.parse_args(argv)
+    if args.update:
+        return update_baselines()
+    return check(args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -233,6 +233,24 @@ class QueryScheduler:
             metrics.histogram("pilotdb_drain_wall_seconds",
                               "Wall time per drain() call").observe(
                                   stats.wall_time_s)
+            # streaming latency histograms: observed only when the batch
+            # actually streamed (fields stay 0.0 otherwise — observing
+            # zeros would poison the quantiles)
+            if emits:
+                metrics.histogram(
+                    "pilotdb_time_to_first_frame_seconds",
+                    "Drain-relative time of the first streamed frame"
+                ).observe(stats.time_to_first_frame_s)
+            if finals:
+                metrics.histogram(
+                    "pilotdb_time_to_final_seconds",
+                    "Drain-relative time of the last terminal frame"
+                ).observe(stats.time_to_final_s)
+        ts = getattr(self._session, "timeseries", None)
+        if ts is not None:
+            ts.record_drain(
+                stats.time_to_first_frame_s if emits else None,
+                stats.time_to_final_s if finals else None)
         return completed
 
     def drain_async(self) -> List["QueryHandle"]:

@@ -41,6 +41,7 @@ of the async runtime never need to block on a drain.
 from __future__ import annotations
 
 import bisect
+import collections
 import dataclasses
 import hashlib
 import os
@@ -64,7 +65,10 @@ from repro.engine.physical import plan_template
 from repro.engine.staged import DEFAULT_STAGED_RATES, validate_rates
 from repro.engine.table import BlockTable
 from repro.obs import audit as _audit
+from repro.obs import events as _events
 from repro.obs import metrics as _metrics
+from repro.obs import slo as _slo
+from repro.obs import timeseries as _timeseries
 from repro.obs import trace as _trace
 from repro.runtime import (AsyncRuntime, CachedAnswer, ResultCache,
                            ResultCacheInfo)
@@ -150,6 +154,26 @@ class QueryHandle:
     # observed-vs-promised outcome (repro.obs.audit); None unless the
     # session runs in audit mode and this query completed
     audit_record: Optional[_audit.AuditRecord] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # the fused single-launch program delivered this answer (set by
+    # Session._run_fused; provenance reporting and telemetry read it — the
+    # fused span carries the same fact only when tracing is on)
+    _fused: bool = dataclasses.field(default=False, repr=False, compare=False)
+    # this handle was picked by deterministic trace sampling
+    # (SessionConfig.trace_sample); sampled traces land in the flight
+    # recorder and the session's recent-traces ring at completion
+    _trace_sampled: bool = dataclasses.field(
+        default=False, repr=False, compare=False)
+    # continuous-telemetry delivery hook (Session._observe_delivery); fired
+    # exactly once from _mark_done/_mark_failed, AFTER the done event —
+    # None (the default) keeps the completion path byte-for-byte the
+    # pre-telemetry code
+    _on_complete: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # 12-hex hash of the constant-stripped template signature: the
+    # time-series / SLO / flight-recorder key (computed at submission only
+    # when telemetry is armed; None otherwise)
+    _template_key: Optional[str] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property
@@ -276,6 +300,18 @@ class QueryHandle:
                 "ok", cached=cached,
                 fallback=answer.report.fallback if answer is not None else None)
         self._done_event.set()
+        self._fire_on_complete()
+
+    def _fire_on_complete(self) -> None:
+        """Run the telemetry delivery hook exactly once; it observes only
+        (time-series row, SLO evaluation, flight-recorder event) and must
+        never raise into the completion path."""
+        cb, self._on_complete = self._on_complete, None
+        if cb is not None:
+            try:
+                cb(self)
+            except Exception:
+                pass
 
     def _mark_failed(self, error: str) -> None:
         with self._frame_lock:
@@ -290,6 +326,7 @@ class QueryHandle:
         if self._trace is not None:
             self._trace.finish("error", error=error)
         self._done_event.set()
+        self._fire_on_complete()
 
     def result(self) -> ApproxAnswer:
         """The answer; raises if the query failed or has not run yet."""
@@ -370,6 +407,38 @@ class SessionConfig:
     # session metrics registry (see repro.obs.audit — never perturbs seeds,
     # cache keys, or delivered answers; adds exact scan cost per query).
     audit: bool = False
+    # -- continuous telemetry (repro.obs.timeseries / slo / events) ----------
+    # Per-template time-series + SLO evaluation on every delivery: bounded
+    # ring buffers keyed by the constant-stripped template signature record
+    # latency / pilot wall / scanned bytes / provenance / audit error ratio
+    # with streaming windowed p50/p95/p99 (stats_payload()["timeseries"]).
+    # Off (default): no store exists, handles carry no completion hook, and
+    # the delivery path is byte-for-byte the pre-telemetry code; ON only
+    # observes finished handles, so answers stay bit-identical either way.
+    telemetry: bool = False
+    # Ring-buffer capacity per template series (and the drain-level
+    # streaming-latency rings) when telemetry is on.
+    timeseries_window: int = 256
+    # Initial SLO targets (tuple of repro.obs.slo.SloTarget); more can be
+    # added at runtime via session.slo.set_target(...).  Requires
+    # telemetry=True (targets evaluate against the time-series).
+    slo_targets: Optional[Tuple] = None
+    # Flight recorder: path of an append-only JSONL event log (submit /
+    # pilot / rate_solve / final / deliver / fallback / fail / audit /
+    # slo_breach / sampled-trace records; see repro.obs.events).  The
+    # recorder never raises into the query path — an unwritable target
+    # only counts drops.  None (default) records nothing.
+    flight_recorder: Optional[str] = None
+    flight_recorder_max_bytes: int = 1 << 20   # rotate past this size
+    flight_recorder_max_files: int = 3         # live file + rotated .1/.2
+    # Always-on sampled tracing: attach a full span tree to this fraction
+    # of queries, chosen by a content-derived hash of (structural
+    # signature, session seed) — never wall-clock RNG, so equal-seed
+    # sessions sample the IDENTICAL query set and replay stays
+    # deterministic.  Sampled traces land in the flight recorder (when
+    # armed) and the session's recent-traces ring.  0.0 (default) samples
+    # nothing; tracing=True still traces everything.
+    trace_sample: float = 0.0
     # Fuse both TAQA stages into ONE device program per query (pilot scan
     # -> rate solve -> final aggregation with no host sync between stages;
     # see engine/physical.py compile_fused).  Answers stay bit-identical
@@ -459,13 +528,44 @@ class Session:
         # unified metrics registry: first-class instruments plus collector
         # views over the caches/runtime this session already tracks
         self.metrics = _metrics.MetricsRegistry()
+        # -- continuous telemetry (repro.obs.timeseries / slo / events) ------
+        if not 0.0 <= config.trace_sample <= 1.0:
+            raise ValueError(
+                f"trace_sample must be in [0, 1], got {config.trace_sample}")
+        self.recorder = (_events.FlightRecorder(
+            config.flight_recorder,
+            max_bytes=config.flight_recorder_max_bytes,
+            max_files=config.flight_recorder_max_files)
+            if config.flight_recorder else None)
+        self.timeseries = (_timeseries.TemplateTimeSeries(
+            window=config.timeseries_window)
+            if config.telemetry else None)
+        self.slo = (_slo.SloMonitor(
+            self.metrics, self.timeseries, recorder=self.recorder,
+            targets=tuple(config.slo_targets or ()))
+            if config.telemetry else None)
+        if config.slo_targets and not config.telemetry:
+            raise ValueError(
+                "slo_targets requires telemetry=True (targets evaluate "
+                "against the per-template time-series)")
+        # last N sampled span trees (dict form), for the ops dashboard
+        self.recent_traces: "collections.deque" = collections.deque(maxlen=16)
+        # whether handles get the completion hook: any continuous-telemetry
+        # surface is on — False (the default config) arms NOTHING, keeping
+        # submission and completion byte-for-byte the pre-telemetry path
+        self._telemetry_armed = (self.timeseries is not None
+                                 or self.recorder is not None
+                                 or config.trace_sample > 0.0)
         _metrics.register_session_collectors(self.metrics, self)
         self.auditor = (_audit.GuaranteeAuditor(self.db, self.metrics)
                         if config.audit else None)
 
     def close(self) -> None:
-        """Shut the runtime's worker pool down (idempotent)."""
+        """Shut the runtime's worker pool down and close the flight
+        recorder (idempotent)."""
         self.runtime.shutdown()
+        if self.recorder is not None:
+            self.recorder.close()
 
     # -- catalog -------------------------------------------------------------
     def register_table(self, name: str, table: BlockTable, *,
@@ -661,6 +761,105 @@ class Session:
             [self._entropy, 0x5A3D1ED, _content_hash(name)])
         return int(seq.generate_state(1, dtype=np.uint32)[0])
 
+    # -- continuous telemetry (repro.obs.timeseries / slo / events) -----------
+    def _trace_sampled(self, signature) -> bool:
+        """Deterministic trace-sampling decision: a content-derived hash of
+        (session seed, structural signature) against ``trace_sample`` —
+        never wall-clock RNG, so equal-seed sessions sample the IDENTICAL
+        query set (pinned by tests/test_obs.py).  Its own domain constant
+        keeps the hash independent of the per-query/pilot/staged seed
+        streams."""
+        p = self.config.trace_sample
+        if p <= 0.0:
+            return False
+        if p >= 1.0:
+            return True
+        h = _content_hash(self._entropy, 0x7E1E5C0F, signature)
+        return (h / 2.0 ** 64) < p
+
+    def template_key(self, sql: str) -> str:
+        """The 12-hex time-series/SLO key of ``sql``'s constant-stripped
+        template — what ``stats_payload()["timeseries"]["templates"]`` and
+        :class:`repro.obs.slo.SloTarget.template` key by.  Constant-varied
+        re-issues of one dashboard query map to one key."""
+        parsed = parse_sql(sql, max_groups_resolver=self.infer_max_groups,
+                           spec_kwargs=self.config.spec_kwargs)
+        return _trace.sig_hash(
+            plan_template(structural_signature(parsed.query)))
+
+    def _emit_event(self, etype: str, **fields) -> None:
+        """Append one flight-recorder record (no-op when unarmed; the
+        recorder itself never raises into the query path)."""
+        if self.recorder is not None:
+            self.recorder.emit(etype, **fields)
+
+    def _observe_delivery(self, handle: QueryHandle) -> None:
+        """The completion hook (``handle._on_complete``): one time-series
+        row, the SLO evaluation, and the flight-recorder terminal event for
+        a just-finished handle.  Read-only over the handle — runs AFTER the
+        done event, never raises (the hook firer swallows), and never
+        touches seeds, answers, or caches."""
+        latency = max(0.0, time.perf_counter() - handle.t_submit)
+        key = handle._template_key or "_unkeyed"
+        rep = handle.report
+        failed = handle.status == QueryStatus.FAILED
+        fallback = bool(rep.fallback) if rep is not None else False
+        pilot_wall = rep.pilot_time_s if rep is not None else 0.0
+        if handle.cached or rep is None:
+            scanned = 0  # a cache-served delivery scanned nothing now
+        elif rep.fallback:
+            scanned = rep.pilot_scanned_bytes + rep.exact_scanned_bytes
+        else:
+            scanned = rep.pilot_scanned_bytes + rep.final_scanned_bytes
+        shared = bool(rep.pilot_shared) if rep is not None else False
+        staged = False
+        if handle._trace is not None:  # staged rungs tag scan spans only
+            staged = any(sp.attrs.get("staged")
+                         for sp in handle._trace.find("scan"))
+        if self.timeseries is not None:
+            self.timeseries.record_delivery(
+                key, sql=handle.sql, latency_s=latency,
+                pilot_wall_s=pilot_wall, scanned_bytes=scanned,
+                cached=handle.cached, shared=shared, fused=handle._fused,
+                staged=staged, fallback=fallback, failed=failed)
+        if self.recorder is not None:
+            if failed:
+                self._emit_event("fail", qid=handle.query_id, template=key,
+                                 latency_s=round(latency, 6),
+                                 error=handle.error)
+            else:
+                self._emit_event(
+                    "deliver", qid=handle.query_id, template=key,
+                    latency_s=round(latency, 6),
+                    pilot_wall_s=round(pilot_wall, 6),
+                    scanned_bytes=int(scanned), cached=handle.cached,
+                    shared=shared, fused=handle._fused, staged=staged,
+                    fallback=fallback)
+                if fallback:
+                    self._emit_event("fallback", qid=handle.query_id,
+                                     template=key, reason=rep.fallback)
+        if handle._trace_sampled and handle._trace is not None:
+            tree = handle._trace.to_dict()
+            self.recent_traces.append(tree)
+            self._emit_event("trace", qid=handle.query_id, template=key,
+                             trace=tree)
+        if self.slo is not None:
+            self.slo.evaluate(key)
+
+    def _observe_audit(self, handle: QueryHandle,
+                       rec: _audit.AuditRecord) -> None:
+        """Feed one audit outcome into the time-series / recorder / SLO
+        (called by :meth:`_complete_handle` after the auditor ran)."""
+        key = handle._template_key or "_unkeyed"
+        if self.timeseries is not None and rec.skipped is None:
+            self.timeseries.record_audit(key, rec.error_ratio, rec.passed)
+        self._emit_event("audit", qid=handle.query_id, template=key,
+                         ratio=round(rec.error_ratio, 6), passed=rec.passed,
+                         observed=round(rec.observed_error, 6),
+                         promised=rec.promised_error, skipped=rec.skipped)
+        if self.slo is not None and rec.skipped is None:
+            self.slo.evaluate(key)  # violation-rate targets see the record
+
     # -- front doors ----------------------------------------------------------
     def table(self, name: str) -> QueryBuilder:
         if name not in self.executor.catalog:
@@ -830,7 +1029,8 @@ class Session:
                              t_submit=(time.perf_counter()
                                        if t_submit is None else t_submit))
         self._next_id += 1
-        if self.config.tracing:
+        handle._trace_sampled = self._trace_sampled(signature)
+        if self.config.tracing or handle._trace_sampled:
             handle._trace = _trace.QueryTrace(
                 handle.query_id, sql=sql, t_start=handle.t_submit)
             handle._trace.record(
@@ -838,6 +1038,14 @@ class Session:
                 seed=handle.seed,
                 template=_trace.sig_hash(handle.group_key),
                 signature=_trace.sig_hash(signature))
+        if self._telemetry_armed:
+            handle._template_key = _trace.sig_hash(handle.group_key)
+            handle._on_complete = self._observe_delivery
+            if self.recorder is not None:
+                self.recorder.emit(
+                    "submit", qid=handle.query_id,
+                    template=handle._template_key, sql=sql,
+                    sampled=handle._trace_sampled)
         if stream:
             handle.enable_streaming()
         return handle
@@ -936,7 +1144,12 @@ class Session:
             # AFTER delivery (the client already has its answer; the trace
             # is finished, so the exact run traces nothing) and against the
             # base answer — every group the guarantee covered gets checked
-            self.auditor.check(handle, base)
+            rec = self.auditor.check(handle, base)
+            if rec is not None and self._telemetry_armed:
+                try:  # telemetry observes; it must never raise into delivery
+                    self._observe_audit(handle, rec)
+                except Exception:
+                    pass
         return True
 
     def _run_fused(self, handle: QueryHandle) -> Optional[ApproxAnswer]:
@@ -959,6 +1172,20 @@ class Session:
                 ans = None
             sp.set(engaged=ans is not None,
                    fallback=None if ans is None else ans.report.fallback)
+        if ans is not None:
+            handle._fused = True  # provenance + telemetry read this flag
+            rep = ans.report
+            self._emit_event("pilot", qid=handle.query_id, fused=True,
+                             table=rep.pilot_table,
+                             scanned_bytes=rep.pilot_scanned_bytes,
+                             wall_s=round(rep.pilot_time_s, 6),
+                             fallback=rep.fallback)
+            self._emit_event("rate_solve", qid=handle.query_id, fused=True,
+                             candidates=rep.candidates, fallback=rep.fallback)
+            self._emit_event("final", qid=handle.query_id, fused=True,
+                             scanned_bytes=rep.final_scanned_bytes,
+                             wall_s=round(rep.final_time_s, 6),
+                             fallback=rep.fallback)
         return ans
 
     def _run_handle(self, handle: QueryHandle) -> QueryHandle:
@@ -993,6 +1220,12 @@ class Session:
                                n_pilot_blocks=rep.n_pilot_blocks,
                                scanned_bytes=rep.pilot_scanned_bytes,
                                fallback=rep.fallback)
+                    self._emit_event(
+                        "pilot", qid=handle.query_id, shared=False,
+                        table=rep.pilot_table,
+                        scanned_bytes=rep.pilot_scanned_bytes,
+                        wall_s=round(rep.pilot_time_s, 6),
+                        fallback=rep.fallback)
                     pilot_est = advisory_estimate(handle.query, outcome,
                                                   handle.spec.confidence)
                     if pilot_est is not None:
@@ -1008,10 +1241,18 @@ class Session:
                                fallback=rep.fallback,
                                rates=dict(rep.plan.rates)
                                if rep.plan is not None else None)
+                    self._emit_event("rate_solve", qid=handle.query_id,
+                                     candidates=rep.candidates,
+                                     fallback=rep.fallback)
                     with _trace.span("final", batched=False) as sp:
                         ans = self.db.run_final(stage)
                         sp.set(scanned_bytes=ans.report.final_scanned_bytes,
                                fallback=ans.report.fallback)
+                    self._emit_event(
+                        "final", qid=handle.query_id,
+                        scanned_bytes=ans.report.final_scanned_bytes,
+                        wall_s=round(ans.report.final_time_s, 6),
+                        fallback=ans.report.fallback)
                 with _trace.span("deliver"):
                     self._complete_handle(handle, ans, gen,
                                           pilot_est=pilot_est)

@@ -1,18 +1,32 @@
-"""Observability: query-lifecycle tracing, unified metrics, guarantee audit.
+"""Observability: tracing, metrics, guarantee audit, continuous telemetry.
 
-Three pieces, each opt-in and read-only over the query path:
+Six pieces, each opt-in and read-only over the query path:
 
-* :mod:`repro.obs.trace` — per-query span trees (``SessionConfig.tracing``)
-  exportable as JSON or Chrome trace-event format via ``handle.trace()``.
+* :mod:`repro.obs.trace` — per-query span trees (``SessionConfig.tracing``,
+  or deterministically sampled via ``trace_sample=p``) exportable as JSON
+  or Chrome trace-event format via ``handle.trace()``.
 * :mod:`repro.obs.metrics` — counter/gauge/histogram registry + collector
   snapshots; Prometheus text exposition via ``gateway.metrics_text()``.
 * :mod:`repro.obs.audit` — EXPLAIN-style reports (``handle.explain()``) and
   opt-in observed-vs-promised error auditing (``SessionConfig.audit``).
+* :mod:`repro.obs.timeseries` — per-template bounded ring buffers with
+  streaming windowed p50/p95/p99 (``SessionConfig.telemetry``), exposed via
+  ``stats_payload()["timeseries"]``.
+* :mod:`repro.obs.slo` — per-template/wildcard latency, fallback-rate and
+  guarantee-violation-rate targets evaluated on delivery; breaches surface
+  as registry counters and ``gateway.slo_report()``.
+* :mod:`repro.obs.events` — the flight recorder: append-only size-rotated
+  JSONL event log (``SessionConfig.flight_recorder``) with offline replay
+  (:func:`repro.obs.events.rebuild_timeseries`).
 
-See ``docs/observability.md`` for the span vocabulary, metric names, and
-the audit-mode non-perturbation contract.
+See ``docs/observability.md`` for the span vocabulary, metric names, the
+event-record schema, and the non-perturbation contract all six share.
 """
 
 from repro.obs.trace import QueryTrace, span, annotate, annotate_count  # noqa: F401
 from repro.obs.metrics import MetricsRegistry, GLOBAL  # noqa: F401
 from repro.obs.audit import GuaranteeAuditor, AuditRecord, explain  # noqa: F401
+from repro.obs.timeseries import TemplateTimeSeries, Ring  # noqa: F401
+from repro.obs.slo import SloMonitor, SloTarget, SloBreach  # noqa: F401
+from repro.obs.events import (FlightRecorder, replay,  # noqa: F401
+                              rebuild_timeseries)

@@ -55,8 +55,11 @@ class AuditRecord:
 
 def provenance_of(handle) -> str:
     """Which path produced the answer: ``cached``, ``exact-fallback``,
-    ``shared-pilot``, or ``fresh`` — suffixed ``+staged`` / ``+dist`` when
-    the trace recorded staged-rung or shard-fanout execution."""
+    ``shared-pilot``, or ``fresh`` — suffixed ``+staged`` / ``+dist`` /
+    ``+fused`` when the trace recorded staged-rung or shard-fanout
+    execution, or the PR-9 single-launch fused program engaged (the
+    ``fused`` span with ``engaged=True``; also reported without a trace
+    via the handle's fused-delivery flag)."""
     if handle.cached:
         base = "cached"
     else:
@@ -68,22 +71,26 @@ def provenance_of(handle) -> str:
             base = "shared-pilot"
         else:
             base = "fresh"
+    tags = []
     trace = getattr(handle, "_trace", None)
     if trace is not None:
-        tags = []
 
         def walk(sp):
             if sp.attrs.get("staged"):
                 tags.append("staged")
             if sp.name == "shard_fanout":
                 tags.append("dist")
+            if sp.name == "fused" and sp.attrs.get("engaged"):
+                tags.append("fused")
             for c in sp.children:
                 walk(c)
 
         walk(trace.root)
-        for tag in ("staged", "dist"):
-            if tag in tags:
-                base += f"+{tag}"
+    if not handle.cached and getattr(handle, "_fused", False):
+        tags.append("fused")  # untraced fused deliveries still report it
+    for tag in ("staged", "dist", "fused"):
+        if tag in tags:
+            base += f"+{tag}"
     return base
 
 
@@ -227,6 +234,14 @@ def explain(handle) -> str:
     report = answer.report
     spec = handle.spec
     lines.append(f"  provenance: {provenance_of(handle)}")
+    trace = getattr(handle, "_trace", None)
+    fused_spans = trace.find("fused") if trace is not None else []
+    if fused_spans:
+        sp = fused_spans[0]
+        lines.append(
+            "  fused: engaged (single launch, 0 host syncs)"
+            if sp.attrs.get("engaged")
+            else "  fused: attempted, fell back to the two-stage path")
     if spec is None:
         lines.append("  guarantee: none (exact execution requested)")
     else:

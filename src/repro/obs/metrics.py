@@ -39,6 +39,13 @@ def _sanitize(name: str) -> str:
     return name
 
 
+def _escape_help(s: str) -> str:
+    """Prometheus text exposition: HELP text must escape backslash and
+    line feed (an unescaped newline would split the comment into a bogus
+    sample line and break the scrape)."""
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 class Counter:
     """Monotonic counter (thread-safe)."""
 
@@ -212,13 +219,24 @@ class MetricsRegistry:
     # -- Prometheus text exposition ------------------------------------------
     def to_text(self) -> str:
         lines: List[str] = []
+        # every metric name already emitted: instruments' own names, the
+        # histogram child series they synthesize, and flattened collector
+        # gauges — a second emission of any of them (e.g. a collector whose
+        # flattened path collides with an instrument) would be an invalid
+        # exposition (duplicate # TYPE), so later duplicates are skipped
+        seen: set = set()
         for name in sorted(self.instruments()):
             inst = self._instruments[name]
             mname = _sanitize(name)
+            if mname in seen:
+                continue  # two raw names sanitizing to one metric name
+            seen.add(mname)
             if inst.help:
-                lines.append(f"# HELP {mname} {inst.help}")
+                lines.append(f"# HELP {mname} {_escape_help(inst.help)}")
             lines.append(f"# TYPE {mname} {inst.kind}")
             if isinstance(inst, Histogram):
+                seen.update((f"{mname}_bucket", f"{mname}_sum",
+                             f"{mname}_count"))
                 snap = inst.snapshot()
                 for le, cum in snap["buckets"]:
                     lines.append(f'{mname}_bucket{{le="{le:g}"}} {cum}')
@@ -235,6 +253,9 @@ class MetricsRegistry:
             except Exception:  # a dying component must not break scrape
                 continue
             for path, value in sorted(_flatten(cname, snap)):
+                if path in seen:
+                    continue
+                seen.add(path)
                 lines.append(f"# TYPE {path} gauge")
                 lines.append(f"{path} {value:.9g}")
         return "\n".join(lines) + "\n"
@@ -351,6 +372,22 @@ def register_session_collectors(registry: MetricsRegistry, session) -> None:
                     "max_error_ratio": 0.0}
         return auditor.summary()
 
+    def timeseries() -> Dict:
+        s = ref()
+        ts = getattr(s, "timeseries", None) if s is not None else None
+        if ts is None:  # telemetry off: full-key skeleton, zero state
+            from repro.obs.timeseries import empty_snapshot
+            return empty_snapshot()
+        return ts.snapshot()
+
+    def slo() -> Dict:
+        s = ref()
+        mon = getattr(s, "slo", None) if s is not None else None
+        if mon is None:
+            from repro.obs.slo import empty_summary
+            return empty_summary()
+        return mon.summary()
+
     registry.register_collector("compile_cache", compile_cache, owner=session)
     registry.register_collector("result_cache", result_cache, owner=session)
     registry.register_collector("staged", staged, owner=session)
@@ -358,3 +395,5 @@ def register_session_collectors(registry: MetricsRegistry, session) -> None:
         "shard_scanned_bytes", shard_scanned_bytes, owner=session)
     registry.register_collector("runtime", runtime, owner=session)
     registry.register_collector("audit", audit, owner=session)
+    registry.register_collector("timeseries", timeseries, owner=session)
+    registry.register_collector("slo", slo, owner=session)

@@ -259,6 +259,13 @@ def _pilot_and_prepare(session: "Session", live: List["QueryHandle"],
             return []
         finally:
             _trace.deactivate(token)
+    # one flight-recorder record per pilot STAGE (not per member): the
+    # leader's qid plus the member count it fanned out to
+    session._emit_event("pilot", qid=leader.query_id, shared=shared,
+                        members=len(live), table=rep.pilot_table,
+                        scanned_bytes=rep.pilot_scanned_bytes,
+                        wall_s=round(rep.pilot_time_s, 6),
+                        fallback=rep.fallback)
     for h in live[1:]:
         if h._trace is not None:
             h._trace.record(
@@ -307,6 +314,9 @@ def _pilot_and_prepare(session: "Session", live: List["QueryHandle"],
                            fallback=srep.fallback,
                            rates=dict(srep.plan.rates)
                            if srep.plan is not None else None)
+                session._emit_event("rate_solve", qid=h.query_id,
+                                    candidates=srep.candidates,
+                                    fallback=srep.fallback)
             except Exception as e:  # a failing member must not sink peers
                 p.failed = f"{type(e).__name__}: {e}"
             pend.append(p)
@@ -372,6 +382,12 @@ def _complete_one(session: "Session", p: _Pending, box: dict) -> None:
                 sp.set(batched=pre_answered and ans.report.fallback is None,
                        scanned_bytes=ans.report.final_scanned_bytes,
                        fallback=ans.report.fallback)
+            session._emit_event(
+                "final", qid=h.query_id,
+                batched=pre_answered and ans.report.fallback is None,
+                scanned_bytes=ans.report.final_scanned_bytes,
+                wall_s=round(ans.report.final_time_s, 6),
+                fallback=ans.report.fallback)
             ans.report.pilot_shared = not box["owns"]
             # ownership sticks only to a COMPLETED answer: if completion
             # fails (mid-flight table replacement), the next member carries

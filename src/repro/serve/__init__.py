@@ -5,6 +5,8 @@ _EXPORTS = {
     "ServeEngine": ("repro.serve.engine", "ServeEngine"),
     "SqlGateway": ("repro.serve.sql_gateway", "SqlGateway"),
     "GatewayStats": ("repro.serve.sql_gateway", "GatewayStats"),
+    "render_dashboard": ("repro.serve.dashboard", "render_dashboard"),
+    "write_dashboard": ("repro.serve.dashboard", "write_dashboard"),
 }
 
 __all__ = list(_EXPORTS)

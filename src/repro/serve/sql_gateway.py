@@ -32,6 +32,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.api.scheduler import QueryScheduler
 from repro.api.session import QueryHandle, Session
+from repro.obs import slo as _slo
+from repro.obs import timeseries as _timeseries
 from repro.runtime import BackpressureError
 from repro.stream import Frame
 
@@ -272,7 +274,16 @@ class SqlGateway:
           fan-out counters) plus executor ``queries_run`` / ``pilots_run``;
         * ``audit``         — guarantee-auditor summary (``runs`` /
           ``violations`` / ``errors`` / ``max_error_ratio``; zeros when
-          :attr:`SessionConfig.audit` is off).
+          :attr:`SessionConfig.audit` is off);
+        * ``timeseries``    — the per-template time-series snapshot
+          (:meth:`repro.obs.TemplateTimeSeries.snapshot`: windowed
+          p50/p95/p99 rings per template plus drain TTFF/TTF rings;
+          ``enabled`` False with empty ``templates`` when
+          :attr:`SessionConfig.telemetry` is off);
+        * ``slo``           — the SLO-monitor summary
+          (:meth:`repro.obs.SloMonitor.summary`: target count, breach
+          totals, recent breaches; ``enabled`` False when telemetry is
+          off).
         """
         tree = self.session.metrics.tree()
         # pinned payload schema: merge the registry's staged snapshot over a
@@ -283,6 +294,10 @@ class SqlGateway:
         audit_info = {"runs": 0, "violations": 0, "errors": 0,
                       "max_error_ratio": 0.0}
         audit_info.update(tree.get("audit") or {})
+        ts_info = _timeseries.empty_snapshot()
+        ts_info.update(tree.get("timeseries") or {})
+        slo_info = _slo.empty_summary()
+        slo_info.update(tree.get("slo") or {})
         return {
             "gateway": self.stats.as_dict(),
             "compile_cache": tree.get("compile_cache") or {},
@@ -291,7 +306,18 @@ class SqlGateway:
             "staged": staged_info,
             "runtime": tree.get("runtime") or {},
             "audit": audit_info,
+            "timeseries": ts_info,
+            "slo": slo_info,
         }
+
+    def slo_report(self) -> List[Dict[str, object]]:
+        """Current state of every configured SLO rule against its template's
+        windowed statistics — one row per (rule, matching template) pair
+        with the observed value, the target, and whether it is breached NOW
+        (see :meth:`repro.obs.SloMonitor.report`).  Empty when the session
+        has no SLO monitor (``telemetry`` off or no targets)."""
+        slo = getattr(self.session, "slo", None)
+        return slo.report() if slo is not None else []
 
     def metrics_text(self) -> str:
         """The session's full metrics registry — first-class instruments

@@ -197,3 +197,42 @@ def test_fused_session_matches_streaming_off_and_on(catalog):
     assert frames, "no terminal frame"
     np.testing.assert_array_equal(h.result().values, base[0])
     s.close()
+
+
+def test_fused_audit_and_telemetry_interplay(catalog, tmp_path):
+    """Satellite: fused_taqa + audit + telemetry compose — the fused
+    delivery's provenance reports +fused (explain shows the engaged span),
+    the audit checks the fused answer against an exact run, and the
+    time-series counts the delivery as fused."""
+    from repro.obs.audit import provenance_of
+
+    base, _ = _run(catalog, BASE, [SQL])
+    cfg = dc.replace(FUSED, tracing=True, audit=True, telemetry=True,
+                     flight_recorder=str(tmp_path / "events.jsonl"))
+    s = Session(seed=11, config=cfg)
+    for name, tab in catalog.items():
+        s.register_table(name, tab)
+    h = s.submit(SQL)
+    s.drain()
+    assert h.status == "done", h.error
+    # full observability changes no fused answer
+    np.testing.assert_array_equal(h.result().values, base[0])
+    fused_spans = h._trace.find("fused")
+    assert fused_spans and fused_spans[0].attrs.get("engaged"), \
+        "q6-shaped query should engage the fused program"
+    assert provenance_of(h).endswith("+fused")
+    assert "fused: engaged" in h.explain()
+    rec = h.audit_record
+    assert rec is not None and rec.skipped is None and rec.passed
+    assert "+fused" in rec.provenance
+    key = s.template_key(SQL)
+    series = s.timeseries.series(key)
+    assert series.deliveries == 1 and series.fused == 1
+    from repro.obs.events import replay
+    events = list(replay(str(tmp_path / "events.jsonl")))
+    kinds = [e["ev"] for e in events]
+    for k in ("submit", "pilot", "rate_solve", "final", "deliver", "audit"):
+        assert k in kinds, f"missing {k} event"
+    pilot = next(e for e in events if e["ev"] == "pilot")
+    assert pilot["fused"] is True
+    s.close()

@@ -468,3 +468,442 @@ def test_global_registry_exists():
     # the process-wide registry is importable and scrapes cleanly even
     # when empty
     assert isinstance(GLOBAL.to_text(), str)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition: HELP escaping + duplicate-name guard (satellite)
+# ---------------------------------------------------------------------------
+
+def test_prometheus_help_escaping_and_duplicate_guard():
+    reg = MetricsRegistry()
+    reg.counter("dup_hits", "line one\nline two with \\ backslash").inc(3)
+    # a collector whose flattened path collides with the instrument name
+    reg.register_collector("dup", lambda: {"hits": 99, "fresh": 7})
+    # a collector colliding with a histogram's synthesized child series
+    reg.histogram("lat_seconds", buckets=(0.1,)).observe(0.05)
+    reg.register_collector("lat", lambda: {"seconds_count": 42})
+    text = reg.to_text()
+    # exposition stays valid: comments, or exactly "name value" lines
+    for line in text.splitlines():
+        assert line.startswith("#") or len(line.split()) == 2, line
+    # HELP newline/backslash escaped into one comment line
+    assert ("# HELP dup_hits line one\\nline two with \\\\ backslash"
+            in text.splitlines())
+    # the instrument wins the collision; the collector gauge is skipped
+    dup_lines = [ln for ln in text.splitlines()
+                 if ln.split()[0] == "dup_hits"]
+    assert dup_lines == ["dup_hits 3"]
+    # non-colliding collector keys still flatten
+    assert "dup_fresh 7" in text
+    # the histogram's _count child also guards against collector collisions
+    count_lines = [ln for ln in text.splitlines()
+                   if ln.split()[0] == "lat_seconds_count"]
+    assert count_lines == ["lat_seconds_count 1"]
+
+
+# ---------------------------------------------------------------------------
+# Continuous telemetry: time-series, SLO, flight recorder, sampled tracing
+# ---------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+from repro.obs.events import FlightRecorder, replay, rebuild_timeseries
+from repro.obs.slo import SloTarget
+from repro.obs.timeseries import Ring, TemplateTimeSeries, quantile
+
+TEMPLATE_SQL = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+                "WHERE l_quantity < {} ERROR 10% CONFIDENCE 90%")
+
+
+def _telemetry_cfg(tmp_path=None, **kw):
+    base = dict(async_workers=4, result_cache_size=0, telemetry=True)
+    if tmp_path is not None:
+        base["flight_recorder"] = str(tmp_path / "events.jsonl")
+    base.update(kw)
+    return SessionConfig(**base)
+
+
+def test_ring_and_quantile_mechanics():
+    r = Ring(4)
+    assert r.stats()["window"] == 0 and r.last() == 0.0
+    for v in [5.0, 1.0, 3.0]:
+        r.push(v)
+    assert r.values() == [5.0, 1.0, 3.0] and r.last() == 3.0
+    for v in [7.0, 9.0]:
+        r.push(v)  # wraps: 5.0 evicted
+    assert r.values() == [1.0, 3.0, 7.0, 9.0]
+    assert r.last() == 9.0 and r.total == 5
+    st = r.stats()
+    assert st["p50"] == 3.0 and st["p99"] == 9.0 and st["max"] == 9.0
+    assert quantile([], 0.5) == 0.0
+    assert quantile([2.0, 1.0], 0.5) == 1.0
+    with pytest.raises(ValueError):
+        Ring(0)
+
+
+def test_timeseries_store_eviction_and_slo_stats():
+    ts = TemplateTimeSeries(window=8, max_templates=2)
+    ts.record_delivery("a", latency_s=0.1, fallback=True)
+    ts.record_delivery("b", latency_s=0.2)
+    ts.record_delivery("a", latency_s=0.3)
+    ts.record_delivery("c", latency_s=0.4)  # evicts b (LRU)
+    assert set(ts.keys()) == {"a", "c"}
+    st = ts.slo_stats("a")
+    assert st["samples"] == 2 and st["fallback_rate"] == 0.5
+    ts.record_audit("a", 0.7, passed=False)
+    assert ts.slo_stats("a")["violation_rate"] == 1.0
+    ts.record_drain(0.01, 0.05)
+    ts.record_drain(None, None)
+    snap = ts.snapshot()
+    assert snap["drains"] == 2 and snap["ttff_s"]["window"] == 1
+    json.dumps(snap)
+
+
+def test_telemetry_off_by_default_and_bit_identical_on(catalog, tmp_path):
+    plain = Session(catalog, seed=17, config=NOCACHE_CFG)
+    assert plain.timeseries is None and plain.slo is None
+    assert plain.recorder is None
+    ph = [plain.submit(TEMPLATE_SQL.format(c)) for c in (18, 24, 30)]
+    plain.drain()
+
+    cfg = _telemetry_cfg(tmp_path, trace_sample=1.0,
+                         slo_targets=(SloTarget(p95_latency_s=3600.0),))
+    tele = Session(catalog, seed=17, config=cfg)
+    th = [tele.submit(TEMPLATE_SQL.format(c)) for c in (18, 24, 30)]
+    tele.drain()
+    # full telemetry (time-series + SLO + recorder + sampled tracing)
+    # changes no answer: bit-identical to the equal-seed plain session
+    for a, b in zip(ph, th):
+        _assert_bitwise(a.answer, b.answer)
+    assert len(tele.timeseries.keys()) == 1  # one constant-varied template
+    key = tele.timeseries.keys()[0]
+    assert key == tele.template_key(TEMPLATE_SQL.format(18))
+    s = tele.timeseries.series(key)
+    assert s.deliveries == 3 and len(s.latency_s) == 3
+    assert s.failures == 0
+    tele.close()
+    plain.close()
+
+
+def test_timeseries_rides_registry_and_stats_payload(catalog, tmp_path):
+    cfg = _telemetry_cfg(tmp_path)
+    s = Session(catalog, seed=5, config=cfg)
+    gw = SqlGateway(s)
+    gw.submit("c0", HERD_SQL)
+    gw.submit("c1", HERD_SQL)
+    gw.run()
+    tree = s.metrics.tree()
+    assert tree["timeseries"]["enabled"] is True
+    payload = gw.stats_payload()
+    ts_section = payload["timeseries"]
+    assert ts_section["enabled"] is True and ts_section["drains"] >= 1
+    key = s.template_key(HERD_SQL)
+    tmpl = ts_section["templates"][key]
+    assert tmpl["deliveries"] == 2
+    assert tmpl["latency_s"]["window"] == 2
+    assert tmpl["latency_s"]["p95"] > 0
+    assert tmpl["sql"] == HERD_SQL
+    json.dumps(payload)
+    # the quantiles flow through Prometheus exposition too
+    text = gw.metrics_text()
+    for line in text.splitlines():
+        assert line.startswith("#") or len(line.split()) == 2, line
+    assert "timeseries_enabled 1" in text
+    assert f"timeseries_templates_{key}_deliveries 2" in text
+    s.close()
+
+
+def test_slo_breach_round_trip(catalog, tmp_path):
+    """Injected impossible target -> breach counter + flight-recorder event
+    + slo_report() entry (the acceptance round-trip)."""
+    cfg = _telemetry_cfg(
+        tmp_path, slo_targets=(SloTarget(p95_latency_s=1e-9),
+                               SloTarget(max_fallback_rate=0.99)))
+    s = Session(catalog, seed=5, config=cfg)
+    gw = SqlGateway(s)
+    gw.submit("c0", HERD_SQL)
+    gw.run()
+    assert s.metrics.counter("pilotdb_slo_breaches_total").value >= 1
+    assert s.metrics.counter("pilotdb_slo_evaluations_total").value >= 2
+    rows = gw.slo_report()
+    breached = [r for r in rows if r["breached"]]
+    assert breached and breached[0]["metric"] == "p95_latency_s"
+    assert breached[0]["observed"] > breached[0]["target"]
+    assert breached[0]["breaches_total"] >= 1
+    # the generous fallback-rate target did NOT breach
+    ok = [r for r in rows if r["metric"] == "max_fallback_rate"]
+    assert ok and not ok[0]["breached"]
+    summary = s.slo.summary()
+    assert summary["enabled"] and summary["recent_breaches"]
+    s.close()
+    events = list(replay(str(tmp_path / "events.jsonl")))
+    assert any(e["ev"] == "slo_breach"
+               and e["metric"] == "p95_latency_s" for e in events)
+
+
+def test_slo_targets_require_telemetry(catalog):
+    with pytest.raises(ValueError, match="telemetry"):
+        Session(catalog, seed=5, config=SessionConfig(
+            slo_targets=(SloTarget(p95_latency_s=1.0),)))
+
+
+def test_slo_per_template_rule_matches_only_its_template(catalog, tmp_path):
+    cfg = _telemetry_cfg(tmp_path)
+    s = Session(catalog, seed=5, config=cfg)
+    other = "SELECT COUNT(*) AS n FROM lineitem"
+    key = s.template_key(HERD_SQL)
+    s.slo.set_target(template=key, p95_latency_s=1e-9)
+    s.submit(HERD_SQL)
+    s.submit(other)
+    s.drain()
+    rows = s.slo.report()
+    assert all(r["template"] == key for r in rows)
+    assert any(r["breached"] for r in rows)
+    s.close()
+
+
+def test_flight_recorder_event_schema_and_replay(catalog, tmp_path):
+    path = tmp_path / "events.jsonl"
+    cfg = _telemetry_cfg(tmp_path)
+    s = Session(catalog, seed=5, config=cfg)
+    s.submit(HERD_SQL)
+    s.submit("SELECT COUNT(*) AS n FROM lineitem")  # exact: no pilot
+    s.drain()
+    s.close()
+    events = list(replay(str(path)))
+    kinds = [e["ev"] for e in events]
+    assert kinds.count("submit") == 2
+    assert kinds.count("deliver") == 2
+    assert "pilot" in kinds and "rate_solve" in kinds and "final" in kinds
+    # seq is monotone, every record stamped
+    seqs = [e["seq"] for e in events]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert all(e["t"] > 0 for e in events)
+    deliver = [e for e in events if e["ev"] == "deliver"
+               and e["template"] == s.template_key(HERD_SQL)]
+    assert deliver
+    d = deliver[0]
+    assert d["latency_s"] > 0 and d["scanned_bytes"] > 0
+    assert d["fallback"] is False and d["cached"] is False
+    # offline rebuild reproduces the live store's per-template counters
+    live = s.timeseries
+    rebuilt = rebuild_timeseries(replay(str(path)))
+    assert set(rebuilt.keys()) == set(live.keys())
+    for key in live.keys():
+        a, b = live.series(key), rebuilt.series(key)
+        assert (a.deliveries, a.cached, a.shared, a.fused, a.fallbacks,
+                a.failures) == (b.deliveries, b.cached, b.shared, b.fused,
+                                b.fallbacks, b.failures)
+        assert b.latency_s.values() == pytest.approx(
+            a.latency_s.values(), abs=1e-6)
+
+
+def test_flight_recorder_unwritable_target_never_raises(catalog):
+    cfg = SessionConfig(
+        async_workers=0, share_pilots=False, result_cache_size=0,
+        flight_recorder="/nonexistent-dir-for-pilotdb-tests/events.jsonl")
+    plain = Session(catalog, seed=7, config=SERIAL_CFG).sql(HERD_SQL)
+    s = Session(catalog, seed=7, config=cfg)
+    h = s.sql(HERD_SQL)  # the recorder drops, the query answers
+    assert h.status == "done"
+    _assert_bitwise(h.answer, plain.answer)
+    assert s.recorder.stats()["dropped"] > 0
+    assert s.recorder.stats()["emitted"] == 0
+    s.close()  # close() with a never-opened file is a no-op
+
+
+def test_flight_recorder_rotation_mid_drain(catalog, tmp_path):
+    path = tmp_path / "tiny.jsonl"
+    cfg = _telemetry_cfg(None, flight_recorder=str(path),
+                         flight_recorder_max_bytes=1024,  # floor
+                         flight_recorder_max_files=2)
+    plain = Session(catalog, seed=13, config=NOCACHE_CFG)
+    ph = [plain.submit(TEMPLATE_SQL.format(c)) for c in (18, 24, 30, 36)]
+    plain.drain()
+    s = Session(catalog, seed=13, config=cfg)
+    th = [s.submit(TEMPLATE_SQL.format(c)) for c in (18, 24, 30, 36)]
+    s.drain()
+    for a, b in zip(ph, th):
+        _assert_bitwise(a.answer, b.answer)
+    stats = s.recorder.stats()
+    assert stats["rotations"] >= 1 and stats["dropped"] == 0
+    s.close()
+    # the log's footprint is bounded; surviving records still replay and
+    # the LIVE file's terminal events are intact
+    assert path.exists() and (tmp_path / "tiny.jsonl.1").exists()
+    events = list(replay(str(path)))
+    assert events and all("ev" in e for e in events)
+    plain.close()
+
+
+def test_flight_recorder_mid_group_failure_logs_terminal_event(
+        catalog, tmp_path, monkeypatch):
+    """A mid-group member failure still logs its fail event; siblings'
+    answers and deliver events are unaffected, nothing raises."""
+    path = tmp_path / "events.jsonl"
+    base = ("SELECT SUM(l_extendedprice) AS rev FROM lineitem "
+            "WHERE l_shipdate < 2000 ")
+    sqls = [base + f"ERROR {e}% CONFIDENCE 95%" for e in (8, 7, 6)]
+    cfg = _telemetry_cfg(tmp_path)
+    s = Session(catalog, seed=5, config=cfg)
+    real = PilotDB.prepare_final
+
+    def flaky(self, q, spec, outcome, seed, shared=False):
+        if abs(spec.error - 0.07) < 1e-12:
+            raise RuntimeError("worker exploded mid-group")
+        return real(self, q, spec, outcome, seed, shared=shared)
+
+    monkeypatch.setattr(PilotDB, "prepare_final", flaky)
+    handles = [s.submit(x) for x in sqls]
+    s.drain()
+    assert [h.status for h in handles] == ["done", "failed", "done"]
+    key = s.template_key(sqls[0])
+    series = s.timeseries.series(key)
+    assert series.deliveries == 3 and series.failures == 1
+    s.close()
+    events = list(replay(str(path)))
+    fails = [e for e in events if e["ev"] == "fail"]
+    assert len(fails) == 1
+    assert fails[0]["qid"] == handles[1].query_id
+    assert "worker exploded" in fails[0]["error"]
+    assert sum(1 for e in events if e["ev"] == "deliver") == 2
+
+
+def test_trace_sampling_deterministic_and_content_derived(catalog):
+    cuts = list(range(10, 40, 3))
+    cfg = SessionConfig(async_workers=0, share_pilots=False,
+                        result_cache_size=0, trace_sample=0.5)
+
+    def sampled_set(seed):
+        s = Session(catalog, seed=seed, config=cfg)
+        out = {}
+        for c in cuts:
+            h = s.sql(TEMPLATE_SQL.format(c))
+            out[c] = h._trace_sampled
+            # sampling implies a trace (tracing flag is off); unsampled
+            # queries carry none — today's path byte for byte
+            assert (h._trace is not None) == h._trace_sampled
+        s.close()
+        return out
+
+    first = sampled_set(23)
+    again = sampled_set(23)
+    assert first == again  # equal seeds sample the IDENTICAL query set
+    assert any(first.values()) and not all(first.values())  # p=0.5 mixes
+    other = sampled_set(24)
+    assert other != first  # the decision hashes the session seed too
+
+
+def test_trace_sample_bounds_and_edges(catalog):
+    with pytest.raises(ValueError, match="trace_sample"):
+        Session(catalog, seed=3, config=SessionConfig(trace_sample=1.5))
+    s0 = Session(catalog, seed=3, config=SessionConfig(
+        async_workers=0, share_pilots=False, result_cache_size=0,
+        trace_sample=0.0))
+    assert s0.sql(HERD_SQL)._trace is None
+    s1 = Session(catalog, seed=3, config=SessionConfig(
+        async_workers=0, share_pilots=False, result_cache_size=0,
+        trace_sample=1.0))
+    h = s1.sql(HERD_SQL)
+    assert h._trace_sampled and h._trace is not None
+    # the sampled span tree landed in the session's recent-traces ring
+    assert len(s1.recent_traces) == 1
+    assert s1.recent_traces[0]["query_id"] == h.query_id
+    s0.close()
+    s1.close()
+
+
+def test_sampled_traces_land_in_flight_recorder(catalog, tmp_path):
+    path = tmp_path / "events.jsonl"
+    cfg = SessionConfig(async_workers=0, share_pilots=False,
+                        result_cache_size=0, trace_sample=1.0,
+                        flight_recorder=str(path))
+    s = Session(catalog, seed=3, config=cfg)
+    h = s.sql(HERD_SQL)
+    s.close()
+    events = list(replay(str(path)))
+    traces = [e for e in events if e["ev"] == "trace"]
+    assert len(traces) == 1
+    tree = traces[0]["trace"]
+    assert tree["query_id"] == h.query_id
+    assert tree["root"]["name"] == "query"
+    subs = [e for e in events if e["ev"] == "submit"]
+    assert subs and subs[0]["sampled"] is True
+
+
+def test_audit_feeds_timeseries_and_recorder(catalog, tmp_path):
+    path = tmp_path / "events.jsonl"
+    cfg = SessionConfig(async_workers=0, share_pilots=False,
+                        result_cache_size=0, telemetry=True, audit=True,
+                        flight_recorder=str(path))
+    s = Session(catalog, seed=7, config=cfg)
+    h = s.sql(HERD_SQL)
+    rec = h.audit_record
+    assert rec is not None and rec.skipped is None
+    key = s.template_key(HERD_SQL)
+    series = s.timeseries.series(key)
+    assert series.audited == 1
+    assert series.error_ratio.last() == pytest.approx(rec.error_ratio)
+    assert series.audit_violations == (0 if rec.passed else 1)
+    s.close()
+    audits = [e for e in list(replay(str(path))) if e["ev"] == "audit"]
+    assert len(audits) == 1
+    assert audits[0]["passed"] == rec.passed
+    assert audits[0]["ratio"] == pytest.approx(rec.error_ratio, abs=1e-6)
+
+
+def test_fused_provenance_in_explain_and_timeseries(catalog):
+    """Satellite: audit-mode + fused_taqa interplay — explain() reports the
+    fused span, provenance gains +fused, the time-series counts the fused
+    delivery, and the audit still passes on the fused answer."""
+    cfg = SessionConfig(async_workers=0, result_cache_size=0,
+                        telemetry=True, audit=True, tracing=True,
+                        fused_taqa=True)
+    s = Session(catalog, seed=7, config=cfg)
+    h = s.submit(HERD_SQL)
+    s.drain()
+    assert h.status == "done"
+    fused_spans = h._trace.find("fused")
+    text = h.explain()
+    if fused_spans and fused_spans[0].attrs.get("engaged"):
+        assert "+fused" in provenance_of(h)
+        assert "fused: engaged" in text
+        key = s.template_key(HERD_SQL)
+        assert s.timeseries.series(key).fused == 1
+    elif fused_spans:
+        assert "fused: attempted" in text
+    rec = h.audit_record
+    assert rec is not None and rec.passed
+    s.close()
+
+
+def test_dashboard_renders_self_contained_html(catalog, tmp_path):
+    from repro.serve import render_dashboard, write_dashboard
+    cfg = _telemetry_cfg(tmp_path, trace_sample=1.0,
+                         slo_targets=(SloTarget(p95_latency_s=1e-9),))
+    s = Session(catalog, seed=5, config=cfg)
+    s.submit(HERD_SQL)
+    s.submit(HERD_SQL)
+    s.drain()
+    html_doc = render_dashboard(s, title="test run")
+    assert html_doc.startswith("<!doctype html>")
+    assert "test run" in html_doc
+    key = s.template_key(HERD_SQL)
+    assert key in html_doc                      # template table row
+    assert "BREACHED" in html_doc               # the impossible SLO
+    assert "svg" in html_doc                    # sparkline present
+    assert "pilotdb_slo_breaches_total" in html_doc  # registry text
+    assert "http://" not in html_doc and "https://" not in html_doc
+    out = write_dashboard(str(tmp_path / "dash.html"), s)
+    assert out is not None
+    assert (tmp_path / "dash.html").read_text(
+        encoding="utf-8").startswith("<!doctype html>")
+    # write failures degrade to None, never raise
+    assert write_dashboard("/nonexistent-dir-for-pilotdb-tests/d.html",
+                           s) is None
+    # a telemetry-off session still renders (empty-state sections)
+    plain = Session(catalog, seed=5)
+    doc = render_dashboard(plain)
+    assert "Telemetry is off" in doc
+    plain.close()
+    s.close()

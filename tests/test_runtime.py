@@ -504,3 +504,29 @@ def test_runtime_in_flight_tracks_dispatch(catalog):
 
 def test_backpressure_error_is_exported():
     assert issubclass(BackpressureError, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# Streaming-latency registry histograms (continuous telemetry satellite)
+# ---------------------------------------------------------------------------
+
+def test_drain_streaming_latency_lands_in_registry_histograms(catalog):
+    """A drain with streaming handles observes DrainStats'
+    time_to_first_frame_s / time_to_final_s into the session registry; a
+    drain with no streaming handles observes neither (zeros would poison
+    the quantiles)."""
+    session = Session(catalog, seed=11, config=NOCACHE_CFG)
+    session.submit(HERD_SQL)  # plain handle: no frames
+    session.drain()
+    ttff = session.metrics.histogram("pilotdb_time_to_first_frame_seconds")
+    ttf = session.metrics.histogram("pilotdb_time_to_final_seconds")
+    assert ttff.count == 0 and ttf.count == 0
+
+    session.submit(HERD_SQL, stream=True)
+    session.drain()
+    stats = session.scheduler.last_drain
+    assert stats.frames_emitted > 0
+    assert ttff.count == 1 and ttf.count == 1
+    assert ttff.max == pytest.approx(stats.time_to_first_frame_s)
+    assert ttf.max == pytest.approx(stats.time_to_final_s)
+    session.close()

@@ -222,7 +222,11 @@ def test_gateway_stats_payload_one_stop(aqp_session):
     # the payload's top-level sections are a pinned contract too
     assert set(payload) == {"gateway", "compile_cache", "result_cache",
                             "shard_scanned_bytes", "staged", "runtime",
-                            "audit"}
+                            "audit", "timeseries", "slo"}
+    # telemetry off: the sections are present with zero state
+    assert payload["timeseries"]["enabled"] is False
+    assert payload["timeseries"]["templates"] == {}
+    assert payload["slo"]["enabled"] is False
     # streaming counters ride the gateway section
     assert {"streams", "frames_pushed",
             "frames_dropped"} <= set(payload["gateway"])
@@ -250,6 +254,10 @@ _PAYLOAD_SCHEMA = {
                 "in_flight", "groups_total", "pilot_fanouts",
                 "pilot_fanout_wall_s", "pilot_fanout_serial_s"},
     "audit": {"runs", "violations", "errors", "max_error_ratio"},
+    "timeseries": {"enabled", "window", "drains", "ttff_s", "ttf_s",
+                   "templates"},
+    "slo": {"enabled", "targets", "breaches_total", "evaluations_total",
+            "recent_breaches"},
 }
 
 
